@@ -1,0 +1,84 @@
+"""Paper-figure reproductions (one function per figure).
+
+Fig. 4: s(θ)=θ^0.5      — SmartFill ≡ heSRPT (optimal on its home turf)
+Fig. 5: s(θ)=10θ^0.8    — same, scaled family
+Fig. 6: s(θ)=log(1+θ)   — SmartFill beats approximation-based heSRPT
+Fig. 7: the 0.79·θ^0.48 fit heSRPT uses for Fig. 6
+Fig. 8: s(θ)=√(4+θ)−2   — SmartFill beats heSRPT (tighter fit → smaller gap)
+Fig. 9: the 0.26·θ^0.82 fit heSRPT uses for Fig. 8
+
+Benchmark setting = paper §6: B = 10, x_i = M−i+1, w_i = 1/x_i (mean
+slowdown), M ∈ {10, …, 100}.  The heSRPT baseline re-plans at true
+completion events (the strong reading of "apply heSRPT with an
+approximate s"); the open-loop reading is reported alongside as a
+bracket — see EXPERIMENTS.md §Repro for the discussion.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (fit_power, hesrpt_policy, log_speedup, power,
+                        shifted_power, simulate_policy, smartfill)
+from repro.core.hesrpt import hesrpt_open_loop
+
+B = 10.0
+MS = (10, 20, 30, 40, 50, 60, 70, 80, 90, 100)
+
+
+def _slowdown_instance(M):
+    x = np.arange(M, 0, -1.0)
+    return x, 1.0 / x
+
+
+def _sweep(sp, p_fit, a_fit, ms=MS, open_loop=False):
+    rows = []
+    for M in ms:
+        x, w = _slowdown_instance(M)
+        sf = smartfill(sp, x, w, B=B)
+        he = simulate_policy(sp, x, w, hesrpt_policy(p_fit, B))
+        row = {"M": M, "smartfill_J": sf.J, "hesrpt_J": he.J,
+               "gap_pct": 100 * (he.J - sf.J) / he.J}
+        if open_loop:
+            _, Jol = hesrpt_open_loop(sp, x, w, p_fit, a_fit, B)
+            row["hesrpt_openloop_J"] = Jol
+            row["gap_openloop_pct"] = 100 * (Jol - sf.J) / Jol
+        rows.append(row)
+    return rows
+
+
+def fig4(ms=MS):
+    """s=θ^0.5: SmartFill must equal heSRPT (both optimal)."""
+    return _sweep(power(1.0, 0.5, B), 0.5, 1.0, ms)
+
+
+def fig5(ms=MS):
+    """s=10θ^0.8."""
+    return _sweep(power(10.0, 0.8, B), 0.8, 10.0, ms)
+
+
+def fig6(ms=MS):
+    """s=log(1+θ) vs heSRPT with the paper's 0.79θ^0.48 fit."""
+    return _sweep(log_speedup(1.0, 1.0, B), 0.48, 0.79, ms, open_loop=True)
+
+
+def fig7():
+    """Reproduce the power-law fit of log(1+θ)."""
+    a, p = fit_power(lambda t: np.log1p(t), B)
+    return [{"target": "log(1+th)", "a_fit": a, "p_fit": p,
+             "paper_a": 0.79, "paper_p": 0.48}]
+
+
+def fig8(ms=MS):
+    """s=√(4+θ)−2 vs heSRPT with the paper's 0.26θ^0.82 fit."""
+    return _sweep(shifted_power(1.0, 4.0, 0.5, B), 0.82, 0.26, ms,
+                  open_loop=True)
+
+
+def fig9():
+    a, p = fit_power(lambda t: np.sqrt(4 + t) - 2, B)
+    return [{"target": "sqrt(4+th)-2", "a_fit": a, "p_fit": p,
+             "paper_a": 0.26, "paper_p": 0.82}]
+
+
+ALL = {"fig4": fig4, "fig5": fig5, "fig6": fig6, "fig7": fig7,
+       "fig8": fig8, "fig9": fig9}

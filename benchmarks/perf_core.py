@@ -1,0 +1,59 @@
+"""Scheduler-core micro-benchmarks: µs/call for GWF and SmartFill.
+
+These are the latencies a cluster controller pays per decision — the
+numbers behind the "low complexity" claim of the paper's abstract.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import log_speedup, shifted_power, smartfill
+from repro.core.gwf import solve_cap
+from repro.kernels.gwf_waterfill.ref import gwf_waterfill_ref
+
+B = 10.0
+
+
+def _time(fn, *args, reps=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def bench_gwf():
+    rows = []
+    sp = shifted_power(1.0, 4.0, 0.5, B)
+    for k in (8, 64, 512, 4096):
+        c = jnp.sort(jax.random.uniform(jax.random.PRNGKey(0), (k,),
+                                        jnp.float32, 0.01, 1.0))[::-1]
+        fn = jax.jit(lambda b, c: solve_cap(sp, b, c))
+        us = _time(fn, 5.0, c)
+        rows.append({"name": f"gwf_closed_form_k{k}", "us_per_call": us})
+        fn2 = jax.jit(lambda u, h0, b: gwf_waterfill_ref(u, h0, b))
+        us2 = _time(fn2, sp.bottle_width(c).astype(jnp.float32),
+                    sp.bottle_bottom(c).astype(jnp.float32), 5.0)
+        rows.append({"name": f"gwf_waterfill_ref_k{k}", "us_per_call": us2})
+    return rows
+
+
+def bench_smartfill():
+    rows = []
+    for M in (10, 50, 100):
+        x = np.arange(M, 0, -1.0)
+        w = 1.0 / x
+        for name, sp in (("regular", shifted_power(1.0, 4.0, 0.5, B)),
+                         ("log", log_speedup(1.0, 1.0, B))):
+            t0 = time.perf_counter()
+            smartfill(sp, x, w, B=B)
+            dt = (time.perf_counter() - t0) * 1e6
+            rows.append({"name": f"smartfill_{name}_M{M}",
+                         "us_per_call": dt})
+    return rows

@@ -1,0 +1,55 @@
+"""Roofline report: formats the dry-run JSONs into the §Roofline table.
+
+Reads dryrun_single_pod.json (the per-cell compute/memory/collective
+terms derived from the compiled HLO) and emits the markdown table plus
+per-cell one-line diagnoses used in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+DIAGNOSIS = {
+    "compute": "MXU-bound — push block shapes / overlap collectives",
+    "memory": "HBM-bound — fuse attention/scan traffic (Pallas kernels), "
+              "cut f32 round-trips",
+    "collective": "ICI-bound — reshard (less TP / more DP), compress or "
+                  "overlap collectives",
+}
+
+
+def load(path="dryrun_single_pod.json"):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [r for r in json.load(f) if r.get("ok")]
+
+
+def table(rows):
+    out = ["| arch | shape | compute_s | memory_s (fused) | collective_s | "
+           "bottleneck | useful% | temp GiB |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} ({r.get('memory_fused_s', 0):.3f}) | "
+            f"{r['collective_s']:.3f} | {r['bottleneck']} | "
+            f"{100*r['useful_flops_ratio']:.0f} | "
+            f"{r['temp_bytes_per_dev']/2**30:.1f} |")
+    return "\n".join(out)
+
+
+def summary_rows(rows):
+    out = []
+    for r in rows:
+        dom = r["bottleneck"]
+        frac = r["compute_s"] / max(r["compute_s"], r["memory_s"],
+                                    r["collective_s"])
+        out.append({
+            "name": f"roofline_{r['arch']}_{r['shape']}",
+            "us_per_call": r[f"{dom}_s"] * 1e6,
+            "derived": f"bottleneck={dom};roofline_frac={frac:.3f};"
+                       f"useful={r['useful_flops_ratio']:.2f};"
+                       f"diag={DIAGNOSIS[dom]}",
+        })
+    return out

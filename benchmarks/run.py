@@ -1,0 +1,65 @@
+"""Benchmark harness — one entry per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call doubles as the
+objective value J for figure rows; ``derived`` carries the comparison).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small M sweep for CI")
+    ap.add_argument("--skip", default="", help="comma-sep bench names")
+    args = ap.parse_args()
+    skip = set(args.skip.split(",")) if args.skip else set()
+
+    from . import figures, perf_core, cluster_sim, roofline_report
+
+    print("name,us_per_call,derived")
+    ms = (10, 40, 100) if args.quick else figures.MS
+
+    for name, fn in figures.ALL.items():
+        if name in skip:
+            continue
+        rows = fn(ms) if name not in ("fig7", "fig9") else fn()
+        for r in rows:
+            if "M" in r:
+                derived = (f"hesrpt_J={r['hesrpt_J']:.4f};"
+                           f"gap_pct={r['gap_pct']:.2f}")
+                if "gap_openloop_pct" in r:
+                    derived += f";gap_openloop_pct={r['gap_openloop_pct']:.2f}"
+                print(f"{name}_M{r['M']},{r['smartfill_J']:.6f},{derived}")
+            else:
+                print(f"{name},{r['a_fit']:.4f},"
+                      f"p_fit={r['p_fit']:.4f};paper=({r['paper_a']}"
+                      f"|{r['paper_p']})")
+        sys.stdout.flush()
+
+    if "perf" not in skip:
+        for r in perf_core.bench_gwf() + perf_core.bench_smartfill():
+            print(f"{r['name']},{r['us_per_call']:.1f},")
+            sys.stdout.flush()
+
+    if "cluster" not in skip:
+        for r in cluster_sim.bench_cluster():
+            print(f"{r['name']},{r['us_per_call']:.4f},{r['derived']}")
+        sys.stdout.flush()
+
+    if "roofline" not in skip:
+        rows = roofline_report.load()
+        for r in roofline_report.summary_rows(rows):
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: the paper in 40 lines.
+
+Schedules 8 parallel jobs on a divisible server (B = 10) under a concave
+speedup s(θ) = log(1+θ) — a *regular* function with s'(0) < ∞, i.e. the
+case heSRPT cannot handle optimally — and prints the SmartFill schedule,
+the CDR constants, and the comparison against approximation-based heSRPT.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.core import (cdr_violation, fit_power, hesrpt_policy, log_speedup,
+                        simulate_policy, smartfill)
+
+B = 10.0
+M = 8
+x = np.arange(M, 0, -1.0) * 2.0      # job sizes (non-increasing)
+w = 1.0 / x                           # mean-slowdown weights
+
+sp = log_speedup(1.0, 1.0, B)
+sched = smartfill(sp, x, w, B=B)
+
+print("=== SmartFill schedule (Θ[i,j] = rate of job i in phase j) ===")
+th = np.asarray(sched.theta)
+print(np.array_str(th, precision=2, suppress_small=True))
+print("\nphase durations:", np.array_str(np.asarray(sched.durations), precision=3))
+print("completion times:", np.array_str(np.asarray(sched.T), precision=3))
+print("CDR constants c:", np.array_str(np.asarray(sched.c), precision=4))
+print(f"\noptimal J = Σ wᵢTᵢ = {sched.J:.4f}"
+      f"   (Prop. 9 check: Σ aᵢxᵢ = {sched.J_linear:.4f})")
+
+parked = [(i + 1, j + 1) for j in range(M) for i in range(j + 1)
+          if th[i, j] == 0.0]
+print(f"parked (job, phase) pairs — the behavior heSRPT cannot express: "
+      f"{parked}")
+
+v = cdr_violation(sp, sched.theta)
+print(f"CDR rule violation: ratio={v['ratio']:.2e} park={v['park']:.2e}")
+
+a_fit, p_fit = fit_power(lambda t: np.log1p(t), B)
+res = simulate_policy(sp, x, w, hesrpt_policy(p_fit, B))
+print(f"\nheSRPT (fit {a_fit:.2f}·θ^{p_fit:.2f}) J = {res.J:.4f}"
+      f"  → SmartFill is {100 * (res.J - sched.J) / res.J:.1f}% better")

@@ -1,0 +1,57 @@
+"""Batched serving example: prefill a batch of prompts, decode N tokens.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma2-27b \
+        --batch 4 --prompt-len 64 --gen 32
+
+Uses the smoke-scale config of the chosen arch (full configs are
+exercised via the dry-run); demonstrates ring-buffer local attention,
+GQA KV caches and SSM-state decode on whichever family you pick.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    if cfg.moe:
+        cfg = cfg.replace(moe_impl="dense")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg=cfg, params=params,
+                      max_len=args.prompt_len + args.gen,
+                      temperature=args.temperature)
+
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(
+        2, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = rng.standard_normal(
+            (args.batch, cfg.n_patches, cfg.patch_dim)).astype(np.float32)
+    if cfg.encoder_decoder:
+        batch["frames"] = rng.standard_normal(
+            (args.batch, args.prompt_len, cfg.patch_dim)).astype(np.float32)
+
+    t0 = time.perf_counter()
+    out = eng.generate(batch, args.gen)
+    dt = time.perf_counter() - t0
+    print(f"arch={args.arch} generated {out.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
+    print("first sequence:", out[0][:16], "…")
+
+
+if __name__ == "__main__":
+    main()

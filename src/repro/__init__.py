@@ -1,0 +1,7 @@
+"""repro — SmartFill (Optimal Parallel Scheduling under Concave Speedup
+Functions) as a production multi-pod JAX framework.
+
+Subpackages: core (the paper), sched (cluster scheduler), models (10-arch
+LM stack), kernels (Pallas TPU), distributed (sharding policies), train,
+serve, data, configs, launch (mesh + dry-run + entry points).
+"""

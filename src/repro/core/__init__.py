@@ -1,0 +1,29 @@
+"""Core algorithms from the paper: speedup families, GWF, SmartFill,
+heSRPT baseline, CDR verification, and the event-driven simulator."""
+from .speedup import (  # noqa: F401
+    GenericSpeedup,
+    RegularSpeedup,
+    Speedup,
+    from_roofline,
+    log_speedup,
+    neg_power,
+    power,
+    saturating,
+    shifted_power,
+)
+from .gwf import solve_cap, solve_cap_generic, solve_cap_regular  # noqa: F401
+from .smartfill import (  # noqa: F401
+    SmartFillSchedule,
+    completion_times,
+    objective,
+    smartfill,
+    smartfill_allocations,
+)
+from .hesrpt import fit_power, hesrpt_allocations, hesrpt_policy  # noqa: F401
+from .cdr import cdr_violation, estimate_constants  # noqa: F401
+from .simulator import (  # noqa: F401
+    SimResult,
+    schedule_policy,
+    simulate_policy,
+    smartfill_sim_policy,
+)

@@ -1,0 +1,207 @@
+"""General Water-Filling (GWF) — Algorithm 1 of the paper.
+
+Solves the *Constrained Allocation Problem* (CAP): given a concave speedup
+function ``s``, a budget ``b`` and derivative-ratio constants
+``c_1 ≥ c_2 ≥ … ≥ c_k > 0``, find allocations ``θ_1 ≤ … ≤ θ_k`` with
+
+    Σ θ_i = b,
+    s'(θ_j)/s'(θ_i) = c_j/c_i          whenever θ_j ≥ θ_i > 0,      (9c)
+    s'(θ_j)/s'(0)  ≥ c_j/c_i          whenever θ_j > θ_i = 0.      (9d)
+
+Theorem 6: the solution exists and is unique; it is the water level ``h``
+of the Water-Filling Problem (WFP)  β(h) = Σ θ_i(h) = b.
+
+Two solver paths:
+
+``solve_cap_regular``
+    Closed form for the paper's *regular* class (Def. 1,
+    ``s'(θ) = A (w + σθ)^γ``): with auxiliary function ``g(h) = A (σh)^γ``
+    every bottle is a rectangle, ``θ_i(h) = u_i (h − h_i)^+`` with width
+    ``u_i = c_i^{1/γ}`` and bottom ``h_i = σ w / u_i`` (paper §4.5.1).
+    β is piecewise linear → exact solve by breakpoint search.
+
+``solve_cap_generic``
+    For arbitrary concave ``s``: fixed-iteration bisection on the *water
+    pressure* ``λ = g(h)`` (strictly decreasing in h, so β is decreasing
+    in λ), with the inner derivative inverse evaluated via the speedup's
+    own ``ds_inv``.  Fully vectorized; jit/vmap-compatible.
+
+Both paths accept an ``active`` mask so they can live inside fixed-shape
+``lax`` loops (SmartFill pads every CAP instance to M jobs).
+
+All functions are pure and dtype-polymorphic; run under
+``jax.config.update("jax_enable_x64", True)`` for reference precision.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .speedup import RegularSpeedup, Speedup
+
+__all__ = [
+    "solve_cap",
+    "solve_cap_regular",
+    "solve_cap_generic",
+    "cap_residual",
+]
+
+_BIG = 1e30
+
+
+def _masked(x, active, fill):
+    return jnp.where(active, x, fill)
+
+
+def solve_cap_regular(sp: RegularSpeedup, b, c, active=None):
+    """Closed-form CAP for regular speedup functions.
+
+    Args:
+      sp: RegularSpeedup with ``s'(θ) = A (w + σθ)^γ``.
+      b: scalar budget, ``0 ≤ b ≤ B``.
+      c: (k,) derivative-ratio constants, ``c_1 ≥ … ≥ c_k > 0``.
+      active: optional (k,) bool mask; inactive jobs get θ=0 and are
+        excluded from the budget.
+
+    Returns:
+      (k,) allocations θ with Σθ = b (exact up to fp).
+    """
+    c = jnp.asarray(c)
+    k = c.shape[0]
+    if active is None:
+        active = jnp.ones((k,), dtype=bool)
+    b = jnp.asarray(b, dtype=c.dtype)
+    b_safe = jnp.maximum(b, jnp.asarray(1e-300, c.dtype))
+
+    u = sp.bottle_width(c)            # u_i = c_i^{1/γ}
+    h0 = sp.bottle_bottom(c)          # h_i = σ·w/u_i
+    u = _masked(u, active, 0.0)
+    starts = _masked(h0, active, _BIG)
+    caps = _masked(h0 + b_safe / jnp.maximum(u, 1e-300), active, 2.0 * _BIG)
+
+    def beta(h):
+        vol = jnp.clip(u * (h - h0), 0.0, b_safe)
+        return jnp.sum(_masked(vol, active, 0.0))
+
+    bp = jnp.sort(jnp.concatenate([starts, caps]))
+    vals = jax.vmap(beta)(bp)                      # non-decreasing
+    idx = jnp.clip(jnp.searchsorted(vals, b_safe, side="left"), 1, 2 * k - 1)
+    h_lo = bp[idx - 1]
+    h_hi = bp[idx]
+    v_lo = vals[idx - 1]
+    in_seg = active & (h_lo >= starts - 1e-300) & (h_lo < caps)
+    slope = jnp.sum(jnp.where(in_seg, u, 0.0))
+    # If the crossing lands exactly on a breakpoint, fp noise can push the
+    # search into a zero-slope plateau (β constant between a bottle's cap
+    # and the next bottle's start).  There v_lo == b up to fp — take the
+    # plateau's left edge; otherwise interpolate, clamped to the segment.
+    h_interp = h_lo + (b_safe - v_lo) / jnp.where(slope > 0, slope, 1.0)
+    h = jnp.where(slope > 0, jnp.minimum(h_interp, h_hi), h_lo)
+    theta = jnp.clip(u * (h - h0), 0.0, b_safe)
+    theta = _masked(theta, active, 0.0)
+    return jnp.where(b > 0, theta, jnp.zeros_like(theta))
+
+
+def solve_cap_generic(sp: Speedup, b, c, active=None, iters: int = 96):
+    """CAP for arbitrary concave speedups — bisection on water pressure λ.
+
+    θ_i(λ) = clip(s'⁻¹(c_i λ), 0, b); β(λ) = Σ θ_i(λ) is strictly
+    decreasing, so a scalar bisection on λ finds β(λ) = b.  The bracket is
+    [s'(b)/max c, s'(0⁺)/min c] (paper (10b)/(10c)); when s'(0) = ∞ the
+    upper end uses s'(ε) with ε = b/(8k), which already forces β < b.
+    """
+    c = jnp.asarray(c)
+    k = c.shape[0]
+    if active is None:
+        active = jnp.ones((k,), dtype=bool)
+    b = jnp.asarray(b, dtype=c.dtype)
+    b_safe = jnp.maximum(b, jnp.asarray(1e-300, c.dtype))
+
+    c_hi = jnp.max(_masked(c, active, -jnp.inf))
+    c_lo = jnp.min(_masked(c, active, jnp.inf))
+
+    ds_b = sp.ds(b_safe)
+    ds0 = sp.ds0()
+    eps = b_safe / (8.0 * k)
+    ds_top = jnp.where(jnp.isfinite(ds0), ds0, sp.ds(eps))
+
+    lam_lo = ds_b / c_hi                      # β(lam_lo) ≥ b
+    lam_hi = ds_top / c_lo * (1.0 + 1e-9)     # β(lam_hi) ≤ k·ε < b (or 0)
+    lam_hi = jnp.maximum(lam_hi, lam_lo * (1.0 + 1e-9))
+
+    def theta_of(lam):
+        y = c * lam
+        th = jnp.clip(sp.ds_inv(y), 0.0, b_safe)
+        # park jobs whose marginal value at zero is already below the level
+        th = jnp.where(y >= ds0, 0.0, th)
+        return _masked(th, active, 0.0)
+
+    def body(_, carry):
+        lo, hi = carry
+        # bisect in log-space for relative precision across wide λ ranges
+        mid = jnp.exp(0.5 * (jnp.log(lo) + jnp.log(hi)))
+        beta = jnp.sum(theta_of(mid))
+        # β decreasing in λ: β > b ⇒ λ* right of mid
+        lo = jnp.where(beta > b_safe, mid, lo)
+        hi = jnp.where(beta > b_safe, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lam_lo, lam_hi))
+    lam = jnp.exp(0.5 * (jnp.log(lo) + jnp.log(hi)))
+    theta = theta_of(lam)
+    # exact budget: rescale the fp residual onto the positive allocations
+    tot = jnp.sum(theta)
+    theta = jnp.where(tot > 0, theta * (b_safe / tot), theta)
+    theta = jnp.minimum(theta, b_safe)
+    return jnp.where(b > 0, theta, jnp.zeros_like(theta))
+
+
+def solve_cap(sp: Speedup, b, c, active=None, iters: int = 96):
+    """Dispatch: closed form for RegularSpeedup, bisection otherwise."""
+    if isinstance(sp, RegularSpeedup):
+        return solve_cap_regular(sp, b, c, active)
+    return solve_cap_generic(sp, b, c, active, iters=iters)
+
+
+def cap_residual(sp: Speedup, b, c, theta, active=None, tol: float = 1e-6):
+    """Max violation of the CAP constraints (9a)–(9d) by ``theta``.
+
+    Returns a dict of violation magnitudes; used by tests and the CDR
+    verifier.  Zero (≤ tol) everywhere ⟺ θ solves CAP.
+    """
+    c = jnp.asarray(c)
+    theta = jnp.asarray(theta)
+    k = c.shape[0]
+    if active is None:
+        active = jnp.ones((k,), dtype=bool)
+    thm = jnp.where(active, theta, 0.0)
+
+    budget = jnp.abs(jnp.sum(thm) - b)
+
+    # (9b) ordering among active jobs (c sorted non-increasing)
+    order = jnp.max(jnp.where(active[:-1] & active[1:],
+                              thm[:-1] - thm[1:], -jnp.inf))
+    order = jnp.maximum(order, 0.0)
+
+    iu = jnp.arange(k)
+    upper = iu[:, None] < iu[None, :]           # pairs i < j only
+    ds = sp.ds(thm)
+    ds0 = sp.ds0()
+    # (9c): s'(θ_j)·c_i − s'(θ_i)·c_j = 0 for active pairs with θ_i, θ_j > 0
+    pos = active & (thm > tol)
+    num = ds[None, :] * c[:, None] - ds[:, None] * c[None, :]
+    scale = jnp.maximum(ds[None, :] * c[:, None], 1e-30)
+    ratio_viol = jnp.where(upper & pos[:, None] & pos[None, :],
+                           jnp.abs(num) / scale, 0.0)
+    # (9d): for i < j with θ_j > θ_i = 0: s'(θ_j)/s'(0) ≥ c_j/c_i
+    zero = active & (thm <= tol)
+    ineq = (c[None, :] / c[:, None]) - (ds[None, :] / ds0)
+    ineq_viol = jnp.where(upper & zero[:, None] & pos[None, :]
+                          & jnp.isfinite(ds0),
+                          jnp.maximum(ineq, 0.0), 0.0)
+    return {
+        "budget": budget,
+        "order": order,
+        "ratio": jnp.max(ratio_viol),
+        "park": jnp.max(ineq_viol),
+    }

@@ -1,0 +1,201 @@
+"""SmartFill — Algorithm 2 of the paper: the complete solution to OPT.
+
+OPT: minimize J = Σ w_i T_i over allocations θ_i(t), Σθ ≤ B, for M jobs
+with sizes x_1 ≥ … ≥ x_M, weights w_1 ≤ … ≤ w_M, and a common concave
+speedup function s(θ).
+
+Structure (Props 7/8): allocations are piecewise-constant between
+completions and jobs complete in SJF order M, M−1, …, 1, so the policy is
+an upper-triangular matrix Θ where Θ[i, j] is the rate of job i+1 during
+*phase* j+1 (the interval [T*_{j+2}, T*_{j+1}), with jobs 1..j+1 active).
+Column M−1 is the first interval in time ([0, T*_M)); column 0 the last.
+
+SmartFill builds Θ column by column from the last-completed job (job 1)
+outward, carrying the CDR constants c_k (Cor. 2.1) and the value-function
+coefficients a_k of Prop. 9 (J* = Σ a_i x_i):
+
+  iteration 1:   θ¹₁ = B, c₁ = 1, a₁ = w₁ / s(B)
+  iteration k+1: μ* = argmin_μ F(μ),
+                 F(μ) = (Σ_{i≤k+1} w_i − Σ_{i≤k} a_i s(CAP_i(B−μ, c))) / s(μ)
+                 θ^{k+1}_{k+1} = μ*;  θ^{k+1}_i = CAP_i(B−μ*, c)   (27)
+                 c_{k+1} = c_k · s'(μ*) / s'(θ^{k+1}_k)            (28)
+                 a_{k+1} = F(μ*)                                   (29)
+
+NOTE on (26): the paper prints arg max_μ, but a_{k+1} is the marginal
+*cost* of one unit of x_{k+1} (Prop. 9 proof sketch: J = Σ a_i x_i +
+x_{k+1} F(μ)), so the correct operation is arg **min** (F(μ) → +∞ as
+μ → 0⁺; no maximum exists).  Validated: with s = aθ^p SmartFill
+reproduces heSRPT exactly (paper Figs. 4–5) and Figs. 6/8 gaps match.
+
+The 1-D minimization uses a vectorized coarse grid (log+linear mixed, to
+resolve minima near μ→0) followed by iterative grid-zoom refinement —
+derivative-free, robust to the kinks F inherits from CAP's parking
+breakpoints.  All inner evaluations are a single jitted vmap over the
+closed-form (regular) or bisection (generic) CAP solver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .gwf import solve_cap
+from .speedup import Speedup
+
+__all__ = ["SmartFillSchedule", "smartfill", "completion_times", "objective"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SmartFillSchedule:
+    """Output of SmartFill.
+
+    theta[i, j]: rate of job i during phase j (phase j has jobs 0..j
+      active; phase M−1 is earliest in time).  Upper-triangular.
+    c: (M,) CDR constants (Cor. 2.1), c[0] = 1, non-increasing.
+    a: (M,) value-function coefficients (Prop. 9), non-decreasing.
+    durations: (M,) phase lengths; durations[j] = |phase j|.
+    T: (M,) completion times, T[0] > T[1] > … > T[M−1] (SJF order).
+    J: optimal objective Σ w_i T_i.
+    J_linear: Σ a_i x_i — must equal J (Prop. 9); kept for validation.
+    """
+
+    theta: jnp.ndarray
+    c: jnp.ndarray
+    a: jnp.ndarray
+    durations: jnp.ndarray
+    T: jnp.ndarray
+    J: float
+    J_linear: float
+
+
+@jax.jit
+def _f_grid(sp, mus, c, a, k, W, B):
+    """Vectorized F(μ) over a grid. c/a are padded to M; first k entries live.
+
+    ``k`` is a traced scalar so one compilation serves every SmartFill
+    iteration (and every run with the same M / grid size).
+    """
+    M = c.shape[0]
+    active = jnp.arange(M) < k
+
+    def F(mu):
+        th = solve_cap(sp, B - mu, c, active)
+        served = jnp.where(active, a * sp.s(th), 0.0)
+        return (W - jnp.sum(served)) / sp.s(mu)
+
+    return jax.vmap(F)(mus)
+
+
+def _minimize_f(sp, c, a, k, W, B, coarse=512, zoom_rounds=4, zoom_pts=64):
+    """argmin_μ F(μ) on (0, B] by mixed coarse grid + grid-zoom."""
+    dtype = c.dtype
+    lo = jnp.asarray(B, dtype) * 1e-9
+    g1 = jnp.geomspace(lo, B, coarse // 2, dtype=dtype)
+    g2 = jnp.linspace(B / (coarse // 2), B, coarse // 2, dtype=dtype)
+    mus = jnp.sort(jnp.concatenate([g1, g2]))
+    vals = _f_grid(sp, mus, c, a, k, W, B)
+    i = int(jnp.nanargmin(vals))
+    mu_lo = mus[max(i - 1, 0)]
+    mu_hi = mus[min(i + 1, mus.shape[0] - 1)]
+    for _ in range(zoom_rounds):
+        mus = jnp.linspace(mu_lo, mu_hi, zoom_pts, dtype=dtype)
+        vals = _f_grid(sp, mus, c, a, k, W, B)
+        i = int(jnp.nanargmin(vals))
+        mu_lo = mus[max(i - 1, 0)]
+        mu_hi = mus[min(i + 1, zoom_pts - 1)]
+    return mus[i], vals[i]
+
+
+def completion_times(sp: Speedup, x, theta):
+    """Back-substitute phase durations from Θ and sizes; return (d, T).
+
+    x[j] = Σ_{m≥j} s(Θ[j,m])·d[m]  ⇒  solved from phase M−1 (earliest)
+    down to phase 0.
+    """
+    x = jnp.asarray(x)
+    M = x.shape[0]
+    rate = sp.s(theta)  # (M, M)
+    # x = R d with R upper-triangular (R[j, m] = s(Θ[j, m]), m ≥ j); the
+    # diagonal is positive because each job runs in its own phase.
+    R = jnp.triu(rate)
+    d = jax.scipy.linalg.solve_triangular(R, x, lower=False)
+    d = jnp.maximum(d, 0.0)
+    # T[j] = Σ_{m ≥ j} d[m]  (phase M−1 is first in time)
+    T = jnp.cumsum(d[::-1])[::-1]
+    return d, T
+
+
+def objective(w, T):
+    return jnp.sum(jnp.asarray(w) * T)
+
+
+def smartfill(
+    sp: Speedup,
+    x,
+    w,
+    B: float | None = None,
+    coarse: int = 512,
+    zoom_rounds: int = 4,
+    validate: bool = True,
+) -> SmartFillSchedule:
+    """Run SmartFill (Algorithm 2).
+
+    Args:
+      sp: speedup function (RegularSpeedup → closed-form CAP; otherwise
+        the generic bisection path).
+      x: (M,) job sizes, non-increasing.
+      w: (M,) weights, non-decreasing.
+      B: server bandwidth; defaults to sp.B.
+
+    Returns a SmartFillSchedule.
+    """
+    x = jnp.asarray(x, dtype=jnp.result_type(float))
+    w = jnp.asarray(w, dtype=x.dtype)
+    M = int(x.shape[0])
+    B = float(sp.B if B is None else B)
+    if validate:
+        xs, ws = np.asarray(x), np.asarray(w)
+        if np.any(np.diff(xs) > 1e-12 * max(1.0, float(xs[0]))):
+            raise ValueError("sizes must be non-increasing (x_1 ≥ … ≥ x_M)")
+        if np.any(np.diff(ws) < -1e-12 * max(1.0, float(np.max(ws)))):
+            raise ValueError("weights must be non-decreasing (w_1 ≤ … ≤ w_M)")
+
+    c = jnp.zeros((M,), x.dtype).at[0].set(1.0)
+    a = jnp.zeros((M,), x.dtype).at[0].set(w[0] / sp.s(jnp.asarray(B, x.dtype)))
+    theta = jnp.zeros((M, M), x.dtype).at[0, 0].set(B)
+
+    for k in range(1, M):
+        W = jnp.sum(w[: k + 1])
+        mu, a_next = _minimize_f(sp, c, a, k, W, B, coarse, zoom_rounds)
+        active = jnp.arange(M) < k
+        th_rest = solve_cap(sp, B - mu, c, active)  # (M,) padded
+        theta = theta.at[:, k].set(jnp.where(active, th_rest, 0.0))
+        theta = theta.at[k, k].set(mu)
+        # (28): c_{k+1} = c_k · s'(μ) / s'(θ_k^{k+1}).  θ_k may be parked
+        # (=0) — then s'(0) < ∞ is guaranteed for any parking speedup.
+        ds_prev = sp.ds(th_rest[k - 1])
+        c_next = c[k - 1] * sp.ds(mu) / ds_prev
+        c = c.at[k].set(jnp.maximum(c_next, 1e-300))
+        a = a.at[k].set(a_next)
+
+    d, T = completion_times(sp, x, theta)
+    J = objective(w, T)
+    J_lin = jnp.sum(a * x)
+    return SmartFillSchedule(
+        theta=theta, c=c, a=a, durations=d, T=T,
+        J=float(J), J_linear=float(J_lin),
+    )
+
+
+def smartfill_allocations(sp: Speedup, rem, w, B: float | None = None):
+    """Current-instant optimal allocations for remaining sizes ``rem``.
+
+    This is column M−1 of SmartFill run on the remaining workload — the
+    re-planning form used by policy-driven simulation and the cluster
+    scheduler.  rem must be sorted non-increasing with w non-decreasing.
+    """
+    sched = smartfill(sp, rem, w, B=B, validate=False)
+    return sched.theta[:, -1]

@@ -1,0 +1,269 @@
+"""Speedup-function abstractions for SmartFill scheduling.
+
+The paper assumes a speedup function ``s(θ)`` on ``[0, B]`` with
+
+  * ``s(0) = 0``,
+  * strictly increasing, continuous, differentiable,
+  * strictly concave, with continuous derivative ``s'``.
+
+Two concrete families are provided:
+
+``RegularSpeedup``
+    The paper's *regular* class (Definition 1): ``s'(θ) = α (θ + z)^γ``.
+    We use the slightly more explicit parameterization
+
+        ``s'(θ) = A · (w + σ θ)^γ``,   ``A > 0``, ``σ ∈ {+1, −1}``,
+
+    with ``w + σθ > 0`` on ``[0, B]`` and ``σ·γ < 0`` (so ``s'`` is strictly
+    decreasing).  This covers every row of the paper's Table 1:
+
+      power          s = a θ^p            (A=ap,  w=0,   σ=+1, γ=p−1)
+      shifted power  s = a(θ+z)^p − a z^p (A=ap,  w=z,   σ=+1, γ=p−1)
+      logarithmic    s = a ln(pθ+1)       (A=a,   w=1/p, σ=+1, γ=−1)
+      neg. power     s = a z^p − a(θ+z)^p (A=−ap, w=z,   σ=+1, γ=p−1), p<0
+      saturating     s = a z^p − a(z−θ)^p (A=ap,  w=z,   σ=−1, γ=p−1), p>1
+
+``GenericSpeedup``
+    Arbitrary concave ``s`` given as callables ``(s, ds)``; the derivative
+    inverse is computed with a fixed-iteration vectorized bisection (jit- and
+    vmap-compatible).
+
+All methods are pure functions of jnp arrays, so every speedup object can be
+closed over inside ``jax.jit`` / ``lax`` control flow.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Speedup",
+    "RegularSpeedup",
+    "GenericSpeedup",
+    "power",
+    "shifted_power",
+    "log_speedup",
+    "neg_power",
+    "saturating",
+    "from_roofline",
+]
+
+
+class Speedup:
+    """Common interface.  Subclasses implement s, ds and ds_inv."""
+
+    B: float  # domain upper bound (server bandwidth)
+
+    def s(self, theta):  # service rate
+        raise NotImplementedError
+
+    def ds(self, theta):  # derivative s'(θ)
+        raise NotImplementedError
+
+    def ds_inv(self, y):  # inverse of s' (s' is strictly decreasing)
+        raise NotImplementedError
+
+    def ds0(self):
+        """s'(0); may be +inf (e.g. pure power laws)."""
+        return self.ds(jnp.zeros(()))
+
+    # -- convenience ---------------------------------------------------
+    def check_concave(self, n: int = 1025, b: float | None = None) -> bool:
+        """Numerical sanity check of the paper's assumptions on [0, B]."""
+        b = self.B if b is None else b
+        th = jnp.linspace(0.0, b, n)
+        sv = self.s(th)
+        dv = self.ds(th)
+        ok = bool(jnp.all(dv > 0))  # strictly increasing
+        ok &= bool(jnp.all(jnp.diff(dv) <= 1e-9 * jnp.maximum(1.0, dv[:-1])))
+        ok &= bool(abs(float(self.s(jnp.zeros(())))) < 1e-12)
+        ok &= bool(jnp.all(jnp.diff(sv) > 0))
+        return ok
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class RegularSpeedup(Speedup):
+    """s'(θ) = A (w + σ θ)^γ  with  A>0, σ∈{±1}, σγ<0, w+σθ>0 on [0,B]."""
+
+    A: jnp.ndarray
+    w: jnp.ndarray
+    gamma: jnp.ndarray
+    sigma: int  # static: +1 or −1
+    B: float    # static: domain bound
+
+    def __post_init__(self):
+        if self.sigma not in (+1, -1):
+            raise ValueError("sigma must be ±1")
+
+    # pytree plumbing (A, w, gamma dynamic; sigma/B static)
+    def tree_flatten(self):
+        return (self.A, self.w, self.gamma), (self.sigma, self.B)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        A, w, gamma = children
+        sigma, B = aux
+        return cls(A=A, w=w, gamma=gamma, sigma=sigma, B=B)
+
+    # -- the three primitives -----------------------------------------
+    def _base(self, theta):
+        return self.w + self.sigma * theta
+
+    def ds(self, theta):
+        return self.A * self._base(theta) ** self.gamma
+
+    def s(self, theta):
+        g1 = self.gamma + 1.0
+        # γ == −1 (log family) needs the antiderivative's log branch.  The
+        # families never mix branches inside one object, so a lax.cond on a
+        # traced scalar is unnecessary; jnp.where keeps it jit-safe anyway.
+        log_branch = (self.A / self.sigma) * (
+            jnp.log(self._base(theta)) - jnp.log(self.w)
+        )
+        safe_g1 = jnp.where(jnp.abs(g1) < 1e-12, 1.0, g1)
+        pow_branch = (self.A / (self.sigma * safe_g1)) * (
+            self._base(theta) ** safe_g1 - self.w ** safe_g1
+        )
+        return jnp.where(jnp.abs(g1) < 1e-12, log_branch, pow_branch)
+
+    def ds_inv(self, y):
+        # y = A (w+σθ)^γ  ⇒  θ = σ((y/A)^{1/γ} − w)
+        return self.sigma * ((y / self.A) ** (1.0 / self.gamma) - self.w)
+
+    def ds0(self):
+        w = jnp.asarray(self.w, dtype=jnp.result_type(float))
+        if self.sigma == +1:
+            # γ<0: s'(0) = A·w^γ = +inf when w == 0.
+            return jnp.where(w > 0, self.A * jnp.maximum(w, 1e-300) ** self.gamma, jnp.inf)
+        return self.A * w ** self.gamma
+
+    # -- GWF rectangle-bottle geometry (paper §4.3/4.5.1) --------------
+    def bottle_width(self, c):
+        """u_i = c_i^{1/γ} (paper: auxiliary g(h)=A(σh)^γ ⇒ θ_i(h)=u_i(h−h_i)+)."""
+        return c ** (1.0 / self.gamma)
+
+    def bottle_bottom(self, c):
+        """h_i = σ·w / u_i."""
+        return self.sigma * self.w / self.bottle_width(c)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GenericSpeedup(Speedup):
+    """Arbitrary concave speedup from callables (s_fn, ds_fn).
+
+    ``ds_inv`` runs a fixed-iteration bisection on [0, B] (s' strictly
+    decreasing), fully vectorized — usable under jit/vmap.
+    """
+
+    s_fn: Callable = dataclasses.field(metadata=dict(static=True))
+    ds_fn: Callable = dataclasses.field(metadata=dict(static=True))
+    B: float = 1.0
+    inv_iters: int = 80
+
+    def tree_flatten(self):
+        return (), (self.s_fn, self.ds_fn, self.B, self.inv_iters)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        s_fn, ds_fn, B, inv_iters = aux
+        return cls(s_fn=s_fn, ds_fn=ds_fn, B=B, inv_iters=inv_iters)
+
+    def s(self, theta):
+        return self.s_fn(theta)
+
+    def ds(self, theta):
+        return self.ds_fn(theta)
+
+    def ds_inv(self, y):
+        y = jnp.asarray(y)
+        lo = jnp.zeros_like(y)
+        hi = jnp.full_like(y, self.B)
+
+        def body(_, carry):
+            lo, hi = carry
+            mid = 0.5 * (lo + hi)
+            v = self.ds_fn(mid)
+            # s' decreasing: v > y ⇒ solution right of mid.
+            lo = jnp.where(v > y, mid, lo)
+            hi = jnp.where(v > y, hi, mid)
+            return lo, hi
+
+        lo, hi = jax.lax.fori_loop(0, self.inv_iters, body, (lo, hi))
+        mid = 0.5 * (lo + hi)
+        # Clamp outside the representable range of s' on [0, B].
+        mid = jnp.where(y >= self.ds_fn(jnp.zeros_like(y)), 0.0, mid)
+        mid = jnp.where(y <= self.ds_fn(jnp.full_like(y, self.B)), self.B, mid)
+        return mid
+
+
+# ---------------------------------------------------------------------------
+# Named constructors (Table 1 of the paper)
+# ---------------------------------------------------------------------------
+
+def _f(x):
+    return jnp.asarray(x, dtype=jnp.result_type(float))
+
+
+def power(a: float, p: float, B: float) -> RegularSpeedup:
+    """s(θ) = a θ^p, 0<p<1 — the heSRPT family [Berg et al. 2020]."""
+    assert 0 < p < 1 and a > 0
+    return RegularSpeedup(A=_f(a * p), w=_f(0.0), gamma=_f(p - 1.0), sigma=+1, B=B)
+
+
+def shifted_power(a: float, z: float, p: float, B: float) -> RegularSpeedup:
+    """s(θ) = a(θ+z)^p − a z^p, 0<p<1, z≥0.  (Fig. 8 uses a=1, z=4, p=.5.)"""
+    assert 0 < p < 1 and a > 0 and z >= 0
+    return RegularSpeedup(A=_f(a * p), w=_f(z), gamma=_f(p - 1.0), sigma=+1, B=B)
+
+
+def log_speedup(a: float, p: float, B: float) -> RegularSpeedup:
+    """s(θ) = a ln(pθ + 1).  (Fig. 6 uses a=1, p=1.)"""
+    assert a > 0 and p > 0
+    return RegularSpeedup(A=_f(a), w=_f(1.0 / p), gamma=_f(-1.0), sigma=+1, B=B)
+
+
+def neg_power(a: float, z: float, p: float, B: float) -> RegularSpeedup:
+    """s(θ) = a z^p − a(θ+z)^p, p<0, z>0.  Includes s=θ/(θ+1) (a=1,z=1,p=−1)."""
+    assert p < 0 and a > 0 and z > 0
+    return RegularSpeedup(A=_f(-a * p), w=_f(z), gamma=_f(p - 1.0), sigma=+1, B=B)
+
+
+def saturating(a: float, z: float, p: float, B: float) -> RegularSpeedup:
+    """s(θ) = a z^p − a(z−θ)^p, p>1, z≥B.  Includes s=2θ−θ² (a=1,z=1,p=2,B≤1)."""
+    assert p > 1 and a > 0 and z >= B
+    return RegularSpeedup(A=_f(a * p), w=_f(z), gamma=_f(p - 1.0), sigma=-1, B=B)
+
+
+def from_roofline(
+    tokens_per_step: float,
+    step_flops: float,
+    grad_bytes: float,
+    B: float,
+    peak_flops: float = 197e12,
+    link_bw: float = 50e9,
+    overlap: float = 0.0,
+) -> RegularSpeedup:
+    """Speedup function of a data-parallel training job on θ TPU chips.
+
+    step_time(θ) = F/(θ·R) + (1−overlap)·2·P·(θ−1)/(θ·W)   (ring all-reduce)
+    s(θ) = T / step_time(θ) = A·θ / (D + C·θ)
+
+    which is the paper's Table-1 row 3 (neg_power, p = −1): the
+    roofline-derived speedup of a DP TPU job is *regular*, so SmartFill has a
+    closed form for real cluster workloads (DESIGN.md §2).
+    """
+    C = (1.0 - overlap) * 2.0 * grad_bytes / link_bw  # comm seconds (asymptotic)
+    D = step_flops / peak_flops - C                   # F/R − C
+    if D <= 0:
+        # comm fully hidden or dominant from θ=1: fall back to a nearly
+        # linear regular function (compute-bound all the way).
+        return neg_power(a=tokens_per_step / C, z=1e6, p=-1.0, B=B)
+    # s(θ) = (T/C)·(1 − (D/C)/(D/C+θ)) = a z^p − a (θ+z)^p, p=−1, z=D/C.
+    z = D / C
+    a = tokens_per_step / C * z  # so that a z^{−1} − a(θ+z)^{−1} = T θ/(D+Cθ)
+    return neg_power(a=a, z=z, p=-1.0, B=B)

@@ -1,0 +1,9 @@
+from .sharding import (  # noqa: F401
+    LOGICAL_RULES,
+    constrain,
+    logical_to_spec,
+    param_sharding,
+    with_logical_rules,
+)
+from .compression import (  # noqa: F401
+    init_ef_state, int8_compress, make_error_feedback_compressor)

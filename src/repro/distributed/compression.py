@@ -1,0 +1,74 @@
+"""Gradient compression for the cross-pod (DCN) axis.
+
+int8 block-quantization with error feedback: the quantization residual
+is carried in a state pytree and added back before the next step's
+quantization, so the compression error is O(1) over training instead of
+O(steps) — the standard trick that makes 4× gradient-traffic reduction
+loss-neutral.
+
+Under GSPMD the gradient all-reduce is implicit, so this module wraps
+the *values* (quantize → dequantize around the mean-reduction point);
+the collective itself then moves int8-precision information.  With
+manual collectives (shard_map) the same functions wrap the psum
+directly — the API is collective-agnostic on purpose.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["int8_compress", "make_error_feedback_compressor",
+           "init_ef_state"]
+
+_BLOCK = 256
+
+
+def _quantize(x, block=_BLOCK):
+    """Blockwise symmetric int8 quantization. Returns (q, scales)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blk = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blk), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blk / scale), -127, 127).astype(jnp.int8)
+    return q, scale, n
+
+
+def _dequantize(q, scale, n, shape):
+    out = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return out.reshape(shape)
+
+
+def int8_compress(x):
+    """Quantize→dequantize round trip (the traffic-equivalent value)."""
+    q, s, n = _quantize(x)
+    return _dequantize(q, s, n, x.shape)
+
+
+def init_ef_state(grads):
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def make_error_feedback_compressor():
+    """Stateful compressor: compress(grads, ef) → (grads', ef').
+
+    grads' = Q(grads + ef);  ef' = (grads + ef) − grads'.
+    """
+
+    def compress(grads, ef_state):
+        def one(g, e):
+            v = g.astype(jnp.float32) + e
+            c = int8_compress(v)
+            return c, v - c
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_e = treedef.flatten_up_to(ef_state)
+        out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (treedef.unflatten([o[0] for o in out]),
+                treedef.unflatten([o[1] for o in out]))
+
+    return compress

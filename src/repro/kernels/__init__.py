@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as <name>/{kernel.py, ops.py, ref.py}:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py    — jitted wrapper with backend dispatch (pallas/interpret/ref)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+flash_attention — blocked online-softmax attention (GQA/window/softcap)
+linear_scan     — chunked diagonal recurrence (Mamba / RG-LRU)
+gwf_waterfill   — the paper's GWF hot spot: fixed-iteration vectorized
+                  bisection water-filling over VPU-tiled job arrays
+"""

@@ -1,0 +1,128 @@
+"""Flash attention — Pallas TPU kernel.
+
+TPU-native adaptation of the models' attention hot spot (DESIGN.md §5):
+blocked online-softmax attention with q/k/v tiles resident in VMEM and
+MXU-aligned block shapes (multiples of 128 on the matmul dims).
+
+Grid: (B·H, nq, nt) with the kv dimension innermost — TPU executes the
+grid sequentially, so the (m, l, acc) running state lives in VMEM
+scratch and the output block for (bh, qi) is finalized on the last kv
+step.  GQA is expressed in the k/v BlockSpec index maps (q head h reads
+kv head h // group), so no repeated K/V ever materializes.
+
+Supports: causal masking, sliding window, logit softcap — the union of
+what the 10 assigned architectures need (gemma2 local+softcap,
+recurrentgemma local MQA, dense GQA).  VMEM budget per step:
+bq·hd + 2·bt·hd + bq·bt (f32 scores) + scratch ≈ 1.2 MB at the default
+(256, 512, hd=128) — comfortably under the ~16 MB VMEM of a v5e core
+with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq, bt, nt, causal, window, cap, s_q, s_kv):
+    t = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bt, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bt)
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bt), 0)
+    k_pos = t * bt + jax.lax.broadcasted_iota(jnp.int32, (bq, bt), 1)
+    mask = (k_pos < s_kv) & (q_pos < s_q)              # padding
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(t == nt - 1)
+    def _fini():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    block_q=256, block_kv=512, interpret=False):
+    """q: (B, S, H, hd); k/v: (B, T, K, hd), H = G·K. Returns (B, S, H, hd).
+
+    Assumes q is pre-scaled (matches models/attention.py).  hd ≤ 256.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+
+    bq = min(block_q, S)
+    bt = min(block_kv, T)
+    nq = -(-S // bq)
+    nt = -(-T // bt)
+    Sp, Tp = nq * bq, nt * bt
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    # (B, S, H, hd) → (B·H, S, hd) rows; kv → (B·K, T, hd)
+    qr = qp.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+    kr = kp.transpose(0, 2, 1, 3).reshape(B * K, Tp, hd)
+    vr = vp.transpose(0, 2, 1, 3).reshape(B * K, Tp, hd)
+
+    def q_map(bh, qi, t):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, t):
+        b, h = bh // H, bh % H
+        return (b * K + h // G, t, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bt=bt, nt=nt, causal=causal, window=window,
+        cap=cap, s_q=S, s_kv=T)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nt),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), q_map),
+            pl.BlockSpec((1, bt, hd), kv_map),
+            pl.BlockSpec((1, bt, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    out = out.reshape(B, H, Sp, hd).transpose(0, 2, 1, 3)
+    return out[:, :S]

@@ -1,0 +1,34 @@
+"""Jitted public wrapper: dispatches Pallas on TPU, interpret elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+__all__ = ["flash_attention_op", "attention_ref"]
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "cap",
+                                             "block_q", "block_kv", "impl"))
+def flash_attention_op(q, k, v, causal=True, window=None, cap=None,
+                       block_q=256, block_kv=512, impl="auto"):
+    """Flash attention with backend dispatch.
+
+    impl: 'pallas' | 'interpret' | 'ref' | 'auto' (pallas on TPU, ref on
+    CPU hosts — the XLA reference is faster than interpret-mode Pallas
+    for real work; interpret mode is for kernel validation).
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window, cap=cap)
+    return flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                           block_q=block_q, block_kv=block_kv,
+                           interpret=(impl == "interpret"))

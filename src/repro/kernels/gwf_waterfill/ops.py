@@ -1,0 +1,22 @@
+"""Jitted public wrapper for the water-filling kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import gwf_waterfill
+from .ref import gwf_waterfill_ref
+
+__all__ = ["gwf_waterfill_op", "gwf_waterfill_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "impl"))
+def gwf_waterfill_op(u, h0, b, iters=64, impl="auto"):
+    """impl: 'pallas' | 'interpret' | 'ref' | 'auto'."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return gwf_waterfill_ref(u, h0, b)
+    return gwf_waterfill(u, h0, b, iters=iters,
+                         interpret=(impl == "interpret"))

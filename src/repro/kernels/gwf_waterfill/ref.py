@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the water-filling kernel: the closed-form
+breakpoint solve from core/gwf.py specialized to (u, h0) inputs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gwf_waterfill_ref(u, h0, b):
+    """Exact piecewise-linear WFP solve. u (M,), h0 (M,), scalar b."""
+    u = u.astype(jnp.float64) if u.dtype == jnp.float64 else u.astype(jnp.float32)
+    h0 = h0.astype(u.dtype)
+    b = jnp.asarray(b, u.dtype)
+    active = u > 0
+    starts = jnp.where(active, h0, 1e30)
+    caps = jnp.where(active, h0 + b / jnp.maximum(u, 1e-30), 2e30)
+
+    def beta(h):
+        vol = jnp.clip(u * (h - h0), 0.0, b)
+        return jnp.sum(jnp.where(active, vol, 0.0))
+
+    bp = jnp.sort(jnp.concatenate([starts, caps]))
+    vals = jax.vmap(beta)(bp)
+    k = u.shape[0]
+    idx = jnp.clip(jnp.searchsorted(vals, b, side="left"), 1, 2 * k - 1)
+    h_lo, h_hi = bp[idx - 1], bp[idx]
+    v_lo = vals[idx - 1]
+    in_seg = active & (h_lo >= starts - 1e-30) & (h_lo < caps)
+    slope = jnp.sum(jnp.where(in_seg, u, 0.0))
+    h = jnp.where(slope > 0,
+                  jnp.minimum(h_lo + (b - v_lo) / jnp.where(slope > 0, slope, 1.0), h_hi),
+                  h_lo)
+    return jnp.where(active, jnp.clip(u * (h - h0), 0.0, b), 0.0)

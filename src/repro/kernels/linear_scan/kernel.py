@@ -1,0 +1,80 @@
+"""Chunked diagonal linear recurrence — Pallas TPU kernel.
+
+Computes h_t = a_t ⊙ h_{t−1} + b_t for (B, S, D) inputs — the shared
+recurrence of Mamba-1 (with D = d_inner·N flattened) and RG-LRU
+(D = lru_width).  TPU-native adaptation (DESIGN.md §5): the GPU
+formulation streams one long scan with a persistent warp state; on TPU
+we tile D onto the (8, 128) VPU lanes and iterate sequence chunks
+sequentially in the grid, carrying the state in VMEM scratch.  Within a
+chunk, a log₂(chunk) Blelloch-style doubling pass does the associative
+combine entirely in registers/VMEM — no HBM round-trips for
+intermediates (the XLA reference materializes every doubling step).
+
+Grid: (nb, nd, nc) — batch tiles × feature tiles × sequence chunks,
+chunks innermost (sequential); h-carry scratch persists across the chunk
+dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, y_ref, h_ref, *, chunk):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)          # (chunk, bd)
+    b = b_ref[0].astype(jnp.float32)
+    # fold carry into step 0
+    b = b.at[0].set(a[0] * h_ref[...] + b[0])
+
+    # in-chunk inclusive scan by doubling: O(log chunk) vector steps
+    off = 1
+    while off < chunk:
+        a_sh = jnp.pad(a, ((off, 0), (0, 0)))[:chunk]
+        b_sh = jnp.pad(b, ((off, 0), (0, 0)))[:chunk]
+        mask = (jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0) >= off)
+        b = jnp.where(mask, a * b_sh + b, b)
+        a = jnp.where(mask, a * a_sh, a)
+        off *= 2
+
+    y_ref[0] = b.astype(y_ref.dtype)
+    h_ref[...] = b[-1]
+
+
+def linear_scan(a, b, *, chunk=128, block_d=512, interpret=False):
+    """Inclusive scan of h_t = a_t h_{t−1} + b_t, h_{-1} = 0.
+
+    a, b: (B, S, D) → returns h: (B, S, D) for every t.
+    """
+    B, S, D = a.shape
+    c = min(chunk, S)
+    nc = -(-S // c)
+    bd = min(block_d, D)
+    nd = -(-D // bd)
+    Sp, Dp = nc * c, nd * bd
+    ap = jnp.pad(a, ((0, 0), (0, Sp - S), (0, Dp - D)))
+    bp = jnp.pad(b, ((0, 0), (0, Sp - S), (0, Dp - D)))
+
+    def idx(bi, di, ci):
+        return (bi, ci, di)
+
+    out = pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=c),
+        grid=(B, nd, nc),
+        in_specs=[pl.BlockSpec((1, c, bd), idx),
+                  pl.BlockSpec((1, c, bd), idx)],
+        out_specs=pl.BlockSpec((1, c, bd), idx),
+        out_shape=jax.ShapeDtypeStruct((B, Sp, Dp), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
+        interpret=interpret,
+    )(ap, bp)
+    return out[:, :S, :D]

@@ -1,0 +1,22 @@
+"""Jitted public wrapper for the chunked linear-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import linear_scan
+from .ref import linear_scan_ref
+
+__all__ = ["linear_scan_op", "linear_scan_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "impl"))
+def linear_scan_op(a, b, chunk=128, block_d=512, impl="auto"):
+    """impl: 'pallas' | 'interpret' | 'ref' | 'auto'."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return linear_scan_ref(a, b)
+    return linear_scan(a, b, chunk=chunk, block_d=block_d,
+                       interpret=(impl == "interpret"))

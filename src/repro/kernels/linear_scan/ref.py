@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the linear scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a, b):
+    """h_t = a_t h_{t−1} + b_t with h_{-1} = 0; a, b: (B, S, D)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    a32 = a.astype(jnp.float32).swapaxes(0, 1)
+    b32 = b.astype(jnp.float32).swapaxes(0, 1)
+    _, hs = jax.lax.scan(step, jnp.zeros_like(a32[0]), (a32, b32))
+    return hs.swapaxes(0, 1).astype(a.dtype)

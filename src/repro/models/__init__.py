@@ -1,0 +1,7 @@
+from .transformer import (  # noqa: F401
+    init_params,
+    model_apply,
+    decode_step,
+    init_decode_state,
+    prefill,
+)

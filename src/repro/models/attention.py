@@ -1,0 +1,297 @@
+"""Attention: GQA/MQA/MHA with RoPE, sliding window, logit softcap, QKV
+bias; memory-O(S·block) double-blocked online-softmax ("flash") forward
+in pure JAX — the XLA path used for lowering/dry-run; the Pallas TPU
+kernel (kernels/flash_attention) implements the same math for the
+hardware hot path and is validated against this reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain, heads_shardable
+from .common import dense_init, rope, softcap
+
+__all__ = [
+    "attn_init",
+    "attention",
+    "flash_attention_xla",
+    "decode_attention",
+    "init_kv_cache",
+]
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, kind="attn"):
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if kind == "local" and cfg.local_kv_heads:
+        K = cfg.local_kv_heads
+    ks = jax.random.split(key, 4)
+    std = 1.0 / np.sqrt(d)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd).reshape(d, H, hd),
+        "wk": dense_init(ks[1], d, K * hd).reshape(d, K, hd),
+        "wv": dense_init(ks[2], d, K * hd).reshape(d, K, hd),
+        "wo": (dense_init(ks[3], H * hd, d, std=std / np.sqrt(2 * cfg.n_layers))
+               .reshape(H, hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), jnp.float32)
+        p["bk"] = jnp.zeros((K, hd), jnp.float32)
+        p["bv"] = jnp.zeros((K, hd), jnp.float32)
+    return p
+
+
+def _qkv(p, x, cfg, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = q * (cfg.head_dim ** -0.5)
+    return q, k, v
+
+
+def flash_attention_xla(q, k, v, *, causal=True, window=None, cap=None,
+                        q_offset=0, k_offset=0, q_block=512, kv_block=1024):
+    """Double-blocked online-softmax attention, O(S·block) memory.
+
+    q: (B, S, H, hd); k/v: (B, T, K, hd) with H = G·K (GQA).
+    Returns (B, S, H, hd) in q.dtype; accumulation in f32.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qb = min(q_block, S)
+    tb = min(kv_block, T)
+    nq, nt = -(-S // qb), -(-T // tb)
+    Sp, Tp = nq * qb, nt * tb
+    # pad to block multiples (masked out below via positions)
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    qp = qp.reshape(B, nq, qb, K, G, hd)
+    kp = kp.reshape(B, nt, tb, K, hd)
+    vp = vp.reshape(B, nt, tb, K, hd)
+    q_pos = q_offset + jnp.arange(Sp).reshape(nq, qb)
+    k_pos = k_offset + jnp.arange(Tp).reshape(nt, tb)
+    k_valid = (jnp.arange(Tp) < T).reshape(nt, tb)
+
+    def q_step(_, qi):
+        qc, qpos = qi  # (B, qb, K, G, hd), (qb,)
+
+        @jax.checkpoint
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc, vc, kpos, kval = ki
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qc, kc,
+                           preferred_element_type=jnp.float32)
+            s = softcap(s, cap)
+            mask = kval[None, :]
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos[None, :])
+            if window is not None:
+                mask = mask & (qpos[:, None] - kpos[None, :] < window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            scale = jnp.exp(m - m_new)
+            l_new = l * scale + p.sum(axis=-1)
+            acc_new = acc * scale[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, K, G, qb), NEG_INF, jnp.float32),
+            jnp.zeros((B, K, G, qb), jnp.float32),
+            jnp.zeros((B, K, G, qb, hd), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (kp.swapaxes(0, 1), vp.swapaxes(0, 1), k_pos, k_valid))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)          # (B, K, G, qb, hd)
+
+    # flash backward: block scores are recomputed, never stored — the
+    # checkpoint on kv_step (and on q_step via its scan) keeps residuals
+    # to O(carry) instead of O(S·T) per layer.
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None,
+                           (qp.swapaxes(0, 1), q_pos))
+    # outs: (nq, B, K, G, qb, hd) → (B, S, H, hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sp, H, hd)
+    return out[:, :S]
+
+
+def attention(p, x, cfg, kind, positions, enc_kv=None):
+    """Full-sequence attention (train / prefill compute).
+
+    kind: 'attn' (global causal), 'local' (sliding window causal),
+    'bidir' (encoder), 'cross' (decoder cross-attn; enc_kv = (k, v)).
+    """
+    B, S, d = x.shape
+    if kind == "cross":
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        if "bq" in p:
+            q = q + p["bq"].astype(x.dtype)
+        q = q * (cfg.head_dim ** -0.5)
+        k, v = enc_kv
+        out = flash_attention_xla(q, k, v, causal=False, cap=cfg.attn_softcap)
+    else:
+        q, k, v = _qkv(p, x, cfg, positions)
+        q, k, out_spec = _attn_sharding(q, k, cfg)
+        causal = kind != "bidir"
+        window = cfg.window if kind == "local" else None
+        out = flash_attention_xla(q, k, v, causal=causal, window=window,
+                                  cap=cfg.attn_softcap)
+    out = constrain(out, *_attn_sharding(out, None, cfg)[2])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def _attn_sharding(q, k, cfg):
+    """TP over heads when divisible, else context parallelism over the
+    query sequence — attention compute must shard the 'model' axis either
+    way (archs with 14/20/10 heads would otherwise run it replicated)."""
+    if heads_shardable(cfg.n_heads):
+        spec = ("batch", None, "heads", None)
+        kspec = ("batch", None, "kv_heads", None)
+    else:
+        spec = ("batch", "seq_mp", None, None)
+        kspec = ("batch", None, None, None)
+    q = constrain(q, *spec) if q is not None else None
+    k = constrain(k, *kspec) if k is not None else None
+    return q, k, spec
+
+
+def cross_kv(p, enc_out, cfg):
+    """Precompute encoder K/V for decoder cross-attention."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(enc_out.dtype)
+        v = v + p["bv"].astype(enc_out.dtype)
+    return k, v
+
+
+def prefill_attention(p, x, cfg, kind, positions, max_len,
+                      cache_dtype=jnp.bfloat16):
+    """Full-sequence attention that also returns a populated KV cache.
+
+    Global layers cache all S positions into a (B, max_len, K, hd)
+    buffer; local layers keep a ring buffer of the last `window` tokens.
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    q, k, out_spec = _attn_sharding(q, k, cfg)
+    causal = kind != "bidir"
+    window = cfg.window if kind == "local" else None
+    out = flash_attention_xla(q, k, v, causal=causal, window=window,
+                              cap=cfg.attn_softcap)
+    out = constrain(out, *out_spec)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+    C = min(max_len, cfg.window) if (kind == "local" and cfg.window) else max_len
+    cache = {
+        "k": jnp.zeros((B, C, k.shape[2], k.shape[3]), cache_dtype),
+        "v": jnp.zeros((B, C, v.shape[2], v.shape[3]), cache_dtype),
+    }
+    n_keep = min(S, C)
+    k_keep, v_keep = k[:, -n_keep:], v[:, -n_keep:]
+    pos_keep = S - n_keep
+    cache = cache_update(cache, k_keep, v_keep, pos_keep, kind=kind,
+                         window=cfg.window)
+    return y, cache
+
+
+def cross_decode_attention(p, x, cfg, kv):
+    """Decoder cross-attention at decode time: x (B,1,d), kv precomputed."""
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    q = q * (cfg.head_dim ** -0.5)
+    k, v = kv
+    K = k.shape[2]
+    G = q.shape[2] // K
+    qg = q.reshape(B, 1, K, G, cfg.head_dim)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k.astype(qg.dtype),
+                   preferred_element_type=jnp.float32)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, q.shape[2], cfg.head_dim).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode path
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg, B, max_len, kind="attn", dtype=jnp.bfloat16):
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    if kind == "local":
+        if cfg.local_kv_heads:
+            K = cfg.local_kv_heads
+        max_len = min(max_len, cfg.window or max_len)   # ring buffer
+    return {
+        "k": jnp.zeros((B, max_len, K, hd), dtype),
+        "v": jnp.zeros((B, max_len, K, hd), dtype),
+    }
+
+
+def _cache_slots(cache_len, pos, n, kind, window):
+    """Cache slot indices for positions [pos, pos+n): ring for local."""
+    t = pos + jnp.arange(n)
+    if kind == "local":
+        return t % cache_len
+    return t
+
+
+def cache_update(cache, k_new, v_new, pos, kind="attn", window=None):
+    """Insert k/v for positions [pos, pos+n) into the cache."""
+    C = cache["k"].shape[1]
+    n = k_new.shape[1]
+    slots = _cache_slots(C, pos, n, kind, window)
+    k = cache["k"].at[:, slots].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[:, slots].set(v_new.astype(cache["v"].dtype))
+    return {"k": k, "v": v}
+
+
+def decode_attention(p, x, cfg, kind, cache, pos):
+    """Single-token decode: q from x (B, 1, d), attend over the cache.
+
+    pos: scalar current position (number of tokens already in cache).
+    Returns (out (B, 1, d), new_cache).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _qkv(p, x, cfg, positions)
+    cache = cache_update(cache, k_new, v_new, pos, kind=kind, window=cfg.window)
+    k, v = cache["k"], cache["v"]
+    C = k.shape[1]
+    K = k.shape[2]
+    H = q.shape[2]
+    G = H // K
+    qg = q.reshape(B, 1, K, G, cfg.head_dim)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k.astype(qg.dtype),
+                   preferred_element_type=jnp.float32)
+    s = softcap(s, cfg.attn_softcap)
+    t_idx = jnp.arange(C)
+    if kind == "local":
+        # ring buffer: slot t holds absolute position p ≡ t (mod C), the
+        # latest such p ≤ pos
+        abs_pos = pos - ((pos - t_idx) % C)
+        valid = (abs_pos >= 0) & (abs_pos <= pos)
+        if cfg.window is not None:
+            valid &= (pos - abs_pos) < cfg.window
+    else:
+        valid = t_idx <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H, cfg.head_dim).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), cache

@@ -1,0 +1,139 @@
+"""Shared model building blocks — pure functions over pytree params.
+
+Conventions:
+  * params are nested dicts of jnp arrays; leaf names encode their role
+    for the sharding rules (distributed/sharding.py::param_sharding).
+  * every init_* takes an rng and returns (params, …); every apply is a
+    pure function usable under jit/scan/vmap.
+  * compute dtype is cfg.dtype (bf16 by default); params stay f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "rmsnorm_init",
+    "rmsnorm",
+    "embed_init",
+    "rope",
+    "softcap",
+    "cross_entropy",
+]
+
+
+def _trunc_normal(key, shape, std, dtype=jnp.float32):
+    # float(std): np.float64 scalars are strongly typed and would promote
+    # every parameter to f64 when the x64 flag is on (tests/benchmarks).
+    return float(std) * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                    dtype)
+
+
+def dense_init(key, d_in, d_out, std=None, dtype=jnp.float32):
+    std = std if std is not None else 1.0 / np.sqrt(d_in)
+    return _trunc_normal(key, (d_in, d_out), std, dtype)
+
+
+def dense(x, w, b=None):
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d):
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(x, p, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"])).astype(dt)
+
+
+def embed_init(key, vocab, d, std=0.02):
+    return _trunc_normal(key, (vocab, d), std)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    ang = ang[..., :, None, :]                                # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token cross-entropy. labels < 0 are ignored.
+
+    logits: (B, S, V) — may be vocab-sharded; logsumexp reduces across the
+    shard axis via XLA's collective.
+    """
+    valid = labels >= 0
+    if mask is not None:
+        valid = valid & (mask > 0)
+    labels_safe = jnp.maximum(labels, 0)
+    logits = constrain(logits.astype(jnp.float32), "batch", None, "vocab")
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * valid
+    denom = jnp.maximum(valid.sum(), 1)
+    return nll.sum() / denom
+
+
+def chunked_cross_entropy(h, table, labels, cfg, chunk: int = 512):
+    """Fused unembed + CE, scanned over sequence chunks.
+
+    Avoids materializing the full (B, S, V) logits (for 256k-vocab train
+    shapes that tensor is the single largest activation: ≈2 GB/device in
+    f32 plus backward copies).  Each chunk's logits live only inside one
+    remat-wrapped scan step; backward recomputes them.
+    """
+    B, S = labels.shape
+    c = min(chunk, S)
+    nc = -(-S // c)
+    pad = nc * c - S
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hs = h.reshape(B, nc, c, -1).swapaxes(0, 1)
+    ls = labels.reshape(B, nc, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        nll_sum, n_valid = carry
+        hc, lc = xs
+        logits = jnp.einsum("bsd,vd->bsv", hc, table.astype(hc.dtype))
+        logits = softcap(logits, cfg.final_softcap)
+        logits = constrain(logits.astype(jnp.float32), "batch", None, "vocab")
+        valid = lc >= 0
+        safe = jnp.maximum(lc, 0)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = ((lse - gold) * valid).sum().astype(jnp.float32)
+        n = valid.sum().astype(jnp.float32)
+        return (nll_sum + nll, n_valid + n), None
+
+    (nll, n), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ls))
+    return nll / jnp.maximum(n, 1.0)

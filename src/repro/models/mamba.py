@@ -1,0 +1,137 @@
+"""Mamba-1 block (falcon-mamba-7b) — selective SSM, attention-free.
+
+Structure per block (d = d_model, di = expand·d, N = ssm_state):
+  in_proj  d → 2·di  (x, z branches)
+  conv1d   depthwise causal, width conv_w, over x branch
+  x_proj   di → dt_rank + 2N   (Δ low-rank, B, C)
+  dt_proj  dt_rank → di        (Δ broadcast, softplus)
+  SSM      h_t = exp(Δ_t A) h_{t−1} + Δ_t B_t x_t ;  y = C_t·h + D·x
+  gate     y · silu(z);  out_proj di → d
+
+Sequence path uses the chunked associative scan (scan_ops); decode path
+updates (conv window, h state) one token at a time.  Falcon-Mamba also
+RMS-norms (Δ, B, C) before discretization — included (b_c_dt_rms).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from .common import dense_init
+from .scan_ops import chunked_linear_scan
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "init_mamba_state"]
+
+
+def mamba_init(key, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    R = cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    dt_std = R ** -0.5
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], di, R + 2 * N),
+        "dt_w": dt_std * jax.random.normal(ks[3], (R, di), jnp.float32),
+        "dt_b": jnp.log(jnp.exp(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       np.log(1e-3), np.log(1e-1)))) - 1.0 + 1e-9),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d),
+    }
+
+
+def _split_xdbc(p, xc, cfg):
+    """x_proj + dt_proj on a conv-activated chunk xc: (B, c, di)."""
+    N, R = cfg.ssm_state, cfg.dt_rank
+    dbc = xc @ p["x_proj"].astype(xc.dtype)
+    dt_r, Bm, Cm = jnp.split(dbc, [R, R + N], axis=-1)
+    if cfg.ssm_rms_bcdt:
+        def _rms(t):
+            v = jnp.mean(jnp.square(t.astype(jnp.float32)), -1, keepdims=True)
+            return (t.astype(jnp.float32) * jax.lax.rsqrt(v + 1e-6)).astype(t.dtype)
+        dt_r, Bm, Cm = _rms(dt_r), _rms(Bm), _rms(Cm)
+    dt = jax.nn.softplus(dt_r @ p["dt_w"].astype(xc.dtype)
+                         + p["dt_b"].astype(xc.dtype))        # (B, c, di)
+    return dt, Bm, Cm
+
+
+def _causal_conv(p, x, init=None):
+    """Depthwise causal conv. x: (B, S, di); init: (B, conv_w−1, di)."""
+    w = p["conv_w"].astype(x.dtype)                            # (K, di)
+    K = w.shape[0]
+    if init is None:
+        init = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([init, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    tail = xp[:, -(K - 1):] if K > 1 else None
+    return out + p["conv_b"].astype(x.dtype), tail
+
+
+def mamba_apply(p, x, cfg, chunk=256):
+    """Full-sequence Mamba. x: (B, S, d) → (B, S, d)."""
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xb, z = jnp.split(xz, 2, axis=-1)
+    xb = constrain(xb, "batch", None, "ff")
+    xb, _ = _causal_conv(p, xb)
+    xb = jax.nn.silu(xb)
+    A = -jnp.exp(p["A_log"])                                   # (di, N)
+
+    def make_ab(ci):
+        xc = ci["x"]                                           # (B, c, di)
+        dt, Bm, _ = _split_xdbc(p, xc, cfg)
+        dtf = dt.astype(jnp.float32)
+        a = jnp.exp(dtf[..., None] * A)                        # (B, c, di, N)
+        b = (dtf * xc.astype(jnp.float32))[..., None] * \
+            Bm.astype(jnp.float32)[..., None, :]               # (B, c, di, N)
+        return a, b
+
+    def emit(ci, h):
+        xc = ci["x"]
+        _, _, Cm = _split_xdbc(p, xc, cfg)
+        y = jnp.einsum("bcdn,bcn->bcd", h, Cm.astype(jnp.float32))
+        return (y + p["D"] * xc.astype(jnp.float32)).astype(xc.dtype)
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    y, _ = chunked_linear_scan({"x": xb}, h0, make_ab, emit, chunk=chunk)
+    y = y * jax.nn.silu(z)
+    y = constrain(y, "batch", None, "ff")
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def init_mamba_state(cfg, B, dtype=jnp.float32):
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "h": jnp.zeros((B, di, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((B, cfg.ssm_conv - 1, di), dtype),
+    }
+
+
+def mamba_decode(p, x, cfg, state):
+    """One-token step. x: (B, 1, d); state: {'h', 'conv'}."""
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xb, z = jnp.split(xz, 2, axis=-1)
+    xb, conv_tail = _causal_conv(p, xb, init=state["conv"])
+    xb = jax.nn.silu(xb)
+    dt, Bm, Cm = _split_xdbc(p, xb, cfg)
+    A = -jnp.exp(p["A_log"])
+    dtf = dt[:, 0].astype(jnp.float32)                         # (B, di)
+    a = jnp.exp(dtf[..., None] * A)                            # (B, di, N)
+    b = (dtf * xb[:, 0].astype(jnp.float32))[..., None] * \
+        Bm[:, 0].astype(jnp.float32)[:, None, :]
+    h = a * state["h"] + b
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))
+    y = (y + p["D"] * xb[:, 0].astype(jnp.float32)).astype(x.dtype)[:, None]
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"h": h, "conv": conv_tail}

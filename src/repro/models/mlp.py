@@ -1,0 +1,33 @@
+"""Gated MLPs (SwiGLU / GeGLU) and the dense MoE expert stack."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .common import dense_init
+
+__all__ = ["mlp_init", "mlp"]
+
+
+def mlp_init(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff),
+        "w_up": dense_init(k2, d_model, d_ff),
+        "w_down": dense_init(k3, d_ff, d_model),
+    }
+
+
+def _act(x, kind):
+    if kind == "geglu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+def mlp(p, x, kind="swiglu"):
+    g = x @ p["w_gate"].astype(x.dtype)
+    u = x @ p["w_up"].astype(x.dtype)
+    h = _act(g, kind) * u
+    h = constrain(h, "batch", None, "ff")
+    return h @ p["w_down"].astype(x.dtype)

@@ -1,0 +1,182 @@
+"""Mixture-of-Experts layer — GShard/Switch-style grouped dispatch.
+
+Two execution paths share the same parameters:
+
+``moe_dispatch`` (default)
+    Capacity-based one-hot dispatch/combine einsums over token groups —
+    the standard XLA/TPU formulation: dense, shardable, deterministic.
+    Tokens beyond an expert's capacity are dropped (residual passes
+    through, as in Switch).  The (G, E, C) dispatch tensor is the known
+    cost of this formulation; group size G bounds it, and the §Perf
+    hillclimb targets it (sort-based dispatch).
+
+``moe_dense`` (oracle)
+    Every expert on every token, exact top-k combine, no capacity drops.
+    O(E×) compute — used by smoke tests and as the correctness reference
+    for the dispatch path and the Pallas kernels.
+
+Routing: softmax → top-k, probabilities renormalized over the selected
+experts (Qwen-MoE / DBRX convention).  Aux losses: Switch load-balance
+loss + router z-loss, returned for the train loop to weight.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from .common import dense_init
+from .mlp import mlp_init, mlp, _act
+
+__all__ = ["moe_init", "moe_apply", "moe_dense", "moe_dispatch"]
+
+
+def moe_init(key, cfg):
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    std = 1.0 / np.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E, std=0.02),
+        "expert_gate": float(std) * jax.random.truncated_normal(
+            ks[1], -2, 2, (E, d, f), jnp.float32),
+        "expert_up": float(std) * jax.random.truncated_normal(
+            ks[2], -2, 2, (E, d, f), jnp.float32),
+        "expert_down": float(1.0 / np.sqrt(f)) * jax.random.truncated_normal(
+            ks[3], -2, 2, (E, f, d), jnp.float32),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, cfg.d_ff_expert * cfg.n_shared_experts)
+    return p
+
+
+def _router(p, x, cfg):
+    """x: (N, d) → top-k probs (N, k), indices (N, k), aux losses."""
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # Switch load-balance loss: E · Σ_e f_e · P_e
+    E = cfg.n_experts
+    occupancy = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    f_e = occupancy / jnp.maximum(occupancy.sum(), 1.0)
+    P_e = probs.mean(axis=0)
+    lb_loss = E * jnp.sum(f_e * P_e)
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return top_p, top_i, {"moe_lb": lb_loss, "moe_z": z_loss}
+
+
+def _expert_ffn(p, h, cfg):
+    """h: (..., E, C, d) → expert MLP applied per expert.
+
+    (§Perf iteration note: constraining the weights' compute copies to
+    data-replicated — hoping for gather-weights/reduce-grads instead of
+    GSPMD's gather-activations schedule — was tried and REFUTED: the
+    partitioner re-reshards around the constraint and the collective
+    term got worse on both MoE archs.  See EXPERIMENTS.md §Perf.)
+    """
+    dt = h.dtype
+    g = jnp.einsum("...ecd,edf->...ecf", h, p["expert_gate"].astype(dt))
+    u = jnp.einsum("...ecd,edf->...ecf", h, p["expert_up"].astype(dt))
+    a = _act(g, cfg.mlp) * u
+    a = constrain(a, *([None] * (a.ndim - 3)), "expert", None, "ff")
+    return jnp.einsum("...ecf,efd->...ecd", a, p["expert_down"].astype(dt))
+
+
+def moe_dispatch(p, x, cfg, group_size: int = 1024):
+    """Capacity-based grouped dispatch. x: (B, S, d)."""
+    B, S, d = x.shape
+    N = B * S
+    dt = x.dtype
+    xf = x.reshape(N, d)
+    G = min(group_size, N)
+    n = -(-N // G)
+    pad = n * G - N
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    top_p, top_i, aux = _router(p, xf, cfg)
+    E, k = cfg.n_experts, cfg.top_k
+    C = int(np.ceil(G * k / E * cfg.capacity_factor))
+    C = -(-C // 8) * 8                                    # pad for tiling
+
+    xg = xf.reshape(n, G, d)
+    pi = top_p.reshape(n, G, k)
+    ii = top_i.reshape(n, G, k)
+
+    def chunk_fwd(xg_c, ii_c, pi_c):
+        """A parallel chunk of m groups: (m, G, …) → (m, G, d).
+
+        GShard ordering: all first choices claim buffer slots before
+        second choices, etc.  The group dim m stays sharded over 'data'
+        (dispatch is shard-local: each group's tokens live on one
+        device), experts shard over 'model'.
+        """
+        m = xg_c.shape[0]
+        dispatch = jnp.zeros((m, G, E, C), jnp.float32)
+        combine = jnp.zeros((m, G, E, C), jnp.float32)
+        base = jnp.zeros((m, 1, E), jnp.float32)
+        for j in range(k):
+            oh = jax.nn.one_hot(ii_c[:, :, j], E, dtype=jnp.float32)
+            pos_e = jnp.cumsum(oh, axis=1) - oh + base
+            pos = jnp.sum(pos_e * oh, axis=-1)            # (m, G)
+            keep = pos < C
+            poh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+            pair = jnp.einsum("mge,mgc->mgec", oh, poh)
+            dispatch = dispatch + pair
+            combine = combine + pair * pi_c[:, :, j, None, None]
+            base = base + oh.sum(axis=1, keepdims=True)
+        dispatch = dispatch.astype(dt)
+        combine = combine.astype(dt)
+        dispatch = constrain(dispatch, "batch", None, "expert", None)
+        hc = jnp.einsum("mgec,mgd->mecd", dispatch, xg_c)  # (m, E, C, d)
+        hc = constrain(hc, "batch", "expert", None, None)
+        out_e = _expert_ffn(p, hc, cfg)                    # (m, E, C, d)
+        return jnp.einsum("mgec,mecd->mgd", combine, out_e)
+
+    # two-level grouping: m = groups-per-chunk stays a parallel (data-
+    # sharded) dim so dispatch needs no cross-device traffic; the outer
+    # n_seq chunks run under a checkpointed sequential scan so peak
+    # memory is ONE chunk's expert tensors — this is what lets the
+    # 132B-MoE 32k-prefill fit per-device HBM.
+    m = min(n, cfg.moe_parallel_groups)
+    n_seq = -(-n // m)
+    if n_seq * m != n:
+        padg = n_seq * m - n
+        xg = jnp.concatenate([xg, jnp.zeros((padg,) + xg.shape[1:], xg.dtype)])
+        ii = jnp.concatenate([ii, jnp.zeros((padg,) + ii.shape[1:], ii.dtype)])
+        pi = jnp.concatenate([pi, jnp.zeros((padg,) + pi.shape[1:], pi.dtype)])
+    chunk_fwd = jax.checkpoint(chunk_fwd)   # bwd recomputes per chunk
+    if n_seq == 1:
+        out = chunk_fwd(xg, ii, pi)
+    else:
+        xs = jax.tree_util.tree_map(
+            lambda t: t.reshape(n_seq, m, *t.shape[1:]), (xg, ii, pi))
+        _, out = jax.lax.scan(
+            lambda _, g: (None, chunk_fwd(*g)), None, xs)
+    out = out.reshape(-1, d)[:N].reshape(B, S, d)
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], x, cfg.mlp)
+    return out, aux
+
+
+def moe_dense(p, x, cfg):
+    """Oracle: compute every expert for every token, exact combine."""
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    top_p, top_i, aux = _router(p, xf, cfg)
+    h = jnp.broadcast_to(xf[:, None, None, :],
+                         (xf.shape[0], cfg.n_experts, 1, d))
+    out_e = _expert_ffn(p, h, cfg)[:, :, 0]               # (N, E, d)
+    gates = jnp.zeros((xf.shape[0], cfg.n_experts), jnp.float32)
+    gates = jax.vmap(lambda g, i, v: g.at[i].add(v))(gates, top_i, top_p)
+    out = jnp.einsum("ne,ned->nd", gates.astype(out_e.dtype), out_e)
+    out = out.reshape(B, S, d)
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], x, cfg.mlp)
+    return out, aux
+
+
+def moe_apply(p, x, cfg):
+    if cfg.moe_impl == "dense":
+        return moe_dense(p, x, cfg)
+    return moe_dispatch(p, x, cfg, group_size=cfg.moe_group_size)

@@ -1,0 +1,94 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Per block: the residual stream feeds a *recurrent branch* —
+  linear d → w (x), linear d → w (gate z)
+  conv1d (temporal, width 4) on x
+  RG-LRU:  r_t = σ(Wa·x_t),  i_t = σ(Wx·x_t)
+           a_t = exp(−c · softplus(Λ) · r_t)
+           h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+  out = (h ⊙ gelu(z)) @ W_out
+with c = 8 (the paper's constant).  Same chunked-scan substrate as
+Mamba; decode carries (h, conv window).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .common import dense_init
+from .scan_ops import chunked_linear_scan
+from .mamba import _causal_conv
+
+__all__ = ["rglru_init", "rglru_apply", "rglru_decode", "init_rglru_state"]
+
+_C = 8.0
+
+
+def rglru_init(key, cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Λ init so that a^c ∈ (0.9, 0.999) roughly (Griffin appendix)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / _C) - 1.0 + 1e-8)
+    return {
+        "in_x": dense_init(ks[1], d, w),
+        "in_z": dense_init(ks[2], d, w),
+        "conv_w": 0.1 * jax.random.normal(ks[3], (cfg.ssm_conv, w), jnp.float32),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "gate_a": dense_init(ks[4], w, w),
+        "gate_i": dense_init(ks[5], w, w),
+        "lam": lam,
+        "out": dense_init(jax.random.fold_in(key, 7), w, d),
+    }
+
+
+def _gates(p, xc):
+    r = jax.nn.sigmoid(xc @ p["gate_a"].astype(xc.dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid(xc @ p["gate_i"].astype(xc.dtype)).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i
+
+
+def rglru_apply(p, x, cfg, chunk=256):
+    B, S, d = x.shape
+    xb = x @ p["in_x"].astype(x.dtype)
+    z = x @ p["in_z"].astype(x.dtype)
+    xb = constrain(xb, "batch", None, "ff")
+    xb, _ = _causal_conv(p, xb)
+
+    def make_ab(ci):
+        xc = ci["x"]
+        a, bi = _gates(p, xc)
+        return a, bi * xc.astype(jnp.float32)
+
+    def emit(ci, h):
+        return h.astype(x.dtype)
+
+    w = xb.shape[-1]
+    h0 = jnp.zeros((B, w), jnp.float32)
+    h, _ = chunked_linear_scan({"x": xb}, h0, make_ab, emit, chunk=chunk)
+    y = h * jax.nn.gelu(z)
+    y = constrain(y, "batch", None, "ff")
+    return y @ p["out"].astype(x.dtype)
+
+
+def init_rglru_state(cfg, B, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((B, w), jnp.float32),
+        "conv": jnp.zeros((B, cfg.ssm_conv - 1, w), dtype),
+    }
+
+
+def rglru_decode(p, x, cfg, state):
+    xb = x @ p["in_x"].astype(x.dtype)
+    z = x @ p["in_z"].astype(x.dtype)
+    xb, conv_tail = _causal_conv(p, xb, init=state["conv"])
+    a, bi = _gates(p, xb[:, 0])
+    h = a * state["h"] + bi * xb[:, 0].astype(jnp.float32)
+    y = h.astype(x.dtype)[:, None] * jax.nn.gelu(z)
+    return y @ p["out"].astype(x.dtype), {"h": h, "conv": conv_tail}

@@ -1,0 +1,504 @@
+"""Composable LM stack: assembles per-arch block cycles into train /
+prefill / decode programs.
+
+Layer stacking uses lax.scan over *cycle groups*: the block-pattern cycle
+(e.g. gemma2's ("local","attn"), recurrentgemma's ("rglru","rglru",
+"local")) is the scan unit, with per-cycle-position stacked params.  This
+keeps the HLO size O(cycle) instead of O(n_layers) — a 64-layer Mamba or
+46-layer 27B dense model lowers in seconds — and gives remat a natural
+checkpoint boundary.  Leftover layers (n_layers % cycle) run unrolled.
+
+Supports: decoder-only (dense/MoE/SSM/hybrid), VLM (patch-embedding
+prefix), encoder–decoder (cross-attention).  Decode carries a cache
+pytree mirroring the block structure (KV / ring-buffer KV / SSM state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from .attention import (
+    attn_init, attention, cross_decode_attention, cross_kv,
+    decode_attention, init_kv_cache, prefill_attention)
+from .common import (
+    chunked_cross_entropy, cross_entropy, dense_init, embed_init, rmsnorm,
+    rmsnorm_init, softcap)
+from .mamba import init_mamba_state, mamba_apply, mamba_decode, mamba_init
+from .mlp import mlp, mlp_init
+from .moe import moe_apply, moe_init
+from .rglru import init_rglru_state, rglru_apply, rglru_decode, rglru_init
+
+__all__ = [
+    "init_params", "model_apply", "prefill", "decode_step",
+    "init_decode_state",
+]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _layer_init(key, cfg, kind, decoder=False):
+    ks = jax.random.split(key, 6)
+    p = {"norm1": rmsnorm_init(cfg.d_model)}
+    if kind in ("attn", "local", "bidir"):
+        p["mixer"] = attn_init(ks[0], cfg, kind)
+        if cfg.post_norm:
+            p["post1"] = rmsnorm_init(cfg.d_model)
+        p["norm2"] = rmsnorm_init(cfg.d_model)
+        if cfg.moe:
+            p["mlp"] = moe_init(ks[1], cfg)
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff)
+        if cfg.post_norm:
+            p["post2"] = rmsnorm_init(cfg.d_model)
+        if decoder:
+            p["norm_x"] = rmsnorm_init(cfg.d_model)
+            p["cross"] = attn_init(ks[2], cfg, "attn")
+    elif kind == "mamba":
+        p["mixer"] = mamba_init(ks[0], cfg)
+    elif kind == "rglru":
+        p["mixer"] = rglru_init(ks[0], cfg)
+        p["norm2"] = rmsnorm_init(cfg.d_model)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def _stacked_init(key, cfg, n_groups, kinds, decoder=False):
+    """One stacked param tree per cycle position: leaves (G, …)."""
+    out = []
+    for p_idx, kind in enumerate(kinds):
+        keys = jax.random.split(jax.random.fold_in(key, p_idx), n_groups)
+        out.append(jax.vmap(lambda k: _layer_init(k, cfg, kind, decoder))(keys))
+    return tuple(out)
+
+
+def init_params(key, cfg):
+    ks = jax.random.split(key, 8)
+    cyc = cfg.cycle
+    G, tail_n = divmod(cfg.n_layers, len(cyc))
+    params = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+        "blocks": _stacked_init(ks[1], cfg, G, cyc,
+                                decoder=cfg.encoder_decoder) if G else (),
+        "tail": tuple(
+            _layer_init(jax.random.fold_in(ks[2], i), cfg, cyc[i % len(cyc)],
+                        decoder=cfg.encoder_decoder)
+            for i in range(tail_n)),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(ks[3], cfg.vocab, cfg.d_model)
+    if cfg.frontend:
+        params["frontend_proj"] = dense_init(ks[4], cfg.patch_dim, cfg.d_model)
+    if cfg.encoder_decoder:
+        Ge, tail_e = divmod(cfg.n_enc_layers, 1)
+        params["enc_blocks"] = _stacked_init(ks[5], cfg, Ge, ("bidir",))
+        params["enc_norm"] = rmsnorm_init(cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward blocks
+# ---------------------------------------------------------------------------
+def _maybe_post(p, name, y, cfg):
+    if cfg.post_norm and name in p:
+        return rmsnorm(y, p[name], cfg.norm_eps)
+    return y
+
+
+def _block_fwd(p, h, cfg, kind, positions, enc_kv=None, decoder=False):
+    """One block, full-sequence. Returns (h, aux)."""
+    aux = {}
+    hn = rmsnorm(h, p["norm1"], cfg.norm_eps)
+    if kind in ("attn", "local", "bidir"):
+        y = attention(p["mixer"], hn, cfg, kind, positions)
+        h = h + _maybe_post(p, "post1", y, cfg)
+        if decoder and enc_kv is not None:
+            hx = rmsnorm(h, p["norm_x"], cfg.norm_eps)
+            h = h + attention(p["cross"], hx, cfg, "cross", positions,
+                              enc_kv=enc_kv)
+        hn2 = rmsnorm(h, p["norm2"], cfg.norm_eps)
+        if cfg.moe:
+            y2, aux = moe_apply(p["mlp"], hn2, cfg)
+        else:
+            y2 = mlp(p["mlp"], hn2, cfg.mlp)
+        h = h + _maybe_post(p, "post2", y2, cfg)
+    elif kind == "mamba":
+        h = h + mamba_apply(p["mixer"], hn, cfg, chunk=cfg.scan_chunk)
+    elif kind == "rglru":
+        h = h + rglru_apply(p["mixer"], hn, cfg, chunk=cfg.scan_chunk)
+        hn2 = rmsnorm(h, p["norm2"], cfg.norm_eps)
+        h = h + mlp(p["mlp"], hn2, cfg.mlp)
+    h = constrain(h, "batch", None, None)
+    return h, aux
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _run_stack(params, h, cfg, kinds, positions, enc_kv=None, decoder=False):
+    """Scan over cycle groups + unrolled tail. Returns (h, aux_sums)."""
+    aux0 = {"moe_lb": jnp.zeros((), jnp.float32),
+            "moe_z": jnp.zeros((), jnp.float32)}
+
+    def cycle_body(h, group_params):
+        aux_c = dict(aux0)
+        for p_idx, kind in enumerate(kinds):
+            h, aux = _block_fwd(group_params[p_idx], h, cfg, kind, positions,
+                                enc_kv=enc_kv, decoder=decoder)
+            for k, v in aux.items():
+                aux_c[k] = aux_c[k] + v
+        return h, aux_c
+
+    blocks = params["blocks"]
+    aux_tot = dict(aux0)
+    if blocks:
+        body = _remat(cycle_body, cfg)
+        h, auxs = jax.lax.scan(lambda c, xs: body(c, xs), h, blocks)
+        for k in aux_tot:
+            aux_tot[k] = aux_tot[k] + auxs[k].sum()
+    for i, p in enumerate(params["tail"]):
+        kind = kinds[i % len(kinds)]
+        h, aux = _block_fwd(p, h, cfg, kind, positions, enc_kv=enc_kv,
+                            decoder=decoder)
+        for k, v in aux.items():
+            aux_tot[k] = aux_tot[k] + v
+    return h, aux_tot
+
+
+def _encode(params, frames, cfg):
+    """Audio/enc-dec encoder: frames (B, S_src, patch_dim) → enc_out."""
+    h = frames.astype(cfg.compute_dtype) @ params["frontend_proj"].astype(
+        cfg.compute_dtype)
+    h = constrain(h, "batch", None, None)
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, gp):
+        h, _ = _block_fwd(gp[0], h, cfg, "bidir", positions)
+        return h, None
+
+    h, _ = jax.lax.scan(_remat(body, cfg), h, params["enc_blocks"])
+    return rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _logits(params, h, cfg):
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,vd->bsv", h, table.astype(h.dtype))
+    logits = softcap(logits, cfg.final_softcap)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def _embed_tokens(params, tokens, cfg):
+    h = params["embed"].astype(cfg.compute_dtype)[tokens]
+    if cfg.embed_scale:
+        h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+    return constrain(h, "batch", None, None)
+
+
+def model_apply(params, batch, cfg, return_logits=False):
+    """Train/eval forward. batch: tokens/labels (+patches/frames).
+
+    Returns (loss, metrics) or (loss, metrics, logits).
+    """
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    B, S = tokens.shape
+    h = _embed_tokens(params, tokens, cfg)
+    enc_kv = None
+    n_prefix = 0
+    if cfg.family == "vlm":
+        pe = batch["patches"].astype(cfg.compute_dtype) @ \
+            params["frontend_proj"].astype(cfg.compute_dtype)
+        h = jnp.concatenate([pe, h], axis=1)
+        n_prefix = pe.shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((B, n_prefix), -1, labels.dtype), labels], axis=1)
+    if cfg.encoder_decoder:
+        enc_out = _encode(params, batch["frames"], cfg)
+        enc_kv = "per_layer"   # resolved inside blocks via cross_kv
+    St = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(St, dtype=jnp.int32), (B, St))
+
+    if cfg.encoder_decoder:
+        # decoder stack with per-layer cross-attention over enc_out
+        def body(h, gp):
+            p = gp[0]
+            kv = cross_kv(p["cross"], enc_out, cfg)
+            h, aux = _block_fwd(p, h, cfg, "attn", positions, enc_kv=kv,
+                                decoder=True)
+            return h, aux
+        h, auxs = jax.lax.scan(_remat(body, cfg), h, params["blocks"])
+        aux = {k: v.sum() for k, v in auxs.items()}
+    else:
+        h, aux = _run_stack(params, h, cfg, cfg.cycle, positions)
+
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    if return_logits:
+        logits = _logits(params, h, cfg)
+        loss = cross_entropy(logits, labels)
+    else:
+        logits = None
+        loss = chunked_cross_entropy(h, table, labels, cfg,
+                                     chunk=cfg.ce_chunk)
+    metrics = {"loss": loss, **aux}
+    total = loss + 0.01 * aux.get("moe_lb", 0.0) + 1e-3 * aux.get("moe_z", 0.0)
+    if return_logits:
+        return total, metrics, logits
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with cache pytree
+# ---------------------------------------------------------------------------
+def _layer_cache_init(cfg, B, max_len, kind, cache_dtype=jnp.bfloat16):
+    if kind in ("attn", "local", "bidir"):
+        return init_kv_cache(cfg, B, max_len, kind, cache_dtype)
+    if kind == "mamba":
+        return init_mamba_state(cfg, B, cache_dtype)
+    if kind == "rglru":
+        return init_rglru_state(cfg, B, cache_dtype)
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg, B, max_len, src_len=0, cache_dtype=jnp.bfloat16):
+    """Zeroed decode state — also the ShapeDtypeStruct template for the
+    dry-run's serve_step lowering."""
+    cyc = ("attn",) if cfg.encoder_decoder else cfg.cycle
+    n_layers = cfg.n_layers
+    G, tail_n = divmod(n_layers, len(cyc))
+
+    def stacked(kind):
+        one = _layer_cache_init(cfg, B, max_len, kind, cache_dtype)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros((G,) + x.shape, x.dtype), one)
+
+    state = {
+        "pos": jnp.zeros((), jnp.int32),
+        "blocks": tuple(stacked(k) for k in cyc) if G else (),
+        "tail": tuple(_layer_cache_init(cfg, B, max_len, cyc[i % len(cyc)],
+                                        cache_dtype)
+                      for i in range(tail_n)),
+    }
+    if cfg.encoder_decoder:
+        K, hd = cfg.n_kv_heads, cfg.head_dim
+        state["cross"] = (
+            jnp.zeros((G, B, src_len, K, hd), cache_dtype),
+            jnp.zeros((G, B, src_len, K, hd), cache_dtype),
+        )
+    return state
+
+
+def _block_decode(p, h, cfg, kind, cache, pos, cross=None):
+    """One block, one token. Returns (h, new_cache)."""
+    hn = rmsnorm(h, p["norm1"], cfg.norm_eps)
+    if kind in ("attn", "local"):
+        y, cache = decode_attention(p["mixer"], hn, cfg, kind, cache, pos)
+        h = h + _maybe_post(p, "post1", y, cfg)
+        if cross is not None:
+            hx = rmsnorm(h, p["norm_x"], cfg.norm_eps)
+            h = h + cross_decode_attention(p["cross"], hx, cfg, cross)
+        hn2 = rmsnorm(h, p["norm2"], cfg.norm_eps)
+        if cfg.moe:
+            y2, _ = moe_apply(p["mlp"], hn2, cfg)
+        else:
+            y2 = mlp(p["mlp"], hn2, cfg.mlp)
+        h = h + _maybe_post(p, "post2", y2, cfg)
+    elif kind == "mamba":
+        y, cache = mamba_decode(p["mixer"], hn, cfg, cache)
+        h = h + y
+    elif kind == "rglru":
+        y, cache = rglru_decode(p["mixer"], hn, cfg, cache)
+        h = h + y
+        hn2 = rmsnorm(h, p["norm2"], cfg.norm_eps)
+        h = h + mlp(p["mlp"], hn2, cfg.mlp)
+    return h, cache
+
+
+def decode_step(params, tokens, state, cfg):
+    """One decode step. tokens: (B, 1) → (logits (B, vocab), new state)."""
+    pos = state["pos"]
+    h = _embed_tokens(params, tokens, cfg)
+    cyc = ("attn",) if cfg.encoder_decoder else cfg.cycle
+
+    if params["blocks"]:
+        def body(h, xs):
+            if cfg.encoder_decoder:
+                gp, gc, kv = xs
+            else:
+                gp, gc = xs
+                kv = None
+            new_c = []
+            for p_idx, kind in enumerate(cyc):
+                h, c = _block_decode(gp[p_idx], h, cfg, kind, gc[p_idx], pos,
+                                     cross=kv)
+                new_c.append(c)
+            return h, tuple(new_c)
+
+        xs = (params["blocks"], state["blocks"])
+        if cfg.encoder_decoder:
+            xs = xs + (state["cross"],)
+        h, new_blocks = jax.lax.scan(body, h, xs)
+    else:
+        new_blocks = ()
+    new_tail = []
+    for i, p in enumerate(params["tail"]):
+        h, c = _block_decode(p, h, cfg, cyc[i % len(cyc)],
+                             state["tail"][i], pos)
+        new_tail.append(c)
+
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, h, cfg)[:, 0]
+    new_state = {"pos": pos + 1, "blocks": new_blocks,
+                 "tail": tuple(new_tail)}
+    if cfg.encoder_decoder:
+        new_state["cross"] = state["cross"]
+    return logits, new_state
+
+
+def prefill(params, batch, cfg, max_len, cache_dtype=jnp.bfloat16):
+    """Prefill: full forward that returns last-token logits + decode state.
+
+    batch: tokens (B, S) (+patches for vlm, +frames for enc-dec).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = _embed_tokens(params, tokens, cfg)
+    if cfg.family == "vlm" and "patches" in batch:
+        pe = batch["patches"].astype(cfg.compute_dtype) @ \
+            params["frontend_proj"].astype(cfg.compute_dtype)
+        h = jnp.concatenate([pe, h], axis=1)
+    St = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(St, dtype=jnp.int32), (B, St))
+    cyc = ("attn",) if cfg.encoder_decoder else cfg.cycle
+    enc_out = None
+    if cfg.encoder_decoder:
+        enc_out = _encode(params, batch["frames"], cfg)
+
+    def block_prefill(p, h, kind, kv=None):
+        hn = rmsnorm(h, p["norm1"], cfg.norm_eps)
+        cache = None
+        if kind in ("attn", "local"):
+            y, cache = prefill_attention(p["mixer"], hn, cfg, kind,
+                                         positions, max_len, cache_dtype)
+            h = h + _maybe_post(p, "post1", y, cfg)
+            if kv is not None:
+                hx = rmsnorm(h, p["norm_x"], cfg.norm_eps)
+                h = h + attention(p["cross"], hx, cfg, "cross", positions,
+                                  enc_kv=kv)
+            hn2 = rmsnorm(h, p["norm2"], cfg.norm_eps)
+            if cfg.moe:
+                y2, _ = moe_apply(p["mlp"], hn2, cfg)
+            else:
+                y2 = mlp(p["mlp"], hn2, cfg.mlp)
+            h = h + _maybe_post(p, "post2", y2, cfg)
+        elif kind == "mamba":
+            y, hS = _mamba_prefill(p["mixer"], hn, cfg, cache_dtype)
+            h = h + y
+            cache = hS
+        elif kind == "rglru":
+            y, hS = _rglru_prefill(p["mixer"], hn, cfg, cache_dtype)
+            h = h + y
+            cache = hS
+            hn2 = rmsnorm(h, p["norm2"], cfg.norm_eps)
+            h = h + mlp(p["mlp"], hn2, cfg.mlp)
+        return h, cache
+
+    if params["blocks"]:
+        def body(h, gp):
+            caches = []
+            kv = None
+            if cfg.encoder_decoder:
+                kv = cross_kv(gp[0]["cross"], enc_out, cfg)
+            for p_idx, kind in enumerate(cyc):
+                h, c = block_prefill(gp[p_idx], h, kind, kv=kv)
+                caches.append(c)
+            out = (tuple(caches), kv) if cfg.encoder_decoder else tuple(caches)
+            return h, out
+
+        h, ys = jax.lax.scan(body, h, params["blocks"])
+        if cfg.encoder_decoder:
+            new_blocks, cross = ys
+        else:
+            new_blocks, cross = ys, None
+    else:
+        new_blocks, cross = (), None
+    new_tail = []
+    for i, p in enumerate(params["tail"]):
+        h, c = block_prefill(p, h, cyc[i % len(cyc)])
+        new_tail.append(c)
+
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, h[:, -1:], cfg)[:, 0]
+    state = {"pos": jnp.asarray(St, jnp.int32), "blocks": new_blocks,
+             "tail": tuple(new_tail)}
+    if cfg.encoder_decoder:
+        state["cross"] = cross
+    return logits, state
+
+
+def _mamba_prefill(p, x, cfg, cache_dtype):
+    """Mamba forward that also returns the decode state after S tokens."""
+    y = mamba_apply(p, x, cfg, chunk=cfg.scan_chunk)
+    # re-run the conv/state tail cheaply: final conv window + final h.
+    # The final h comes from a second scan pass carrying only the state —
+    # fused by XLA with the main pass under jit.
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xb, _ = jnp.split(xz, 2, axis=-1)
+    xb = constrain(xb, "batch", None, "ff")
+    conv_tail = xb[:, -(cfg.ssm_conv - 1):].astype(cache_dtype)
+    from .mamba import _causal_conv, _split_xdbc
+    xc, _ = _causal_conv(p, xb)
+    xc = jax.nn.silu(xc)
+    xc = constrain(xc, "batch", None, "ff")
+    A = -jnp.exp(p["A_log"])
+
+    def make_ab(ci):
+        dt, Bm, _ = _split_xdbc(p, ci["x"], cfg)
+        dtf = dt.astype(jnp.float32)
+        a = jnp.exp(dtf[..., None] * A)
+        b = (dtf * ci["x"].astype(jnp.float32))[..., None] * \
+            Bm.astype(jnp.float32)[..., None, :]
+        return a, b
+
+    from .scan_ops import chunked_linear_scan
+    _, h_final = chunked_linear_scan(
+        {"x": xc}, jnp.zeros((B, di, cfg.ssm_state), jnp.float32), make_ab,
+        lambda ci, h: h[:, :, 0, 0], chunk=cfg.scan_chunk)
+    return y, {"h": h_final, "conv": conv_tail}
+
+
+def _rglru_prefill(p, x, cfg, cache_dtype):
+    y = rglru_apply(p, x, cfg, chunk=cfg.scan_chunk)
+    B, S, d = x.shape
+    xb = x @ p["in_x"].astype(x.dtype)
+    xb = constrain(xb, "batch", None, "ff")
+    conv_tail = xb[:, -(cfg.ssm_conv - 1):].astype(cache_dtype)
+    from .mamba import _causal_conv
+    from .rglru import _gates
+    xc, _ = _causal_conv(p, xb)
+    xc = constrain(xc, "batch", None, "ff")
+
+    def make_ab(ci):
+        a, bi = _gates(p, ci["x"])
+        return a, bi * ci["x"].astype(jnp.float32)
+
+    from .scan_ops import chunked_linear_scan
+    w = xb.shape[-1]
+    _, h_final = chunked_linear_scan(
+        {"x": xc}, jnp.zeros((B, w), jnp.float32), make_ab,
+        lambda ci, h: h[:, :, 0], chunk=cfg.scan_chunk)
+    return y, {"h": h_final, "conv": conv_tail}

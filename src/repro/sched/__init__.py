@@ -1,0 +1,3 @@
+from .cluster import ClusterScheduler, Job, integerize  # noqa: F401
+from .speedup_models import calibrate_from_dryrun, job_speedup  # noqa: F401
+from .elastic import ElasticTrainer, mesh_for_chips  # noqa: F401

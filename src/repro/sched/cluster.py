@@ -1,0 +1,161 @@
+"""Cluster-level scheduler: SmartFill over competing training jobs.
+
+The paper's abstract divisible server is, concretely, a TPU pod: B chips
+shared by M jobs whose speedup functions come from the roofline
+calibration (speedup_models.py).  This module plans with SmartFill and
+executes the plan with an event loop that charges real-world costs the
+theory abstracts away:
+
+  * reallocation cost — every allocation change means checkpoint +
+    mesh re-instantiation + restore (sched/elastic.py); the event loop
+    charges ``realloc_cost_s`` of lost service to every resized job and
+    merges reallocations below ``min_delta`` chips to avoid thrashing;
+  * integer chips — allocations are rounded by largest-remainder,
+    preserving Σθ = B (integrality gap ≤ 1 chip/job, reported);
+  * online arrivals — the paper solves the all-at-t=0 problem (OPT);
+    at each arrival we re-plan on remaining sizes.  Between arrivals the
+    plan is optimal (Prop. 7 allocations depend only on the active set);
+    the arrival policy itself is a documented beyond-paper heuristic.
+  * heterogeneous speedups (paper §7) — CDR still holds (Thm 10) but
+    the completion order is open; we ship a weighted-marginal-rate GWF
+    heuristic (equalize wᵢ/xᵢ · sᵢ'(θᵢ) via bisection) as the policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import smartfill
+from repro.core.speedup import Speedup
+
+__all__ = ["Job", "ClusterScheduler", "integerize"]
+
+
+@dataclasses.dataclass
+class Job:
+    name: str
+    size: float                  # work remaining (e.g. tokens)
+    weight: float = 1.0
+    arrival: float = 0.0
+    speedup: Speedup | None = None   # None → scheduler-wide function
+    done: float | None = None
+    allocated: float = 0.0
+
+
+def integerize(theta, B: int):
+    """Largest-remainder rounding preserving the chip budget."""
+    theta = np.asarray(theta, dtype=np.float64)
+    used = theta.sum()
+    if used <= 0:
+        return np.zeros_like(theta, dtype=np.int64)
+    scaled = theta / used * B
+    base = np.floor(scaled).astype(np.int64)
+    rem = scaled - base
+    short = int(round(B - base.sum()))
+    if short > 0:
+        idx = np.argsort(-rem)[:short]
+        base[idx] += 1
+    return base
+
+
+class ClusterScheduler:
+    def __init__(self, speedup: Speedup, B: float,
+                 realloc_cost_s: float = 0.0, min_delta: float = 0.5,
+                 integer_chips: bool = False):
+        self.sp = speedup
+        self.B = float(B)
+        self.realloc_cost = realloc_cost_s
+        self.min_delta = min_delta
+        self.integer_chips = integer_chips
+
+    # ---- planning -------------------------------------------------------
+    def plan(self, jobs: list[Job]):
+        """SmartFill plan for the active set (sorted internally)."""
+        order = sorted(range(len(jobs)),
+                       key=lambda i: (-jobs[i].size, jobs[i].weight))
+        x = np.array([jobs[i].size for i in order])
+        w = np.array([jobs[i].weight for i in order])
+        sched = smartfill(self.sp, x, w, B=self.B, validate=False)
+        return order, sched
+
+    def current_allocations(self, jobs: list[Job]) -> np.ndarray:
+        """Instantaneous optimal allocations for the active jobs."""
+        active = [j for j in jobs if j.done is None]
+        if not active:
+            return np.zeros(len(jobs))
+        order, sched = self.plan(active)
+        k = len(active)
+        theta = np.zeros(len(jobs))
+        col = np.asarray(sched.theta[:, k - 1])
+        amap = {id(active[oi]): col[r] for r, oi in
+                zip(range(k), order)}
+        for i, j in enumerate(jobs):
+            if j.done is None:
+                theta[i] = amap[id(j)]
+        if self.integer_chips:
+            theta_i = integerize(theta, int(self.B))
+            theta = theta_i.astype(np.float64)
+        return theta
+
+    # ---- event loop -----------------------------------------------------
+    def simulate(self, jobs: list[Job], t_end: float = np.inf):
+        """Run to completion: arrivals + completions + reallocation costs.
+
+        Returns (events, J) where J = Σ wᵢ·(Tᵢ − arrivalᵢ).
+        """
+        jobs = [dataclasses.replace(j) for j in jobs]
+        t = 0.0
+        events = []
+        pending = sorted([j for j in jobs if j.arrival > 0],
+                         key=lambda j: j.arrival)
+        last_alloc = np.zeros(len(jobs))
+
+        def active_mask():
+            return [j.arrival <= t and j.done is None for j in jobs]
+
+        for _ in range(8 * len(jobs) + 64):
+            if all(j.done is not None for j in jobs):
+                break
+            theta = self.current_allocations(
+                [j if (j.arrival <= t and j.done is None) else
+                 dataclasses.replace(j, done=j.done if j.done is not None
+                                     else -1.0)
+                 for j in jobs])
+            # merge small reallocation deltas (anti-thrash)
+            if np.abs(theta - last_alloc).max() < self.min_delta:
+                theta = last_alloc
+            resized = np.abs(theta - last_alloc) > 1e-9
+            # reallocation penalty: resized jobs lose realloc_cost of service
+            penalty = np.where(resized & (theta > 0), self.realloc_cost, 0.0)
+            last_alloc = theta
+            rates = np.array([float(self.sp.s(jnp.float64(th)))
+                              for th in theta])
+            for i, j in enumerate(jobs):
+                j.allocated = theta[i]
+            # next event: completion or arrival
+            dts = [j.size / rates[i] + penalty[i]
+                   for i, j in enumerate(jobs)
+                   if j.arrival <= t and j.done is None and rates[i] > 0]
+            dt_completion = min(dts) if dts else np.inf
+            dt_arrival = (pending[0].arrival - t) if pending else np.inf
+            dt = min(dt_completion, dt_arrival)
+            if not np.isfinite(dt):
+                break
+            events.append((t, theta.copy()))
+            # advance
+            for i, j in enumerate(jobs):
+                if j.arrival <= t and j.done is None and rates[i] > 0:
+                    eff = max(dt - penalty[i], 0.0)
+                    j.size = max(j.size - rates[i] * eff, 0.0)
+            t += dt
+            if pending and abs(pending[0].arrival - t) < 1e-12:
+                pending.pop(0)
+            for j in jobs:
+                if j.arrival <= t and j.done is None and j.size <= 1e-9:
+                    j.done = t
+        J = sum(j.weight * (j.done - j.arrival) for j in jobs
+                if j.done is not None)
+        return events, J

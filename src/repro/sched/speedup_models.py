@@ -1,0 +1,61 @@
+"""Roofline-calibrated speedup functions — the paper ↔ framework bridge.
+
+A data-parallel training job on θ TPU chips has step time
+
+    t(θ) = F/(θ·R) + (1 − overlap) · 2·P·(θ−1)/(θ·W)
+
+(F = per-step FLOPs, R = chip peak, P = gradient bytes, W = link bw; the
+(θ−1)/θ factor is the ring all-reduce).  Its throughput-vs-chips speedup
+s(θ) = D/t(θ) is therefore ``a·z^p − a·(θ+z)^p`` with p = −1 — row 3 of
+the paper's Table 1, i.e. a *regular* speedup function: SmartFill has a
+closed form for real cluster workloads.
+
+``calibrate_from_dryrun`` builds one such function per (arch × shape)
+cell directly from the dry-run's measured (flops, collective bytes) —
+the roofline machinery feeding the scheduler its inputs.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.core.speedup import RegularSpeedup, from_roofline
+
+__all__ = ["calibrate_from_dryrun", "job_speedup"]
+
+
+def job_speedup(step_flops: float, grad_bytes: float, tokens_per_step: float,
+                B: float, peak_flops: float = 197e12, link_bw: float = 50e9,
+                overlap: float = 0.0) -> RegularSpeedup:
+    """Speedup function of one DP job from its roofline terms."""
+    return from_roofline(tokens_per_step=tokens_per_step,
+                         step_flops=step_flops, grad_bytes=grad_bytes,
+                         B=B, peak_flops=peak_flops, link_bw=link_bw,
+                         overlap=overlap)
+
+
+def calibrate_from_dryrun(dryrun_json: str, B: float = 256.0,
+                          overlap: float = 0.0) -> dict:
+    """One calibrated speedup function per dry-run cell.
+
+    Returns {(arch, shape): RegularSpeedup}.  step_flops uses the
+    per-device HLO flops × devices (whole-job work); grad bytes ≈ 2 bytes
+    per (active) parameter for a bf16 gradient all-reduce.
+    """
+    with open(dryrun_json) as f:
+        cells = json.load(f)
+    out = {}
+    for cell in cells:
+        if not cell.get("ok"):
+            continue
+        step_flops = cell["flops_per_dev"] * cell["n_devices"]
+        grad_bytes = 2.0 * cell["active_params"]
+        if cell["shape"] == "train_4k":
+            tokens = 256 * 4096
+        elif cell["shape"] == "prefill_32k":
+            tokens = 32 * 32768
+        else:
+            tokens = cell.get("global_batch", 128)
+        out[(cell["arch"], cell["shape"])] = job_speedup(
+            step_flops=step_flops, grad_bytes=grad_bytes,
+            tokens_per_step=tokens, B=B, overlap=overlap)
+    return out

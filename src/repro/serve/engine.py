@@ -1,0 +1,68 @@
+"""Batched serving engine: prefill + decode loop with sampling.
+
+``make_serve_step`` builds the single-token decode program that the
+dry-run lowers for every decode shape; ``ServeEngine`` drives it for the
+runnable examples (greedy / temperature sampling, batched requests).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_decode_state, prefill
+
+__all__ = ["make_serve_step", "make_prefill", "ServeEngine"]
+
+
+def make_serve_step(cfg):
+    """serve_step(params, tokens (B,1), state) → (logits, state)."""
+
+    def step(params, tokens, state):
+        return decode_step(params, tokens, state, cfg)
+
+    return step
+
+
+def make_prefill(cfg, max_len: int):
+    def run(params, batch):
+        return prefill(params, batch, cfg, max_len=max_len)
+
+    return run
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: object
+    params: object
+    max_len: int
+    temperature: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill(self.cfg, self.max_len))
+        self._step = jax.jit(make_serve_step(self.cfg))
+
+    def _sample(self, logits, key):
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / self.temperature, axis=-1)
+
+    def generate(self, batch: dict, n_tokens: int) -> np.ndarray:
+        """Prefill on batch['tokens'] (B, S) then decode n_tokens greedily.
+
+        Returns (B, n_tokens) int32."""
+        logits, state = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(self.seed)
+        B = batch["tokens"].shape[0]
+        out = []
+        tok = self._sample(logits, key).astype(jnp.int32).reshape(B, 1)
+        out.append(tok)
+        for i in range(n_tokens - 1):
+            key, sub = jax.random.split(key)
+            logits, state = self._step(self.params, tok, state)
+            tok = self._sample(logits, sub).astype(jnp.int32).reshape(B, 1)
+            out.append(tok)
+        return np.asarray(jnp.concatenate(out, axis=1))

@@ -1,0 +1,133 @@
+"""Fault-tolerance substrate for 1000+-node runs.
+
+Layers (each independently usable):
+  * in-step NaN/Inf guard — lives inside train_step (optim.adamw_update
+    ``skip``): a poisoned gradient advances nothing, the step is retried
+    with the next batch.  Zero-cost when healthy.
+  * RetryableStep — host-side wrapper that catches device/runtime errors
+    (preempted slice, interconnect hiccup), restores the last checkpoint
+    and replays.  Deterministic data (data/pipeline.py is stateless in
+    the step index) makes replay exact.
+  * HeartbeatMonitor — per-host step heartbeats with a deadline;
+    stragglers (slow hosts) and dead hosts are flagged so the controller
+    can trigger an elastic restart (sched/elastic.py) onto the healthy
+    subset.  On a real multi-host deployment the heartbeat file lives on
+    shared storage; the logic is identical.
+  * CheckpointHook — periodic async checkpoints (train/checkpoint.py).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+from . import checkpoint as ckpt
+
+__all__ = ["CheckpointHook", "HeartbeatMonitor", "RetryableStep"]
+
+
+class CheckpointHook:
+    def __init__(self, ckpt_dir: str, every: int = 100, keep: int = 3,
+                 asynchronous: bool = True):
+        self.dir = ckpt_dir
+        self.every = every
+        self.keep = keep
+        self.asynchronous = asynchronous
+
+    def __call__(self, step, metrics, state):
+        if step % self.every:
+            return
+        tree = {"params": state.params, "opt": state.opt_state}
+        extra = {"step": step, "loss": metrics.get("loss")}
+        if self.asynchronous:
+            ckpt.save_async(self.dir, step, tree, extra)
+        else:
+            ckpt.save(self.dir, step, tree, extra)
+        self._gc()
+
+    def _gc(self):
+        if not os.path.isdir(self.dir):
+            return
+        steps = sorted(d for d in os.listdir(self.dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[: -self.keep]:
+            import shutil
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+
+class HeartbeatMonitor:
+    """Per-host step heartbeats; flags stragglers past a deadline.
+
+    deadline_factor: a host is a straggler when its inter-step time
+    exceeds factor × the fleet median.
+    """
+
+    def __init__(self, n_hosts: int = 1, deadline_factor: float = 3.0,
+                 host_id: int | None = None):
+        self.n_hosts = n_hosts
+        self.factor = deadline_factor
+        self.host_id = host_id if host_id is not None else jax.process_index()
+        self.last_beat = {h: time.monotonic() for h in range(n_hosts)}
+        self.intervals = {h: [] for h in range(n_hosts)}
+
+    def beat(self, host: int | None = None):
+        h = self.host_id if host is None else host
+        now = time.monotonic()
+        self.intervals[h].append(now - self.last_beat[h])
+        self.last_beat[h] = now
+
+    def stragglers(self) -> list[int]:
+        meds = []
+        for h in range(self.n_hosts):
+            iv = self.intervals[h][-16:]
+            if iv:
+                meds.append(sorted(iv)[len(iv) // 2])
+        if not meds:
+            return []
+        fleet_med = sorted(meds)[len(meds) // 2]
+        now = time.monotonic()
+        out = []
+        for h in range(self.n_hosts):
+            silent = now - self.last_beat[h]
+            if silent > self.factor * max(fleet_med, 1e-3):
+                out.append(h)
+        return out
+
+    def __call__(self, step, metrics, state):
+        self.beat()
+
+
+class RetryableStep:
+    """Wraps a train step with checkpoint-restore-replay on device error.
+
+    On failure: reload the latest checkpoint, fast-forward the data
+    iterator (deterministic pipeline ⇒ exact replay), re-raise after
+    ``max_retries`` consecutive failures.
+    """
+
+    def __init__(self, step_fn, ckpt_dir: str, template, max_retries: int = 3):
+        self.step_fn = step_fn
+        self.ckpt_dir = ckpt_dir
+        self.template = template
+        self.max_retries = max_retries
+        self.failures = 0
+
+    def __call__(self, state, batch):
+        try:
+            out = self.step_fn(state.params, state.opt_state, batch)
+            self.failures = 0
+            return out, state.step + 1
+        except (jax.errors.JaxRuntimeError, RuntimeError) as e:  # noqa: B902
+            self.failures += 1
+            if self.failures > self.max_retries:
+                raise
+            path = ckpt.latest(self.ckpt_dir)
+            if path is None:
+                raise RuntimeError("step failed with no checkpoint") from e
+            tree, manifest = ckpt.restore(
+                path, {"params": state.params, "opt": state.opt_state})
+            state.params = tree["params"]
+            state.opt_state = tree["opt"]
+            state.step = manifest["step"]
+            return None, state.step

@@ -1,0 +1,122 @@
+"""Training step + loop: microbatch gradient accumulation, NaN guard,
+metric aggregation.  ``make_train_step`` is what launch/dryrun.py lowers
+for every (arch × train shape × mesh) cell.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import model_apply
+from .optim import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+__all__ = ["make_train_step", "train_loop", "TrainState"]
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, microbatches: int = 1,
+                    compression=None) -> Callable:
+    """Build train_step(params, opt_state, batch) → (params, opt, metrics).
+
+    microbatches > 1 accumulates grads over a lax.scan of micro-slices —
+    the activation-memory lever for the big train shapes.
+    ``compression`` (distributed/compression.py) wraps the grad pytree in
+    a quantize→psum→dequantize round for the cross-pod axis.
+    """
+
+    cast = jnp.dtype(cfg.dtype) if cfg.dtype != "float32" else None
+
+    def loss_fn(params, batch):
+        if cast is not None:
+            # one-shot mixed-precision cast BEFORE the layer stack: FSDP
+            # all-gathers (and every backward re-gather) move bf16, not
+            # f32 — halves the dominant collective on every train cell.
+            # Masters stay f32 in the optimizer; grads flow back through
+            # the cast and accumulate in f32.
+            params = jax.tree_util.tree_map(
+                lambda p: p.astype(cast)
+                if p.dtype == jnp.float32 else p, params)
+        loss, metrics = model_apply(params, batch, cfg)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state: AdamWState, batch):
+        batch = jax.tree_util.tree_map(
+            lambda x: constrain(x, "batch", None, None), batch)
+        if microbatches > 1:
+            def micro(x):
+                B = x.shape[0]
+                return x.reshape(microbatches, B // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree_util.tree_map(micro, batch)
+
+            def acc_step(carry, mb_i):
+                (loss_acc, grads_acc) = carry
+                (loss, metrics), grads = grad_fn(params, mb_i)
+                grads = jax.tree_util.tree_map(jnp.add, grads_acc, grads)
+                return (loss_acc + loss, grads), metrics
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), metrics = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zero_g), mb)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        if compression is not None:
+            grads = compression(grads)
+        # fault tolerance: skip poisoned updates instead of corrupting state
+        bad = ~jnp.isfinite(loss)
+        for g in jax.tree_util.tree_leaves(grads):
+            bad = bad | ~jnp.all(jnp.isfinite(g))
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params, skip=bad)
+        metrics = {**metrics, **opt_metrics, "loss": loss,
+                   "skipped": bad.astype(jnp.float32)}
+        return params, opt_state, metrics
+
+    return step
+
+
+class TrainState:
+    """Host-side training state bundle (params + optimizer + step)."""
+
+    def __init__(self, params, opt_state, step: int = 0):
+        self.params = params
+        self.opt_state = opt_state
+        self.step = step
+
+    @classmethod
+    def create(cls, params):
+        return cls(params, adamw_init(params), 0)
+
+
+def train_loop(cfg, opt_cfg, state: TrainState, data_iter, n_steps,
+               train_step=None, hooks=(), log_every: int = 10):
+    """Run ``n_steps``; hooks(step, metrics, state) fire post-step —
+    checkpointing, straggler heartbeats and NaN telemetry plug in here."""
+    step_fn = train_step or jax.jit(make_train_step(cfg, opt_cfg))
+    history = []
+    for _ in range(n_steps):
+        batch = next(data_iter)
+        t0 = time.perf_counter()
+        state.params, state.opt_state, metrics = step_fn(
+            state.params, state.opt_state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        metrics["step_time_s"] = time.perf_counter() - t0
+        state.step += 1
+        history.append(metrics)
+        for hook in hooks:
+            hook(state.step, metrics, state)
+        if log_every and state.step % log_every == 0:
+            print(f"step {state.step}: loss={metrics['loss']:.4f} "
+                  f"gnorm={metrics.get('grad_norm', 0):.3f} "
+                  f"({metrics['step_time_s']*1e3:.0f} ms)")
+    return history

@@ -1,0 +1,104 @@
+"""AdamW optimizer + LR schedules — pure-JAX, pytree-native.
+
+Optimizer state lives in f32 regardless of param dtype; its sharding
+follows the parameters (FSDP), which the dry-run verifies at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params,
+                 skip: jnp.ndarray | None = None):
+    """One AdamW step.  ``skip`` (bool scalar) freezes the update — the
+    fault-tolerance NaN guard: a poisoned step advances nothing."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = cosine_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m_n = b1 * m + (1 - b1) * g
+        v_n = b2 * v + (1 - b2) * g * g
+        mh = m_n / (1 - b1 ** step.astype(jnp.float32))
+        vh = v_n / (1 - b2 ** step.astype(jnp.float32))
+        delta = lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                      + cfg.weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - delta).astype(p.dtype), m_n, v_n
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    new = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = [n[0] for n in new]
+    new_m = [n[1] for n in new]
+    new_v = [n[2] for n in new]
+    if skip is not None:
+        keep = lambda a, b: jax.tree_util.tree_map(
+            lambda x, y: jnp.where(skip, x, y), a, b)
+        new_p = keep(flat_p, new_p)
+        new_m = keep(flat_m, new_m)
+        new_v = keep(flat_v, new_v)
+        step = jnp.where(skip, state.step, step)
+    unf = treedef.unflatten
+    return (unf(new_p),
+            AdamWState(step=step, mu=unf(new_m), nu=unf(new_v)),
+            {"grad_norm": gnorm, "lr": lr})

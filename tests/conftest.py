@@ -1,0 +1,11 @@
+"""Shared test config.
+
+float64 is enabled globally: the scheduler core is validated to reference
+precision, and model code pins its own dtypes explicitly so it is
+unaffected.  (XLA_FLAGS / device-count manipulation is deliberately NOT
+done here — smoke tests must see the real single-device CPU backend; only
+launch/dryrun.py requests 512 placeholder devices, in its own process.)
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

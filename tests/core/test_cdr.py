@@ -1,0 +1,77 @@
+"""CDR Rule tests (Thm 1, Thm 2, Cor 2.1) — including hypothesis sweeps
+over random instances, and sensitivity (perturbed schedules must violate)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    cdr_violation,
+    estimate_constants,
+    log_speedup,
+    neg_power,
+    power,
+    shifted_power,
+    smartfill,
+)
+
+B = 10.0
+SPS = {
+    "power": power(1.0, 0.5, B),
+    "shifted": shifted_power(1.0, 4.0, 0.5, B),
+    "log": log_speedup(1.0, 1.0, B),
+    "neg_power": neg_power(5.0, 2.0, -1.0, B),
+}
+
+
+@pytest.mark.parametrize("name", list(SPS))
+def test_smartfill_satisfies_cdr(name):
+    x = np.arange(9, 0, -1.0)
+    w = 1.0 / x
+    sf = smartfill(SPS[name], x, w, B=B)
+    v = cdr_violation(SPS[name], sf.theta)
+    assert v["ratio"] < 1e-6
+    assert v["park"] < 1e-8
+
+
+def test_estimated_constants_match_internal():
+    sp = SPS["shifted"]
+    x = np.arange(8, 0, -1.0)
+    w = 1.0 / x
+    sf = smartfill(sp, x, w, B=B)
+    c_est = estimate_constants(sp, sf.theta)
+    c_int = np.array(sf.c)
+    m = np.isfinite(c_est)
+    np.testing.assert_allclose(c_est[m], c_int[m] / c_int[0], rtol=1e-6)
+
+
+def test_perturbed_schedule_violates_cdr():
+    sp = SPS["power"]
+    x = np.arange(6, 0, -1.0)
+    w = 1.0 / x
+    sf = smartfill(sp, x, w, B=B)
+    th = np.array(sf.theta)
+    # move 20% of job 1's phase-5 allocation to job 2 (keeps feasibility)
+    d = 0.2 * th[0, 5]
+    th[0, 5] -= d
+    th[1, 5] += d
+    v = cdr_violation(sp, th)
+    assert v["ratio"] > 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+    fam=st.sampled_from(list(SPS)),
+)
+def test_cdr_property_random_instances(m, seed, fam):
+    """Property: for random sizes/weights (admissibly ordered), the
+    SmartFill schedule always satisfies the CDR rule and Prop. 9."""
+    rng = np.random.default_rng(seed)
+    x = np.sort(rng.uniform(0.5, 20.0, size=m))[::-1].copy()
+    w = np.sort(rng.uniform(0.1, 5.0, size=m)).copy()
+    sf = smartfill(SPS[fam], x, w, B=B)
+    v = cdr_violation(SPS[fam], sf.theta)
+    assert v["ratio"] < 1e-5
+    assert v["park"] < 1e-6
+    assert abs(sf.J - sf.J_linear) / max(sf.J, 1e-12) < 1e-6

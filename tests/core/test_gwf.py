@@ -1,0 +1,108 @@
+"""GWF / CAP tests — Theorem 6 (existence & uniqueness) and constraints
+(9a)–(9d), including hypothesis property sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GenericSpeedup,
+    log_speedup,
+    neg_power,
+    power,
+    shifted_power,
+)
+from repro.core.gwf import cap_residual, solve_cap, solve_cap_generic
+
+B = 10.0
+
+FAMILIES = {
+    "power": power(1.0, 0.5, B),
+    "shifted": shifted_power(1.0, 4.0, 0.5, B),
+    "log": log_speedup(1.0, 1.0, B),
+    "neg_power": neg_power(1.0, 1.0, -1.0, B),
+}
+
+
+def _check(sp, b, c, tol=1e-7):
+    th = solve_cap(sp, b, jnp.asarray(c))
+    res = cap_residual(sp, b, jnp.asarray(c), th)
+    assert float(res["budget"]) < tol * max(1.0, b), res
+    assert float(res["order"]) < tol, res
+    assert float(res["ratio"]) < 1e-5, res
+    assert float(res["park"]) < 1e-6, res
+    return th
+
+
+@pytest.mark.parametrize("name", list(FAMILIES))
+@pytest.mark.parametrize("b", [0.5, 3.0, 10.0])
+def test_cap_constraints(name, b):
+    c = jnp.array([1.0, 0.7, 0.45, 0.2, 0.08])
+    _check(FAMILIES[name], b, c)
+
+
+def test_parking_happens_iff_finite_ds0():
+    # log family parks low-priority jobs at small budgets …
+    th = solve_cap(log_speedup(1.0, 1.0, B), 1.0,
+                   jnp.array([1.0, 0.2, 0.05]))
+    assert float(th[0]) == 0.0 and float(th[2]) > 0.0
+    # … the power family never parks (s'(0)=∞)
+    th = solve_cap(power(1.0, 0.5, B), 1.0, jnp.array([1.0, 0.2, 0.05]))
+    assert np.all(np.array(th) > 0.0)
+
+
+@pytest.mark.parametrize("name", ["shifted", "log", "neg_power"])
+def test_generic_path_matches_closed_form(name):
+    """Uniqueness (Prop. 5): bisection and closed form must agree."""
+    sp = FAMILIES[name]
+    c = jnp.array([1.0, 0.66, 0.3, 0.11])
+    for b in (0.7, 4.0, 9.5):
+        ref = solve_cap(sp, b, c)                       # closed form
+        gen = solve_cap_generic(sp, b, c, iters=128)    # bisection
+        np.testing.assert_allclose(np.array(gen), np.array(ref),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_nonregular_generic_speedup():
+    # s(θ) = θ^0.5 + ln(1+θ) — the paper's example of a hard non-regular s
+    sp = GenericSpeedup(
+        s_fn=lambda t: jnp.sqrt(t) + jnp.log1p(t),
+        ds_fn=lambda t: 0.5 / jnp.sqrt(jnp.maximum(t, 1e-300)) + 1.0 / (1.0 + t),
+        B=B,
+    )
+    c = jnp.array([1.0, 0.5, 0.25])
+    th = solve_cap(sp, 5.0, c, iters=128)
+    res = cap_residual(sp, 5.0, c, th)
+    assert float(res["budget"]) < 1e-6
+    assert float(res["ratio"]) < 1e-4
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.floats(0.05, 10.0),
+    raw=st.lists(st.floats(0.01, 1.0), min_size=2, max_size=8),
+    fam=st.sampled_from(list(FAMILIES)),
+)
+def test_cap_property(b, raw, fam):
+    """Property: for any budget and any admissible c-vector, GWF returns a
+    feasible CAP solution (all four constraint groups)."""
+    c = np.sort(np.asarray(raw, dtype=np.float64))[::-1]
+    c = c / c[0]
+    _check(FAMILIES[fam], float(b), jnp.asarray(c.copy()), tol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.floats(0.1, 10.0),
+    k=st.integers(2, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cap_budget_monotone(b, k, seed):
+    """Property: each θ_i is non-decreasing in the budget b (water rises)."""
+    rng = np.random.default_rng(seed)
+    c = np.sort(rng.uniform(0.05, 1.0, size=k))[::-1]
+    c[0] = 1.0
+    sp = FAMILIES["log"]
+    th1 = np.array(solve_cap(sp, float(b) * 0.7, jnp.asarray(c)))
+    th2 = np.array(solve_cap(sp, float(b), jnp.asarray(c)))
+    assert np.all(th2 - th1 >= -1e-8)

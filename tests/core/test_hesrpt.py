@@ -1,0 +1,48 @@
+"""heSRPT baseline tests: Berg closed form, power-law fits, open loop."""
+import numpy as np
+import pytest
+
+from repro.core import fit_power, hesrpt_allocations, power, smartfill
+from repro.core.hesrpt import hesrpt_open_loop
+
+B = 10.0
+
+
+@pytest.mark.parametrize("p", [0.3, 0.5, 0.8])
+@pytest.mark.parametrize("M", [3, 7])
+def test_closed_form_matches_smartfill_allocations(p, M):
+    """heSRPT's scale-free shares == SmartFill's phase-M column on s=θ^p."""
+    sp = power(1.0, p, B)
+    x = np.arange(M, 0, -1.0)
+    w = 1.0 / x
+    sf = smartfill(sp, x, w, B=B)
+    ours = np.array(sf.theta[:, M - 1])
+    berg = hesrpt_allocations(w, p, B)
+    np.testing.assert_allclose(ours, berg, rtol=1e-6, atol=1e-8)
+
+
+def test_limits():
+    w = np.array([0.2, 0.5, 1.0])
+    # p→1: pure SRPT — everything to the smallest job (last index)
+    th = hesrpt_allocations(w, 0.999, B)
+    assert th[-1] > 0.99 * B
+    # p→0: allocation ∝ weight
+    th = hesrpt_allocations(w, 1e-4, B)
+    np.testing.assert_allclose(th, B * w / w.sum(), rtol=1e-3)
+
+
+def test_fit_reproduces_paper_constants():
+    a, p = fit_power(lambda t: np.log1p(t), B)
+    assert abs(a - 0.79) < 0.05 and abs(p - 0.48) < 0.05   # Fig. 7
+    a, p = fit_power(lambda t: np.sqrt(4 + t) - 2, B)
+    assert abs(a - 0.26) < 0.02 and abs(p - 0.82) < 0.03   # Fig. 9
+
+
+def test_open_loop_self_consistent_on_power():
+    """With the exact model the open-loop plan is optimal — no penalty."""
+    sp = power(1.0, 0.5, B)
+    x = np.arange(12, 0, -1.0)
+    w = 1.0 / x
+    sf = smartfill(sp, x, w, B=B)
+    _, J = hesrpt_open_loop(sp, x, w, 0.5, 1.0, B)
+    assert abs(J - sf.J) / sf.J < 1e-9

@@ -1,0 +1,187 @@
+"""SmartFill end-to-end tests: optimality, structure, paper figures."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    cdr_violation,
+    hesrpt_policy,
+    log_speedup,
+    neg_power,
+    power,
+    schedule_policy,
+    shifted_power,
+    simulate_policy,
+    smartfill,
+    smartfill_sim_policy,
+)
+
+B = 10.0
+
+
+def slowdown_instance(M):
+    x = np.arange(M, 0, -1.0)
+    return x, 1.0 / x
+
+
+# ---------------------------------------------------------------------------
+# Paper Figs. 4 & 5: on s = aθ^p SmartFill must equal heSRPT exactly
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("a,p", [(1.0, 0.5), (10.0, 0.8)])
+@pytest.mark.parametrize("M", [5, 20, 60])
+def test_fig4_fig5_equals_hesrpt(a, p, M):
+    sp = power(a, p, B)
+    x, w = slowdown_instance(M)
+    sf = smartfill(sp, x, w, B=B)
+    he = simulate_policy(sp, x, w, hesrpt_policy(p, B))
+    assert abs(sf.J - he.J) / he.J < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Paper Figs. 6 & 8: SmartFill strictly beats approximation-based heSRPT,
+# gap grows with M
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sp,p_fit", [
+    (log_speedup(1.0, 1.0, B), 0.48),          # Fig. 6/7
+    (shifted_power(1.0, 4.0, 0.5, B), 0.82),    # Fig. 8/9
+])
+def test_fig6_fig8_beats_hesrpt(sp, p_fit):
+    gaps = []
+    for M in (10, 50, 100):
+        x, w = slowdown_instance(M)
+        sf = smartfill(sp, x, w, B=B)
+        he = simulate_policy(sp, x, w, hesrpt_policy(p_fit, B))
+        assert sf.J < he.J
+        gaps.append((he.J - sf.J) / he.J)
+    assert gaps[-1] > gaps[0]          # widening with M, as in the figures
+
+
+# ---------------------------------------------------------------------------
+# Structural properties
+# ---------------------------------------------------------------------------
+SPS = {
+    "power": power(1.0, 0.5, B),
+    "shifted": shifted_power(1.0, 4.0, 0.5, B),
+    "log": log_speedup(1.0, 1.0, B),
+    "neg_power": neg_power(5.0, 2.0, -1.0, B),
+}
+
+
+@pytest.mark.parametrize("name", list(SPS))
+def test_structure(name):
+    sp = SPS[name]
+    x, w = slowdown_instance(12)
+    sf = smartfill(sp, x, w, B=B)
+    th = np.array(sf.theta)
+    # upper-triangular, columns sum to B, ordered within column
+    assert np.allclose(np.tril(th, -1), 0.0)
+    assert np.allclose(th.sum(axis=0), B, rtol=1e-8)
+    for j in range(12):
+        col = th[: j + 1, j]
+        assert np.all(np.diff(col) >= -1e-8)
+    # Prop 9: J = Σ a_i x_i, a increasing; Cor 2.1: c non-increasing
+    assert abs(sf.J - sf.J_linear) / sf.J < 1e-8
+    assert np.all(np.diff(np.array(sf.a)) > -1e-12)
+    assert np.all(np.diff(np.array(sf.c)) <= 1e-12)
+    # SJF completion order (Prop 8)
+    assert np.all(np.diff(np.array(sf.T)) < 1e-12)
+    # CDR rule (Thms 1 & 2)
+    v = cdr_violation(sp, sf.theta)
+    assert v["ratio"] < 1e-6 and v["park"] < 1e-8
+
+
+@pytest.mark.parametrize("name", list(SPS))
+def test_execution_matches_prediction(name):
+    """Run the schedule through the event simulator under the true s."""
+    sp = SPS[name]
+    x, w = slowdown_instance(15)
+    sf = smartfill(sp, x, w, B=B)
+    res = simulate_policy(sp, x, w, schedule_policy(sp, sf, x))
+    assert abs(res.J - sf.J) / sf.J < 1e-9
+    np.testing.assert_allclose(res.T, np.array(sf.T), rtol=1e-9)
+
+
+def test_time_consistency():
+    """Re-planning SmartFill at every completion reproduces the one-shot J."""
+    sp = SPS["log"]
+    x, w = slowdown_instance(8)
+    sf = smartfill(sp, x, w, B=B)
+    res = simulate_policy(sp, x, w, smartfill_sim_policy(sp, B))
+    assert abs(res.J - sf.J) / sf.J < 1e-6
+
+
+def test_parking_occurs_for_finite_ds0():
+    """The qualitatively-new behavior vs heSRPT: some active jobs get 0."""
+    sp = SPS["log"]
+    x, w = slowdown_instance(10)
+    sf = smartfill(sp, x, w, B=B)
+    th = np.array(sf.theta)
+    parked = [(i, j) for j in range(10) for i in range(j + 1)
+              if th[i, j] == 0.0]
+    assert parked, "log speedup at these sizes must park at least one job"
+    # power never parks
+    th2 = np.array(smartfill(SPS["power"], x, w, B=B).theta)
+    for j in range(10):
+        assert np.all(th2[: j + 1, j] > 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Optimality vs independent optimizers
+# ---------------------------------------------------------------------------
+def _brute_force_m2(sp, x, w, n=40001):
+    s = lambda t: np.array(sp.s(jnp.asarray(np.maximum(t, 0.0))))
+    mus = np.linspace(B * 1e-7, B, n)
+    sB = float(sp.s(jnp.float64(B)))
+    J = (w[1] * x[1] / s(mus)
+         + w[0] * (x[1] / s(mus) + (x[0] - s(B - mus) * x[1] / s(mus)) / sB))
+    return float(np.nanmin(J))
+
+
+@pytest.mark.parametrize("name", list(SPS))
+def test_optimal_m2(name):
+    sp = SPS[name]
+    x = np.array([2.0, 1.0])
+    w = 1.0 / x
+    sf = smartfill(sp, x, w, B=B)
+    ref = _brute_force_m2(sp, x, w)
+    assert sf.J <= ref * (1 + 1e-6)
+    assert abs(sf.J - ref) / ref < 1e-4
+
+
+def _direct_opt(sp, x, w, seeds=3, steps=2500, lr=0.05):
+    M = len(x)
+    xj, wj = jnp.asarray(x), jnp.asarray(w)
+    mask = jnp.triu(jnp.ones((M, M)))
+
+    def J_of(logits):
+        z = jnp.where(mask > 0, logits, -1e9)
+        theta = jax.nn.softmax(z, axis=0) * B
+        rate = sp.s(theta) * mask
+        d = jnp.maximum(
+            jax.scipy.linalg.solve_triangular(jnp.triu(rate), xj, lower=False), 0.0)
+        T = jnp.cumsum(d[::-1])[::-1]
+        return jnp.sum(wj * T)
+
+    gj = jax.jit(jax.value_and_grad(J_of))
+    best = np.inf
+    for sd in range(seeds):
+        logits = jax.random.normal(jax.random.PRNGKey(sd), (M, M)) * 2.0
+        m = jnp.zeros_like(logits)
+        v = jnp.zeros_like(logits)
+        for t in range(1, steps + 1):
+            _, g = gj(logits)
+            m = 0.9 * m + 0.1 * g
+            v = 0.999 * v + 0.001 * g * g
+            logits -= lr * (m / (1 - 0.9**t)) / (jnp.sqrt(v / (1 - 0.999**t)) + 1e-9)
+        best = min(best, float(gj(logits)[0]))
+    return best
+
+
+@pytest.mark.parametrize("name", ["log", "shifted"])
+def test_optimal_direct_m4(name):
+    sp = SPS[name]
+    x, w = slowdown_instance(4)
+    sf = smartfill(sp, x, w, B=B)
+    ref = _direct_opt(sp, x, w)
+    assert sf.J <= ref + 1e-4 * ref

@@ -1,0 +1,62 @@
+"""Water-filling kernel: interpret-mode sweep vs oracle + core CAP."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import log_speedup, shifted_power
+from repro.core.gwf import cap_residual, solve_cap_regular
+from repro.kernels.gwf_waterfill.kernel import gwf_waterfill
+from repro.kernels.gwf_waterfill.ref import gwf_waterfill_ref
+
+
+@pytest.mark.parametrize("M", [4, 100, 1500, 4096])
+@pytest.mark.parametrize("b", [0.5, 10.0, 200.0])
+def test_kernel_matches_ref(M, b):
+    rng = np.random.default_rng(M)
+    u = rng.uniform(0.1, 5.0, M).astype(np.float32)
+    h0 = rng.uniform(-2.0, 3.0, M).astype(np.float32)
+    u[rng.random(M) < 0.25] = 0.0
+    th = gwf_waterfill(jnp.asarray(u), jnp.asarray(h0), b, interpret=True)
+    ref = gwf_waterfill_ref(jnp.asarray(u), jnp.asarray(h0), b)
+    np.testing.assert_allclose(np.asarray(th), np.asarray(ref),
+                               atol=1e-2 * max(1, b / 10), rtol=1e-3)
+    assert abs(float(th.sum()) - b) < 1e-3 * max(1.0, b)
+
+
+@pytest.mark.parametrize("spf", [
+    shifted_power(1.0, 4.0, 0.5, 10.0),
+    log_speedup(1.0, 1.0, 10.0),
+])
+def test_kernel_solves_cap(spf):
+    """Kernel output must satisfy the CAP constraints of the paper."""
+    c = jnp.array([1.0, 0.55, 0.3, 0.12, 0.05], jnp.float32)
+    for b in (1.0, 5.0, 9.0):
+        u = spf.bottle_width(c)
+        h0 = spf.bottle_bottom(c)
+        th = gwf_waterfill(u.astype(jnp.float32), h0.astype(jnp.float32), b,
+                           interpret=True)
+        res = cap_residual(spf, b, c, th, tol=1e-5)
+        assert float(res["budget"]) < 1e-4
+        assert float(res["ratio"]) < 1e-3
+        ref = solve_cap_regular(spf, b, c)
+        np.testing.assert_allclose(np.asarray(th), np.asarray(ref, np.float32),
+                                   atol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(2, 64), b=st.floats(0.1, 100.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_kernel_property(m, b, seed):
+    rng = np.random.default_rng(seed)
+    u = rng.uniform(0.05, 10.0, m).astype(np.float32)
+    h0 = rng.uniform(-5.0, 5.0, m).astype(np.float32)
+    th = np.asarray(gwf_waterfill(jnp.asarray(u), jnp.asarray(h0), float(b),
+                                  interpret=True))
+    assert np.all(th >= 0)
+    assert abs(th.sum() - b) < 1e-3 * max(1.0, b)
+    # water level consistency: all partially-filled bottles share one h
+    part = (th > 1e-5) & (th < b - 1e-5)
+    if part.sum() >= 2:
+        levels = th[part] / u[part] + h0[part]
+        assert np.ptp(levels) < 1e-2

@@ -1,0 +1,70 @@
+"""HLO cost analyzer: loop-trip expansion, dot flops, slice traffic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _cost(f, *args):
+    return analyze_hlo(jax.jit(f).lower(*args).compile().as_text())
+
+
+def test_scan_trips_expand_to_unrolled():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((12, 256, 256), jnp.float32)
+
+    def scanned(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+
+    def unrolled(x, w):
+        h = x
+        for i in range(12):
+            h = jnp.tanh(h @ w[i])
+        return h
+
+    cs, cu = _cost(scanned, x, w), _cost(unrolled, x, w)
+    assert abs(cs.flops - cu.flops) / cu.flops < 1e-6
+    expected = 12 * (2 * 256 ** 3 + 256 ** 2)
+    assert abs(cs.flops - expected) / expected < 0.05
+    assert 12 in cs.while_trips.values()
+
+
+def test_dot_flops_with_contraction():
+    a = jax.ShapeDtypeStruct((64, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    c = _cost(lambda a, b: a @ b, a, b)
+    assert abs(c.flops - 2 * 64 * 512 * 128) / (2 * 64 * 512 * 128) < 0.01
+
+
+def test_gather_counts_slice_not_table():
+    table = jax.ShapeDtypeStruct((100_000, 64), jnp.float32)  # 25.6 MB
+    idx = jax.ShapeDtypeStruct((32,), jnp.int32)
+    c = _cost(lambda t, i: t[i] * 2.0, table, idx)
+    # traffic should be ~KBs (rows touched), not the whole table
+    assert c.bytes < 1e6
+
+
+def test_nested_scans_multiply():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def nested(x):
+        def outer(h, _):
+            def inner(g, _):
+                return g @ g, None
+            h, _ = jax.lax.scan(inner, h, None, length=4)
+            return h, None
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    c = _cost(nested, x)
+    expected = 3 * 4 * 2 * 128 ** 3
+    assert abs(c.flops - expected) / expected < 0.05
+
+
+def test_fused_lower_bound_below_total():
+    x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    c = _cost(lambda x: jnp.tanh(x @ x) + 1.0, x)
+    assert 0 < c.bytes_fused <= c.bytes

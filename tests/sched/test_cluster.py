@@ -1,0 +1,70 @@
+"""Cluster scheduler: SmartFill at the cluster level + real-world costs."""
+import numpy as np
+import pytest
+
+from repro.core import log_speedup, neg_power, smartfill
+from repro.sched.cluster import ClusterScheduler, Job, integerize
+from repro.sched.speedup_models import job_speedup
+
+B = 64.0
+
+
+def _jobs(M=6):
+    x = np.arange(M, 0, -1.0) * 100.0
+    w = 1.0 / x
+    return [Job(name=f"j{i}", size=x[i], weight=w[i]) for i in range(M)]
+
+
+def test_simulation_matches_smartfill_objective():
+    sp = log_speedup(1.0, 0.5, B)
+    jobs = _jobs()
+    cs = ClusterScheduler(sp, B)
+    _, J = cs.simulate(jobs)
+    x = np.array([j.size for j in _jobs()])
+    w = np.array([j.weight for j in _jobs()])
+    ref = smartfill(sp, x, w, B=B)
+    assert abs(J - ref.J) / ref.J < 1e-6
+
+
+def test_realloc_cost_hurts_and_merging_helps():
+    sp = log_speedup(1.0, 0.5, B)
+    _, J0 = ClusterScheduler(sp, B).simulate(_jobs())
+    _, J1 = ClusterScheduler(sp, B, realloc_cost_s=5.0).simulate(_jobs())
+    assert J1 > J0
+    # merging tiny deltas can only help when reallocation is expensive
+    _, J2 = ClusterScheduler(sp, B, realloc_cost_s=5.0,
+                             min_delta=4.0).simulate(_jobs())
+    assert J2 <= J1 * 1.05
+
+
+def test_integer_chips():
+    theta = np.array([10.7, 20.2, 33.1])
+    out = integerize(theta, 64)
+    assert out.sum() == 64
+    assert np.abs(out - theta / theta.sum() * 64).max() <= 1.0
+    sp = log_speedup(1.0, 0.5, B)
+    _, J_int = ClusterScheduler(sp, B, integer_chips=True).simulate(_jobs())
+    _, J_cont = ClusterScheduler(sp, B).simulate(_jobs())
+    assert J_int >= J_cont * 0.999          # integrality gap is a cost…
+    assert J_int <= J_cont * 1.10           # …but a small one
+
+
+def test_arrivals_replan():
+    sp = log_speedup(1.0, 0.5, B)
+    jobs = _jobs(4)
+    jobs.append(Job(name="late", size=50.0, weight=0.02, arrival=1.0))
+    events, J = ClusterScheduler(sp, B).simulate(jobs)
+    assert np.isfinite(J) and J > 0
+    # an event fires at the arrival instant
+    assert any(abs(t - 1.0) < 1e-9 for t, _ in events)
+
+
+def test_roofline_speedup_is_concave_and_regular():
+    sp = job_speedup(step_flops=6 * 1e9 * 4096 * 64,
+                     grad_bytes=2 * 1e9, tokens_per_step=4096 * 64, B=256.0)
+    assert sp.check_concave(n=257)
+    # DP jobs saturate: doubling chips less than doubles throughput
+    import jax.numpy as jnp
+    s64 = float(sp.s(jnp.float64(64.0)))
+    s128 = float(sp.s(jnp.float64(128.0)))
+    assert s64 < s128 < 2 * s64
