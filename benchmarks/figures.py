@@ -34,7 +34,10 @@ def _sweep(sp, p_fit, a_fit, ms=MS, open_loop=False):
     rows = []
     for M in ms:
         x, w = _slowdown_instance(M)
-        sf = smartfill(sp, x, w, B=B)
+        # fast_path=False: figs. 4/5 exist to show Algorithm 2's *numeric
+        # minimizer* reproduces heSRPT — the closed-form fast path would
+        # compute μ* with heSRPT's own formula and validate nothing.
+        sf = smartfill(sp, x, w, B=B, fast_path=False)
         he = simulate_policy(sp, x, w, hesrpt_policy(p_fit, B))
         row = {"M": M, "smartfill_J": sf.J, "hesrpt_J": he.J,
                "gap_pct": 100 * (he.J - sf.J) / he.J}

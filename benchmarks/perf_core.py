@@ -1,17 +1,31 @@
 """Scheduler-core micro-benchmarks: µs/call for GWF and SmartFill.
 
 These are the latencies a cluster controller pays per decision — the
-numbers behind the "low complexity" claim of the paper's abstract.
+numbers behind the "low complexity" claim of the paper's abstract.  The
+headline comparison is single-instance µs/call (warm, jitted,
+device-resident) versus batched planning throughput in instances/sec:
+``smartfill_batched`` solves hundreds of padded (x, w, B) instances in
+one vmap'd call, which is how a multi-tenant controller amortizes the
+solver.
+
+Run directly to write ``BENCH_core.json``:
+    PYTHONPATH=src python -m benchmarks.perf_core [--quick] [--out PATH]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
+
+jax.config.update("jax_enable_x64", True)
+
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import log_speedup, shifted_power, smartfill
+from repro.core import (log_speedup, power, shifted_power, smartfill,
+                        smartfill_batched)
 from repro.core.gwf import solve_cap
 from repro.kernels.gwf_waterfill.ref import gwf_waterfill_ref
 
@@ -44,16 +58,115 @@ def bench_gwf():
     return rows
 
 
-def bench_smartfill():
+_SPS = {
+    "power": power(1.0, 0.5, B),         # closed-form μ* fast path
+    "regular": shifted_power(1.0, 4.0, 0.5, B),
+    "log": log_speedup(1.0, 1.0, B),
+}
+
+
+def bench_smartfill(ms=(10, 50, 100), reps=3):
+    """Warm single-instance latency: one jitted device program per call."""
     rows = []
-    for M in (10, 50, 100):
+    for M in ms:
         x = np.arange(M, 0, -1.0)
         w = 1.0 / x
-        for name, sp in (("regular", shifted_power(1.0, 4.0, 0.5, B)),
-                         ("log", log_speedup(1.0, 1.0, B))):
+        for name, sp in _SPS.items():
+            def run():
+                return smartfill(sp, x, w, B=B, validate=False)
+            run()                                   # compile + warm
             t0 = time.perf_counter()
-            smartfill(sp, x, w, B=B)
-            dt = (time.perf_counter() - t0) * 1e6
+            for _ in range(reps):
+                out = run()
+            dt = (time.perf_counter() - t0) / reps * 1e6
             rows.append({"name": f"smartfill_{name}_M{M}",
-                         "us_per_call": dt})
+                         "family": name, "M": M,
+                         "us_per_call": dt, "J": out.J})
     return rows
+
+
+def bench_smartfill_batched(n_instances=256, ms=(16, 32), reps=2):
+    """Batched planning throughput: N padded instances per vmap'd call."""
+    rows = []
+    rng = np.random.default_rng(0)
+    for M in ms:
+        scale = rng.uniform(0.5, 2.0, (n_instances, 1))
+        X = np.tile(np.arange(M, 0, -1.0), (n_instances, 1)) * scale
+        W = 1.0 / X
+        for name, sp in _SPS.items():
+            def run():
+                out = smartfill_batched(sp, X, W, B=B)
+                jax.block_until_ready(out.J)
+                return out
+            run()                                   # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = run()
+            dt = (time.perf_counter() - t0) / reps
+            rows.append({
+                "name": f"smartfill_batched_{name}_N{n_instances}_M{M}",
+                "family": name, "M": M,
+                "us_per_call": dt * 1e6,
+                "instances_per_sec": n_instances / dt,
+                "us_per_instance": dt / n_instances * 1e6,
+            })
+    return rows
+
+
+def collect(quick: bool = False):
+    """All rows + the single-vs-batched amortization summary.
+
+    The amortization factor compares a batched call's per-instance cost
+    against a warm single-instance call of the *same* family and M.
+    """
+    n = 64 if quick else 256
+    batched_ms = (16,) if quick else (16, 32)
+    single = bench_smartfill(ms=(10, 50) if quick else (10, 50, 100))
+    single += bench_smartfill(ms=batched_ms)        # same-M baselines
+    batched = bench_smartfill_batched(n_instances=n, ms=batched_ms)
+    summary = {}
+    for r in batched:
+        base = next((s for s in single
+                     if s["family"] == r["family"] and s["M"] == r["M"]),
+                    None)
+        if base is not None:
+            summary[r["name"] + "_amortization_x"] = (
+                base["us_per_call"] / r["us_per_instance"])
+    return {
+        "gwf": bench_gwf(),
+        "smartfill_single": single,
+        "smartfill_batched": batched,
+        "summary": summary,
+        "config": {"B": B, "n_instances": n, "x64": jax.config.jax_enable_x64},
+    }
+
+
+def bench_rows(quick: bool = False):
+    """Flat row list for CSV harnesses — same sweep as ``collect()``.
+
+    ``benchmarks/run.py`` prints these so the CSV and BENCH_core.json
+    always come from one sweep definition.
+    """
+    report = collect(quick=quick)
+    return (report["gwf"] + report["smartfill_single"]
+            + report["smartfill_batched"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_core.json")
+    args = ap.parse_args()
+    report = collect(quick=args.quick)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    for sec in ("smartfill_single", "smartfill_batched"):
+        for r in report[sec]:
+            extra = (f"  {r['instances_per_sec']:.0f} inst/s"
+                     if "instances_per_sec" in r else "")
+            print(f"{r['name']:48s} {r['us_per_call']:12.1f} µs/call{extra}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -46,8 +46,10 @@ def main() -> None:
         sys.stdout.flush()
 
     if "perf" not in skip:
-        for r in perf_core.bench_gwf() + perf_core.bench_smartfill():
-            print(f"{r['name']},{r['us_per_call']:.1f},")
+        for r in perf_core.bench_rows(quick=args.quick):
+            derived = (f"instances_per_sec={r['instances_per_sec']:.0f}"
+                       if "instances_per_sec" in r else "")
+            print(f"{r['name']},{r['us_per_call']:.1f},{derived}")
             sys.stdout.flush()
 
     if "cluster" not in skip:

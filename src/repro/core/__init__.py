@@ -18,6 +18,12 @@ from .smartfill import (  # noqa: F401
     objective,
     smartfill,
     smartfill_allocations,
+    smartfill_reference,
+)
+from .batch import (  # noqa: F401
+    BatchedSmartFillSchedule,
+    smartfill_allocations_batched,
+    smartfill_batched,
 )
 from .hesrpt import fit_power, hesrpt_allocations, hesrpt_policy  # noqa: F401
 from .cdr import cdr_violation, estimate_constants  # noqa: F401

@@ -1,0 +1,183 @@
+"""Batched SmartFill planning — solve many scheduling instances at once.
+
+The device-resident solver core (``core/smartfill.py``) takes a traced
+active-job count, so a whole fleet of independent (x, w, B) instances can
+be planned in **one** ``jax.vmap``'d call: thousands of tenants, one
+device program, no Python loop.  This is the planning throughput a
+multi-tenant controller needs (cf. the multi-class workloads of Berg et
+al., arXiv:2404.00346) and what closed-form baselines like heSRPT get
+for free.
+
+Padding / masking convention (matches ``solve_cap``'s ``active`` mask):
+
+  * all instances are padded to a common width M (the max job count);
+  * ``active`` is a **prefix** mask per instance — real jobs occupy
+    slots 0..m−1, padding occupies m..M−1;
+  * padded slots carry x = 0, w = 0 (enforced internally: inactive
+    entries are zeroed before the solve);
+  * within its active prefix each instance must be sorted the SmartFill
+    way: sizes non-increasing, weights non-decreasing;
+  * ``B`` may be a scalar (shared server) or an (N,) vector (one budget
+    per instance).
+
+Padded outputs are exact zeros: theta rows/cols, c, a, durations and T
+of padded slots are 0, and J only sums active jobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .smartfill import (SmartFillSchedule, _is_pure_power, _solve,
+                        _validate_instance)
+from .speedup import Speedup
+
+__all__ = [
+    "BatchedSmartFillSchedule",
+    "smartfill_batched",
+    "smartfill_allocations_batched",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedSmartFillSchedule:
+    """Stacked SmartFill outputs for N padded instances.
+
+    theta: (N, M, M); c/a/durations/T: (N, M); J/J_linear: (N,);
+    active: (N, M) prefix masks; m: (N,) active-job counts.
+    All fields stay on device — no host sync until the caller reads them.
+    """
+
+    theta: jnp.ndarray
+    c: jnp.ndarray
+    a: jnp.ndarray
+    durations: jnp.ndarray
+    T: jnp.ndarray
+    J: jnp.ndarray
+    J_linear: jnp.ndarray
+    active: jnp.ndarray
+    m: jnp.ndarray
+
+    def __len__(self) -> int:
+        return int(self.theta.shape[0])
+
+    def instance(self, i: int) -> SmartFillSchedule:
+        """Materialize instance ``i`` as a plain SmartFillSchedule."""
+        return SmartFillSchedule(
+            theta=self.theta[i], c=self.c[i], a=self.a[i],
+            durations=self.durations[i], T=self.T[i],
+            J=float(self.J[i]), J_linear=float(self.J_linear[i]),
+        )
+
+
+def _prepare(X, W, active):
+    X = jnp.asarray(X, dtype=jnp.result_type(float))
+    W = jnp.asarray(W, dtype=X.dtype)
+    if X.ndim != 2 or W.shape != X.shape:
+        raise ValueError("X and W must both be (N, M)")
+    if active is None:
+        active = X > 0
+    active = jnp.asarray(active, bool)
+    if active.shape != X.shape:
+        raise ValueError("active mask must be (N, M)")
+    m = jnp.sum(active, axis=1)
+    # The solver consumes only the *count* m with prefix semantics, so a
+    # non-prefix mask (e.g. an interior zero-size slot from an unsorted
+    # row) would silently drop real jobs.  Reject it whenever the mask is
+    # concrete; under tracing the caller owns the convention.
+    try:
+        act = np.asarray(active)
+    except jax.errors.TracerArrayConversionError:
+        act = None
+    if act is not None:
+        prefix = np.arange(act.shape[1])[None, :] < act.sum(axis=1)[:, None]
+        if not np.array_equal(act, prefix):
+            bad = int(np.flatnonzero((act != prefix).any(axis=1))[0])
+            raise ValueError(
+                f"active must be a prefix mask per instance (real jobs "
+                f"first, padding after); instance {bad} has interior gaps")
+    Xm = jnp.where(active, X, 0.0)
+    Wm = jnp.where(active, W, 0.0)
+    return Xm, Wm, active, m
+
+
+def smartfill_batched(
+    sp: Speedup,
+    X,
+    W,
+    B=None,
+    active=None,
+    coarse: int = 512,
+    zoom_rounds: int = 4,
+    zoom_pts: int = 64,
+    fast_path: bool | None = None,
+    validate: bool = False,
+) -> BatchedSmartFillSchedule:
+    """SmartFill over N padded instances in a single vmap'd device call.
+
+    Args:
+      sp: shared speedup function (not vmapped — one server model).
+      X: (N, M) padded job sizes.
+      W: (N, M) padded weights.
+      B: scalar or (N,) budgets; defaults to sp.B.
+      active: optional (N, M) prefix masks; defaults to ``X > 0``.
+      fast_path: as in ``smartfill`` — None auto-detects pure power.
+      validate: host-side check of the per-instance sorting convention
+        (syncs; off by default to keep the call device-resident).  The
+        prefix-mask property is always enforced when the mask is
+        concrete, since a non-prefix mask would silently drop jobs.
+
+    Returns a BatchedSmartFillSchedule.
+    """
+    Xm, Wm, active, m = _prepare(X, W, active)
+    N = Xm.shape[0]
+    if B is None:
+        B = sp.B
+    Bv = jnp.broadcast_to(jnp.asarray(B, Xm.dtype), (N,))
+
+    if validate:
+        ms = np.asarray(m)
+        xs, ws = np.asarray(Xm), np.asarray(Wm)
+        for n in range(N):
+            k = int(ms[n])
+            if k == 0:
+                continue
+            try:
+                _validate_instance(xs[n, :k], ws[n, :k])
+            except ValueError as e:
+                raise ValueError(f"instance {n}: {e}") from e
+
+    fast = _is_pure_power(sp) and fast_path is not False
+    theta, c, a, d, T, J, J_lin = jax.vmap(
+        lambda x, w, b, mm: _solve(sp, x, w, b, mm,
+                                   coarse, zoom_rounds, zoom_pts, fast)
+    )(Xm, Wm, Bv, m)
+    return BatchedSmartFillSchedule(
+        theta=theta, c=c, a=a, durations=d, T=T,
+        J=J, J_linear=J_lin, active=active, m=m,
+    )
+
+
+def smartfill_allocations_batched(
+    sp: Speedup,
+    REM,
+    W,
+    B=None,
+    active=None,
+    **kwargs,
+) -> jnp.ndarray:
+    """Instantaneous optimal allocations for N fleets in one device call.
+
+    The batched analogue of ``smartfill_allocations``: for each instance
+    the current allocation is column m−1 of its SmartFill plan (the
+    earliest phase, with all m active jobs live).  Returns (N, M)
+    allocations; padded slots are 0.
+    """
+    sched = smartfill_batched(sp, REM, W, B=B, active=active, **kwargs)
+    M = sched.theta.shape[-1]
+    col = jnp.clip(sched.m - 1, 0, M - 1)
+    th = jnp.take_along_axis(sched.theta, col[:, None, None], axis=2)[..., 0]
+    return jnp.where(sched.active & (sched.m > 0)[:, None], th, 0.0)

@@ -71,7 +71,7 @@ def simulate_policy(sp, x, w, policy, B: float | None = None,
     raise RuntimeError(f"exceeded {limit} events — policy may not complete jobs")
 
 
-def schedule_policy(sp, schedule, x):
+def schedule_policy(schedule):
     """Wrap a precomputed SmartFillSchedule as a re-planning policy.
 
     Looks up the phase by the number of remaining jobs (Prop. 7: the

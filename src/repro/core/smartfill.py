@@ -27,11 +27,34 @@ x_{k+1} F(μ)), so the correct operation is arg **min** (F(μ) → +∞ as
 μ → 0⁺; no maximum exists).  Validated: with s = aθ^p SmartFill
 reproduces heSRPT exactly (paper Figs. 4–5) and Figs. 6/8 gaps match.
 
-The 1-D minimization uses a vectorized coarse grid (log+linear mixed, to
-resolve minima near μ→0) followed by iterative grid-zoom refinement —
-derivative-free, robust to the kinks F inherits from CAP's parking
-breakpoints.  All inner evaluations are a single jitted vmap over the
-closed-form (regular) or bisection (generic) CAP solver.
+Device-resident design
+----------------------
+The whole recursion is one jitted ``lax.scan`` over iterations k with
+fixed shapes — no Python loop, no host round-trips per iteration:
+
+  * the 1-D minimization runs fully on-device: a mixed log+linear coarse
+    grid (to resolve minima near μ→0) followed by ``lax.fori_loop``
+    grid-zoom rounds using ``jnp.argmin`` — derivative-free, robust to
+    the kinks F inherits from CAP's parking breakpoints;
+  * for the pure-power subfamily of ``RegularSpeedup`` (s = aθ^p — the
+    heSRPT family, where the paper's closed form applies) μ* is computed
+    in closed form per iteration, skipping the grid search entirely:
+    μ*/B = (W_{k+1}^m − W_k^m)/W_{k+1}^m with m = 1/(1−p) [Berg et al.];
+    for the wider regular class the CAP inside F is already closed form
+    (``solve_cap_regular``), only the scalar argmin is iterative;
+  * the solver core takes a traced active-job count ``m`` so the same
+    compiled program serves padded instances — ``jax.vmap`` over
+    (x, w, B, m) is the batched planning API in ``core/batch.py``.
+
+After warmup a call executes with zero per-iteration host syncs; the only
+transfer is the final schedule read-back in the ``smartfill()`` wrapper.
+``smartfill_reference`` preserves the original host-loop implementation
+as the equivalence oracle for tests.
+
+Precision: run under ``jax.config.update("jax_enable_x64", True)`` for
+reference accuracy.  In float32 the grid-zoom minimizer loses ~1e-3
+relative J on near-linear speedups (power p ≳ 0.9), where F's minimum
+is shallow; the closed-form fast path is exact in either precision.
 """
 from __future__ import annotations
 
@@ -41,11 +64,19 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from .gwf import solve_cap
-from .speedup import Speedup
+from .speedup import RegularSpeedup, Speedup
 
-__all__ = ["SmartFillSchedule", "smartfill", "completion_times", "objective"]
+__all__ = [
+    "SmartFillSchedule",
+    "smartfill",
+    "smartfill_reference",
+    "smartfill_allocations",
+    "completion_times",
+    "objective",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,7 +102,22 @@ class SmartFillSchedule:
     J_linear: float
 
 
-@jax.jit
+def _is_pure_power(sp: Speedup) -> bool:
+    """True iff ``sp`` is s = aθ^p (closed-form μ* per iteration).
+
+    Decidable only for concrete (non-traced) parameters; a traced ``sp``
+    conservatively takes the generic path.
+    """
+    if not isinstance(sp, RegularSpeedup) or sp.sigma != +1:
+        return False
+    try:
+        w = float(np.asarray(sp.w))
+        g = float(np.asarray(sp.gamma))
+    except (TypeError, jax.errors.TracerArrayConversionError):
+        return False
+    return w == 0.0 and -1.0 < g < 0.0
+
+
 def _f_grid(sp, mus, c, a, k, W, B):
     """Vectorized F(μ) over a grid. c/a are padded to M; first k entries live.
 
@@ -89,31 +135,116 @@ def _f_grid(sp, mus, c, a, k, W, B):
     return jax.vmap(F)(mus)
 
 
-def _minimize_f(sp, c, a, k, W, B, coarse=512, zoom_rounds=4, zoom_pts=64):
-    """argmin_μ F(μ) on (0, B] by mixed coarse grid + grid-zoom."""
+def _argmin_bracket(mus, vals, n):
+    """(best μ, best F, bracket) of a grid; NaN-safe, fully on-device."""
+    i = jnp.argmin(jnp.where(jnp.isnan(vals), jnp.inf, vals))
+    lo = mus[jnp.maximum(i - 1, 0)]
+    hi = mus[jnp.minimum(i + 1, n - 1)]
+    return mus[i], vals[i], lo, hi
+
+
+def _minimize_f(sp, c, a, k, W, B, coarse, zoom_rounds, zoom_pts):
+    """argmin_μ F(μ) on (0, B] by mixed coarse grid + grid-zoom.
+
+    Entirely traced: ``jnp.argmin`` + ``lax.fori_loop`` — zero host syncs.
+    """
     dtype = c.dtype
-    lo = jnp.asarray(B, dtype) * 1e-9
+    B = jnp.asarray(B, dtype)
+    lo = B * 1e-9
     g1 = jnp.geomspace(lo, B, coarse // 2, dtype=dtype)
     g2 = jnp.linspace(B / (coarse // 2), B, coarse // 2, dtype=dtype)
     mus = jnp.sort(jnp.concatenate([g1, g2]))
     vals = _f_grid(sp, mus, c, a, k, W, B)
-    i = int(jnp.nanargmin(vals))
-    mu_lo = mus[max(i - 1, 0)]
-    mu_hi = mus[min(i + 1, mus.shape[0] - 1)]
-    for _ in range(zoom_rounds):
-        mus = jnp.linspace(mu_lo, mu_hi, zoom_pts, dtype=dtype)
-        vals = _f_grid(sp, mus, c, a, k, W, B)
-        i = int(jnp.nanargmin(vals))
-        mu_lo = mus[max(i - 1, 0)]
-        mu_hi = mus[min(i + 1, zoom_pts - 1)]
-    return mus[i], vals[i]
+    mu, val, mu_lo, mu_hi = _argmin_bracket(mus, vals, mus.shape[0])
+
+    def zoom(_, carry):
+        mu_lo, mu_hi, _, _ = carry
+        mz = jnp.linspace(mu_lo, mu_hi, zoom_pts, dtype=dtype)
+        vz = _f_grid(sp, mz, c, a, k, W, B)
+        mu, val, lo2, hi2 = _argmin_bracket(mz, vz, zoom_pts)
+        return lo2, hi2, mu, val
+
+    _, _, mu, val = lax.fori_loop(0, zoom_rounds, zoom,
+                                  (mu_lo, mu_hi, mu, val))
+    return mu, val
 
 
-def completion_times(sp: Speedup, x, theta):
+@partial(jax.jit, static_argnames=("coarse", "zoom_rounds", "zoom_pts", "fast"))
+def _solve(sp, x, w, B, m, coarse, zoom_rounds, zoom_pts, fast):
+    """Fixed-shape SmartFill core: lax.scan over iterations k = 1..M−1.
+
+    Args:
+      x, w: (M,) padded sizes/weights (padded entries must be 0).
+      B: scalar budget (traced — per-instance under vmap).
+      m: traced count of live jobs (prefix 0..m−1); iterations k ≥ m are
+        masked no-ops so padded instances share the compiled program.
+      fast: static — closed-form μ* for the pure-power family.
+
+    Returns (theta, c, a, durations, T, J, J_linear) as device arrays.
+    """
+    M = x.shape[0]
+    dtype = x.dtype
+    B = jnp.asarray(B, dtype)
+    idx = jnp.arange(M)
+    zero = jnp.zeros((), dtype)
+    live0 = m > 0
+    Wc = jnp.cumsum(w)                      # Wc[k] = Σ w[:k+1] (padded w = 0)
+
+    c0 = jnp.zeros((M,), dtype).at[0].set(jnp.where(live0, 1.0, 0.0))
+    a0 = jnp.zeros((M,), dtype).at[0].set(
+        jnp.where(live0, w[0] / sp.s(B), zero))
+    col0 = jnp.where((idx == 0) & live0, B, zero)
+
+    def step(carry, k):
+        c, a = carry
+        live = k < m
+        W = Wc[k]
+        active = idx < k
+        if fast:
+            # heSRPT closed form for s = aθ^p (p = γ+1, m = 1/(1−p) = −1/γ).
+            # Clamped to the grid minimizer's domain [B·1e-9, B]: a
+            # zero-weight live job gives μ = 0 exactly, which would put
+            # s(0) = 0 on the phase-rate diagonal and NaN the durations.
+            mexp = -1.0 / sp.gamma
+            Wk = Wc[k] ** mexp
+            Wk1 = Wc[k - 1] ** mexp
+            mu = B * (Wk - Wk1) / jnp.maximum(Wk, 1e-300)
+            mu = jnp.clip(mu, B * 1e-9, B)
+        else:
+            mu, _ = _minimize_f(sp, c, a, k, W, B,
+                                coarse, zoom_rounds, zoom_pts)
+        th_rest = solve_cap(sp, B - mu, c, active)      # (M,) padded
+        # (29): a_{k+1} = F(μ*), evaluated on the one CAP solve above
+        served = jnp.where(active, a * sp.s(th_rest), zero)
+        a_next = (W - jnp.sum(served)) / sp.s(mu)
+        col = jnp.where(active, th_rest, zero)
+        col = jnp.where(idx == k, mu, col)
+        # (28): c_{k+1} = c_k · s'(μ) / s'(θ_k^{k+1}).  θ_k may be parked
+        # (=0) — then s'(0) < ∞ is guaranteed for any parking speedup.
+        ds_prev = sp.ds(th_rest[k - 1])
+        c_next = c[k - 1] * sp.ds(mu) / ds_prev
+        c = c.at[k].set(jnp.where(live, jnp.maximum(c_next, 1e-300), zero))
+        a = a.at[k].set(jnp.where(live, a_next, zero))
+        col = jnp.where(live, col, zero)
+        return (c, a), col
+
+    (c, a), cols = lax.scan(step, (c0, a0), jnp.arange(1, M))
+    theta = jnp.concatenate([col0[:, None], cols.T], axis=1)
+
+    active_jobs = idx < m
+    d, T = completion_times(sp, x, theta, active=active_jobs)
+    J = jnp.sum(jnp.where(active_jobs, w * T, zero))
+    J_lin = jnp.sum(a * x)
+    return theta, c, a, d, T, J, J_lin
+
+
+def completion_times(sp: Speedup, x, theta, active=None):
     """Back-substitute phase durations from Θ and sizes; return (d, T).
 
     x[j] = Σ_{m≥j} s(Θ[j,m])·d[m]  ⇒  solved from phase M−1 (earliest)
-    down to phase 0.
+    down to phase 0.  With ``active`` (a prefix mask of live jobs),
+    padded rows/columns are replaced by the identity so d = T = 0 there —
+    this is what lets the solver run on padded batched instances.
     """
     x = jnp.asarray(x)
     M = x.shape[0]
@@ -121,6 +252,11 @@ def completion_times(sp: Speedup, x, theta):
     # x = R d with R upper-triangular (R[j, m] = s(Θ[j, m]), m ≥ j); the
     # diagonal is positive because each job runs in its own phase.
     R = jnp.triu(rate)
+    if active is not None:
+        active = jnp.asarray(active, bool)
+        pair = active[:, None] & active[None, :]
+        R = jnp.where(pair, R, jnp.eye(M, dtype=x.dtype))
+        x = jnp.where(active, x, jnp.zeros((), x.dtype))
     d = jax.scipy.linalg.solve_triangular(R, x, lower=False)
     d = jnp.maximum(d, 0.0)
     # T[j] = Σ_{m ≥ j} d[m]  (phase M−1 is first in time)
@@ -132,6 +268,14 @@ def objective(w, T):
     return jnp.sum(jnp.asarray(w) * T)
 
 
+def _validate_instance(x, w):
+    xs, ws = np.asarray(x), np.asarray(w)
+    if np.any(np.diff(xs) > 1e-12 * max(1.0, float(xs[0]))):
+        raise ValueError("sizes must be non-increasing (x_1 ≥ … ≥ x_M)")
+    if np.any(np.diff(ws) < -1e-12 * max(1.0, float(np.max(ws)))):
+        raise ValueError("weights must be non-decreasing (w_1 ≤ … ≤ w_M)")
+
+
 def smartfill(
     sp: Speedup,
     x,
@@ -140,8 +284,10 @@ def smartfill(
     coarse: int = 512,
     zoom_rounds: int = 4,
     validate: bool = True,
+    zoom_pts: int = 64,
+    fast_path: bool | None = None,
 ) -> SmartFillSchedule:
-    """Run SmartFill (Algorithm 2).
+    """Run SmartFill (Algorithm 2) — single jitted device program.
 
     Args:
       sp: speedup function (RegularSpeedup → closed-form CAP; otherwise
@@ -149,6 +295,9 @@ def smartfill(
       x: (M,) job sizes, non-increasing.
       w: (M,) weights, non-decreasing.
       B: server bandwidth; defaults to sp.B.
+      fast_path: None (default) auto-enables the closed-form μ* path for
+        pure-power speedups; False forces the generic grid-zoom minimizer
+        (used by equivalence tests).
 
     Returns a SmartFillSchedule.
     """
@@ -157,33 +306,11 @@ def smartfill(
     M = int(x.shape[0])
     B = float(sp.B if B is None else B)
     if validate:
-        xs, ws = np.asarray(x), np.asarray(w)
-        if np.any(np.diff(xs) > 1e-12 * max(1.0, float(xs[0]))):
-            raise ValueError("sizes must be non-increasing (x_1 ≥ … ≥ x_M)")
-        if np.any(np.diff(ws) < -1e-12 * max(1.0, float(np.max(ws)))):
-            raise ValueError("weights must be non-decreasing (w_1 ≤ … ≤ w_M)")
+        _validate_instance(x, w)
 
-    c = jnp.zeros((M,), x.dtype).at[0].set(1.0)
-    a = jnp.zeros((M,), x.dtype).at[0].set(w[0] / sp.s(jnp.asarray(B, x.dtype)))
-    theta = jnp.zeros((M, M), x.dtype).at[0, 0].set(B)
-
-    for k in range(1, M):
-        W = jnp.sum(w[: k + 1])
-        mu, a_next = _minimize_f(sp, c, a, k, W, B, coarse, zoom_rounds)
-        active = jnp.arange(M) < k
-        th_rest = solve_cap(sp, B - mu, c, active)  # (M,) padded
-        theta = theta.at[:, k].set(jnp.where(active, th_rest, 0.0))
-        theta = theta.at[k, k].set(mu)
-        # (28): c_{k+1} = c_k · s'(μ) / s'(θ_k^{k+1}).  θ_k may be parked
-        # (=0) — then s'(0) < ∞ is guaranteed for any parking speedup.
-        ds_prev = sp.ds(th_rest[k - 1])
-        c_next = c[k - 1] * sp.ds(mu) / ds_prev
-        c = c.at[k].set(jnp.maximum(c_next, 1e-300))
-        a = a.at[k].set(a_next)
-
-    d, T = completion_times(sp, x, theta)
-    J = objective(w, T)
-    J_lin = jnp.sum(a * x)
+    fast = _is_pure_power(sp) and fast_path is not False
+    theta, c, a, d, T, J, J_lin = _solve(
+        sp, x, w, B, M, coarse, zoom_rounds, zoom_pts, fast)
     return SmartFillSchedule(
         theta=theta, c=c, a=a, durations=d, T=T,
         J=float(J), J_linear=float(J_lin),
@@ -196,6 +323,81 @@ def smartfill_allocations(sp: Speedup, rem, w, B: float | None = None):
     This is column M−1 of SmartFill run on the remaining workload — the
     re-planning form used by policy-driven simulation and the cluster
     scheduler.  rem must be sorted non-increasing with w non-decreasing.
+    (For many instances at once use ``smartfill_allocations_batched``.)
     """
     sched = smartfill(sp, rem, w, B=B, validate=False)
     return sched.theta[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Host-loop reference (pre-refactor implementation) — the test oracle for
+# the device-resident solver.  Kept verbatim in structure: a Python loop
+# over iterations with host-synced argmins.
+# ---------------------------------------------------------------------------
+
+_f_grid_jit = jax.jit(_f_grid)
+
+
+def _minimize_f_ref(sp, c, a, k, W, B, coarse=512, zoom_rounds=4, zoom_pts=64):
+    dtype = c.dtype
+    lo = jnp.asarray(B, dtype) * 1e-9
+    g1 = jnp.geomspace(lo, B, coarse // 2, dtype=dtype)
+    g2 = jnp.linspace(B / (coarse // 2), B, coarse // 2, dtype=dtype)
+    mus = jnp.sort(jnp.concatenate([g1, g2]))
+    vals = _f_grid_jit(sp, mus, c, a, k, W, B)
+    i = int(jnp.nanargmin(vals))
+    mu_lo = mus[max(i - 1, 0)]
+    mu_hi = mus[min(i + 1, mus.shape[0] - 1)]
+    for _ in range(zoom_rounds):
+        mus = jnp.linspace(mu_lo, mu_hi, zoom_pts, dtype=dtype)
+        vals = _f_grid_jit(sp, mus, c, a, k, W, B)
+        i = int(jnp.nanargmin(vals))
+        mu_lo = mus[max(i - 1, 0)]
+        mu_hi = mus[min(i + 1, zoom_pts - 1)]
+    return mus[i], vals[i]
+
+
+def smartfill_reference(
+    sp: Speedup,
+    x,
+    w,
+    B: float | None = None,
+    coarse: int = 512,
+    zoom_rounds: int = 4,
+    validate: bool = True,
+) -> SmartFillSchedule:
+    """Original host-loop SmartFill (one host sync per zoom round).
+
+    Slow but independently simple; used by tests to pin down the
+    device-resident solver and the batched API.
+    """
+    x = jnp.asarray(x, dtype=jnp.result_type(float))
+    w = jnp.asarray(w, dtype=x.dtype)
+    M = int(x.shape[0])
+    B = float(sp.B if B is None else B)
+    if validate:
+        _validate_instance(x, w)
+
+    c = jnp.zeros((M,), x.dtype).at[0].set(1.0)
+    a = jnp.zeros((M,), x.dtype).at[0].set(w[0] / sp.s(jnp.asarray(B, x.dtype)))
+    theta = jnp.zeros((M, M), x.dtype).at[0, 0].set(B)
+
+    for k in range(1, M):
+        W = jnp.sum(w[: k + 1])
+        mu, a_next = _minimize_f_ref(sp, c, a, k, W, B, coarse, zoom_rounds)
+        active = jnp.arange(M) < k
+        th_rest = solve_cap(sp, B - mu, c, active)  # (M,) padded
+        theta = theta.at[:, k].set(jnp.where(active, th_rest, 0.0))
+        theta = theta.at[k, k].set(mu)
+        ds_prev = sp.ds(th_rest[k - 1])
+        c_next = c[k - 1] * sp.ds(mu) / ds_prev
+        c = c.at[k].set(jnp.maximum(c_next, 1e-300))
+        a = a.at[k].set(a_next)
+
+    d, T = completion_times(sp, x, theta)
+    J = objective(w, T)
+    J_lin = jnp.sum(a * x)
+    return SmartFillSchedule(
+        theta=theta, c=c, a=a, durations=d, T=T,
+        J=float(J), J_linear=float(J_lin),
+    )

@@ -23,12 +23,12 @@ theory abstracts away:
 from __future__ import annotations
 
 import dataclasses
-import heapq
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import smartfill
+from repro.core import (smartfill, smartfill_allocations_batched,
+                        smartfill_batched)
 from repro.core.speedup import Speedup
 
 __all__ = ["Job", "ClusterScheduler", "integerize"]
@@ -81,24 +81,76 @@ class ClusterScheduler:
         sched = smartfill(self.sp, x, w, B=self.B, validate=False)
         return order, sched
 
+    @staticmethod
+    def _pack_fleets(fleets: list[list[Job]]):
+        """Sort + pad fleets into the batched API's prefix-mask layout.
+
+        Completed jobs (``done is not None``) are excluded, matching
+        ``current_allocations``; ``orders[n]`` holds the original fleet
+        indices of the planned (active) jobs, sorted the SmartFill way.
+        """
+        N = len(fleets)
+        actives = [[i for i, j in enumerate(fleet) if j.done is None]
+                   for fleet in fleets]
+        M = max((len(a) for a in actives), default=0)
+        X = np.zeros((N, M))
+        W = np.zeros((N, M))
+        act = np.zeros((N, M), dtype=bool)
+        orders = []
+        for n, (fleet, act_idx) in enumerate(zip(fleets, actives)):
+            order = sorted(act_idx,
+                           key=lambda i: (-fleet[i].size, fleet[i].weight))
+            orders.append(order)
+            for r, oi in enumerate(order):
+                X[n, r] = fleet[oi].size
+                W[n, r] = fleet[oi].weight
+                act[n, r] = True
+        return orders, X, W, act
+
+    def plan_fleets(self, fleets: list[list[Job]]):
+        """SmartFill plans for many independent job sets in one device call.
+
+        Each fleet is planned against this scheduler's budget B; fleets
+        are padded to the widest one (batched API prefix-mask
+        convention).  Returns (orders, BatchedSmartFillSchedule) where
+        orders[n][r] maps schedule row r back to fleets[n]'s job index.
+        """
+        orders, X, W, act = self._pack_fleets(fleets)
+        if X.shape[1] == 0:
+            raise ValueError("plan_fleets: no active jobs in any fleet")
+        sched = smartfill_batched(self.sp, X, W, B=self.B, active=act)
+        return orders, sched
+
+    def current_allocations_fleets(self, fleets: list[list[Job]]):
+        """Instantaneous optimal allocations for many fleets at once.
+
+        The batched analogue of ``current_allocations`` — one vmap'd
+        SmartFill solve instead of a Python loop over fleets.  Returns a
+        list of per-fleet allocation vectors aligned with each fleet's
+        own job order (integerized when ``integer_chips`` is set).
+        """
+        orders, X, W, act = self._pack_fleets(fleets)
+        if X.shape[1] == 0:
+            return [np.zeros(len(fleet)) for fleet in fleets]
+        th = np.asarray(smartfill_allocations_batched(
+            self.sp, X, W, B=self.B, active=act))
+        out = []
+        for n, (fleet, order) in enumerate(zip(fleets, orders)):
+            alloc = np.zeros(len(fleet))
+            for r, oi in enumerate(order):
+                alloc[oi] = th[n, r]
+            if self.integer_chips:
+                alloc = integerize(alloc, int(self.B)).astype(np.float64)
+            out.append(alloc)
+        return out
+
     def current_allocations(self, jobs: list[Job]) -> np.ndarray:
-        """Instantaneous optimal allocations for the active jobs."""
-        active = [j for j in jobs if j.done is None]
-        if not active:
-            return np.zeros(len(jobs))
-        order, sched = self.plan(active)
-        k = len(active)
-        theta = np.zeros(len(jobs))
-        col = np.asarray(sched.theta[:, k - 1])
-        amap = {id(active[oi]): col[r] for r, oi in
-                zip(range(k), order)}
-        for i, j in enumerate(jobs):
-            if j.done is None:
-                theta[i] = amap[id(j)]
-        if self.integer_chips:
-            theta_i = integerize(theta, int(self.B))
-            theta = theta_i.astype(np.float64)
-        return theta
+        """Instantaneous optimal allocations for the active jobs.
+
+        The single-fleet view of ``current_allocations_fleets`` — one
+        code path for sorting, done-job exclusion and integerization.
+        """
+        return self.current_allocations_fleets([jobs])[0]
 
     # ---- event loop -----------------------------------------------------
     def simulate(self, jobs: list[Job], t_end: float = np.inf):
@@ -112,9 +164,6 @@ class ClusterScheduler:
         pending = sorted([j for j in jobs if j.arrival > 0],
                          key=lambda j: j.arrival)
         last_alloc = np.zeros(len(jobs))
-
-        def active_mask():
-            return [j.arrival <= t and j.done is None for j in jobs]
 
         for _ in range(8 * len(jobs) + 64):
             if all(j.done is not None for j in jobs):
@@ -131,8 +180,8 @@ class ClusterScheduler:
             # reallocation penalty: resized jobs lose realloc_cost of service
             penalty = np.where(resized & (theta > 0), self.realloc_cost, 0.0)
             last_alloc = theta
-            rates = np.array([float(self.sp.s(jnp.float64(th)))
-                              for th in theta])
+            rates = np.asarray(self.sp.s(jnp.asarray(theta, jnp.float64)),
+                               dtype=np.float64)
             for i, j in enumerate(jobs):
                 j.allocated = theta[i]
             # next event: completion or arrival
@@ -151,7 +200,12 @@ class ClusterScheduler:
                     eff = max(dt - penalty[i], 0.0)
                     j.size = max(j.size - rates[i] * eff, 0.0)
             t += dt
-            if pending and abs(pending[0].arrival - t) < 1e-12:
+            # pop every arrival at or before t: coincident arrivals and
+            # accumulated-float drift must not leave a job stuck pending.
+            # Clamp t up to the popped arrival so the strict activation
+            # checks (j.arrival <= t) admit the job this round.
+            while pending and pending[0].arrival <= t + 1e-12:
+                t = max(t, pending[0].arrival)
                 pending.pop(0)
             for j in jobs:
                 if j.arrival <= t and j.done is None and j.size <= 1e-9:

@@ -1,0 +1,133 @@
+"""Admission control for the serving tier via batched SmartFill planning.
+
+A serving frontend holds R running jobs and a queue of C admission
+candidates.  Whether admitting candidate c is worth it is a *scheduling*
+question: how much does the optimal weighted completion time J of the
+mix increase when c joins?  That marginal cost is exactly what SmartFill
+computes — and with the batched planner the baseline instance plus all C
+candidate mixes are solved in **one** vmap'd device call, so admission
+decisions cost one planning round-trip regardless of queue depth.
+
+Instances are padded to R+1 slots with the batched API's prefix-mask
+convention (see ``repro.core.batch``): instance 0 is the running set
+alone, instance 1+i is the running set plus candidate i, each sorted
+sizes-non-increasing / weights-non-decreasing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import smartfill_batched
+from repro.core.speedup import Speedup
+
+__all__ = ["AdmissionDecision", "AdmissionController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    """Outcome of one batched admission evaluation.
+
+    admit: (C,) bool — marginal cost under the threshold.
+    marginal_cost: (C,) ΔJ of adding each candidate to the running set.
+    baseline_J: optimal J of the running set alone.
+    """
+
+    admit: np.ndarray
+    marginal_cost: np.ndarray
+    baseline_J: float
+
+
+def _sorted_instance(sizes, weights):
+    order = np.lexsort((weights, -sizes))
+    return sizes[order], weights[order]
+
+
+class AdmissionController:
+    """Scores admission candidates with one batched SmartFill call.
+
+    Args:
+      sp: server speedup function.
+      B: bandwidth budget (defaults to sp.B).
+      cost_threshold: admit a candidate iff its marginal ΔJ is at most
+        this (np.inf admits everything — the decision is then purely a
+        ranking, via ``AdmissionDecision.marginal_cost``).
+    """
+
+    def __init__(self, sp: Speedup, B: float | None = None,
+                 cost_threshold: float = np.inf):
+        self.sp = sp
+        self.B = float(sp.B if B is None else B)
+        self.cost_threshold = float(cost_threshold)
+
+    def evaluate(self, running_sizes, running_weights,
+                 cand_sizes, cand_weights) -> AdmissionDecision:
+        """Marginal planning cost of each candidate, one device call.
+
+        running_*: (R,) the currently admitted jobs (any order).
+        cand_*: (C,) the admission candidates.
+
+        Every running+candidate mix must be *agreeable*: sorted by size
+        descending, weights are non-decreasing (slowdown weights
+        w = 1/x always are).  Non-agreeable mixes raise ValueError —
+        SmartFill's J would not be the optimum there.
+        """
+        rs = np.asarray(running_sizes, dtype=np.float64)
+        rw = np.asarray(running_weights, dtype=np.float64)
+        cs = np.asarray(cand_sizes, dtype=np.float64)
+        cw = np.asarray(cand_weights, dtype=np.float64)
+        R, C = rs.shape[0], cs.shape[0]
+        if C == 0:
+            return AdmissionDecision(
+                admit=np.zeros(0, dtype=bool),
+                marginal_cost=np.zeros(0),
+                baseline_J=self._baseline_J(rs, rw))
+
+        M = R + 1
+        X = np.zeros((C + 1, M))
+        W = np.zeros((C + 1, M))
+        act = np.zeros((C + 1, M), dtype=bool)
+        X[0, :R], W[0, :R] = _sorted_instance(rs, rw)
+        act[0, :R] = True
+        for i in range(C):
+            xs = np.concatenate([rs, cs[i: i + 1]])
+            ws = np.concatenate([rw, cw[i: i + 1]])
+            X[1 + i], W[1 + i] = _sorted_instance(xs, ws)
+            act[1 + i] = True
+
+        # validate=True: SmartFill's optimality requires *agreeable*
+        # instances (after the size-descending sort, weights must be
+        # non-decreasing — e.g. slowdown weights w = 1/x).  A silent
+        # solve on a non-agreeable mix would rank candidates by a J
+        # that is not the optimal weighted completion time.
+        try:
+            sched = smartfill_batched(self.sp, X, W, B=self.B, active=act,
+                                      validate=True)
+        except ValueError as e:
+            raise ValueError(
+                "admission instances must be agreeable (larger size ⇒ "
+                f"smaller-or-equal weight, e.g. w = 1/x): {e}") from e
+        J = np.asarray(sched.J)
+        marginal = J[1:] - J[0]
+        return AdmissionDecision(
+            admit=marginal <= self.cost_threshold,
+            marginal_cost=marginal,
+            baseline_J=float(J[0]),
+        )
+
+    def _baseline_J(self, rs, rw) -> float:
+        if rs.shape[0] == 0:
+            return 0.0
+        xs, ws = _sorted_instance(rs, rw)
+        sched = smartfill_batched(self.sp, xs[None, :], ws[None, :],
+                                  B=self.B, validate=True)
+        return float(np.asarray(sched.J)[0])
+
+    def admit_best(self, running_sizes, running_weights,
+                   cand_sizes, cand_weights, k: int = 1) -> np.ndarray:
+        """Indices of the ≤ k admissible candidates with smallest ΔJ."""
+        dec = self.evaluate(running_sizes, running_weights,
+                            cand_sizes, cand_weights)
+        order = np.argsort(dec.marginal_cost, kind="stable")
+        return np.array([i for i in order if dec.admit[i]][:k], dtype=int)

@@ -1,0 +1,229 @@
+"""Batched SmartFill API: batched == looped == host-loop reference,
+fast path == generic path, padding/masking invariants, 256-wide vmap."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    log_speedup,
+    power,
+    shifted_power,
+    smartfill,
+    smartfill_allocations,
+    smartfill_allocations_batched,
+    smartfill_batched,
+    smartfill_reference,
+)
+
+B = 10.0
+RTOL = 1e-6
+
+
+def _random_padded_batch(rng, N, M, min_m=1):
+    X = np.zeros((N, M))
+    W = np.zeros((N, M))
+    ms = rng.integers(min_m, M + 1, N)
+    for n in range(N):
+        m = ms[n]
+        xs = np.sort(rng.uniform(0.5, 20.0, m))[::-1]
+        X[n, :m] = xs
+        W[n, :m] = 1.0 / xs
+    return X, W, ms
+
+
+SPS = {
+    "power": power(1.0, 0.5, B),
+    "shifted": shifted_power(1.0, 4.0, 0.5, B),
+    "log": log_speedup(1.0, 1.0, B),
+}
+
+
+# ---------------------------------------------------------------------------
+# Device-resident solver == host-loop reference (the pre-refactor oracle)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", list(SPS))
+def test_device_solver_matches_reference(name):
+    sp = SPS[name]
+    x = np.arange(12, 0, -1.0)
+    w = 1.0 / x
+    new = smartfill(sp, x, w, B=B)
+    ref = smartfill_reference(sp, x, w, B=B)
+    assert abs(new.J - ref.J) / ref.J < RTOL
+    np.testing.assert_allclose(np.asarray(new.theta), np.asarray(ref.theta),
+                               atol=RTOL * B)
+    np.testing.assert_allclose(np.asarray(new.a), np.asarray(ref.a),
+                               rtol=1e-4)
+    assert abs(new.J - new.J_linear) / new.J < 1e-8   # Prop. 9 holds
+
+
+# ---------------------------------------------------------------------------
+# Regular fast path (closed-form μ*) == generic grid-zoom path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("a,p", [(1.0, 0.5), (10.0, 0.8), (1.0, 0.95)])
+def test_fast_path_matches_generic(a, p):
+    """Includes near-linear p=0.95, where the grid minimizer needs the
+    x64 reference precision this suite runs under (float32 diverges to
+    ~1e-3 there — see the smartfill module docs)."""
+    sp = power(a, p, B)
+    x = np.arange(20, 0, -1.0)
+    w = 1.0 / x
+    fast = smartfill(sp, x, w, B=B)                    # auto fast path
+    slow = smartfill(sp, x, w, B=B, fast_path=False)   # forced grid-zoom
+    assert abs(fast.J - slow.J) / slow.J < RTOL
+    np.testing.assert_allclose(np.asarray(fast.theta),
+                               np.asarray(slow.theta), atol=RTOL * B)
+
+
+def test_fast_path_zero_weight_jobs_stay_finite():
+    """Leading zero weights pass validation; the closed-form μ* is 0
+    there and must be clamped, not allowed to NaN the durations."""
+    sp = SPS["power"]
+    x = np.array([3.0, 2.0, 1.0])
+    w = np.array([0.0, 0.0, 1.0])
+    fast = smartfill(sp, x, w, B=B)
+    slow = smartfill(sp, x, w, B=B, fast_path=False)
+    assert np.isfinite(fast.J) and np.isfinite(slow.J)
+    assert abs(fast.J - slow.J) <= RTOL * max(slow.J, 1.0)
+    # the only weighted job is the smallest: it runs alone first at full B
+    assert abs(fast.J - 1.0 / float(np.asarray(sp.s(np.float64(B))))) < 1e-6
+
+
+def test_fast_path_not_applied_to_non_power():
+    from repro.core.smartfill import _is_pure_power
+    assert _is_pure_power(SPS["power"])
+    assert not _is_pure_power(SPS["shifted"])
+    assert not _is_pure_power(SPS["log"])
+
+
+# ---------------------------------------------------------------------------
+# Batched == sequential, over padded random instances
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", list(SPS))
+def test_batched_matches_sequential(name):
+    sp = SPS[name]
+    rng = np.random.default_rng(1)
+    X, W, ms = _random_padded_batch(rng, N=8, M=10)
+    bs = smartfill_batched(sp, X, W, B=B, validate=True)
+    J = np.asarray(bs.J)
+    for n in range(X.shape[0]):
+        m = ms[n]
+        ref = smartfill(sp, X[n, :m], W[n, :m], B=B, validate=False)
+        assert abs(J[n] - ref.J) / ref.J < RTOL
+        np.testing.assert_allclose(np.asarray(bs.theta[n, :m, :m]),
+                                   np.asarray(ref.theta), atol=RTOL * B)
+        np.testing.assert_allclose(np.asarray(bs.T[n, :m]),
+                                   np.asarray(ref.T), rtol=1e-6)
+    # padded slots are exact zeros everywhere
+    for n in range(X.shape[0]):
+        m = ms[n]
+        assert np.all(np.asarray(bs.theta[n, m:, :]) == 0.0)
+        assert np.all(np.asarray(bs.theta[n, :, m:]) == 0.0)
+        assert np.all(np.asarray(bs.c[n, m:]) == 0.0)
+        assert np.all(np.asarray(bs.a[n, m:]) == 0.0)
+        assert np.all(np.asarray(bs.T[n, m:]) == 0.0)
+
+
+def test_batched_matches_host_reference():
+    sp = SPS["log"]
+    rng = np.random.default_rng(2)
+    X, W, ms = _random_padded_batch(rng, N=4, M=8)
+    bs = smartfill_batched(sp, X, W, B=B)
+    for n in range(4):
+        m = ms[n]
+        ref = smartfill_reference(sp, X[n, :m], W[n, :m], B=B,
+                                  validate=False)
+        assert abs(float(bs.J[n]) - ref.J) / ref.J < RTOL
+
+
+def test_batched_256_instances_one_call():
+    """Acceptance: ≥ 256 padded instances in one vmap'd call."""
+    sp = SPS["power"]
+    rng = np.random.default_rng(3)
+    N, M = 256, 8
+    X, W, ms = _random_padded_batch(rng, N, M)
+    bs = smartfill_batched(sp, X, W, B=B)
+    J = np.asarray(bs.J)
+    assert J.shape == (N,) and np.all(np.isfinite(J)) and np.all(J > 0)
+    assert bool(np.all(np.asarray(bs.m) == ms))
+    for n in rng.choice(N, 12, replace=False):
+        m = ms[n]
+        ref = smartfill(sp, X[n, :m], W[n, :m], B=B, validate=False)
+        assert abs(J[n] - ref.J) / ref.J < RTOL
+
+
+def test_batched_per_instance_budgets():
+    sp = SPS["log"]
+    x = np.arange(6, 0, -1.0)
+    w = 1.0 / x
+    Bs = np.array([4.0, 10.0, 25.0])
+    X = np.tile(x, (3, 1))
+    W = np.tile(w, (3, 1))
+    bs = smartfill_batched(sp, X, W, B=Bs)
+    for n, b in enumerate(Bs):
+        ref = smartfill(sp, x, w, B=float(b), validate=False)
+        assert abs(float(bs.J[n]) - ref.J) / ref.J < RTOL
+        # every phase spends exactly its own budget
+        np.testing.assert_allclose(np.asarray(bs.theta[n]).sum(axis=0),
+                                   b, rtol=1e-8)
+    # more bandwidth → strictly better J
+    J = np.asarray(bs.J)
+    assert J[0] > J[1] > J[2]
+
+
+def test_batched_instance_materializes_schedule():
+    sp = SPS["log"]
+    x = np.arange(5, 0, -1.0)
+    w = 1.0 / x
+    bs = smartfill_batched(sp, x[None, :], w[None, :], B=B)
+    one = bs.instance(0)
+    ref = smartfill(sp, x, w, B=B, validate=False)
+    assert abs(one.J - ref.J) / ref.J < RTOL
+
+
+def test_batched_validate_rejects_bad_convention():
+    sp = SPS["log"]
+    X = np.array([[1.0, 2.0, 3.0]])          # sizes increasing: invalid
+    W = np.ones((1, 3))
+    with pytest.raises(ValueError):
+        smartfill_batched(sp, X, W, B=B, validate=True)
+    # non-prefix active mask is rejected too
+    X2 = np.array([[3.0, 0.0, 1.0]])
+    act = np.array([[True, False, True]])
+    with pytest.raises(ValueError):
+        smartfill_batched(sp, X2, np.ones((1, 3)), B=B, active=act,
+                          validate=True)
+
+
+def test_non_prefix_mask_rejected_even_without_validate():
+    """A non-prefix mask would silently drop real jobs — always reject.
+
+    The solver consumes only the active *count*, so an interior gap
+    (e.g. from a default X > 0 mask over an unsorted row with a
+    zero-size slot in the middle) must not be solved as if the trailing
+    job did not exist.
+    """
+    sp = SPS["log"]
+    X = np.array([[5.0, 0.0, 3.0]])        # interior zero → X > 0 non-prefix
+    W = np.ones((1, 3))
+    with pytest.raises(ValueError, match="prefix"):
+        smartfill_batched(sp, X, W, B=B)
+    with pytest.raises(ValueError, match="prefix"):
+        smartfill_batched(sp, X, W, B=B,
+                          active=np.array([[True, False, True]]))
+
+
+# ---------------------------------------------------------------------------
+# Batched re-planning allocations
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["power", "log"])
+def test_allocations_batched_matches_sequential(name):
+    sp = SPS[name]
+    rng = np.random.default_rng(4)
+    X, W, ms = _random_padded_batch(rng, N=6, M=9)
+    th = np.asarray(smartfill_allocations_batched(sp, X, W, B=B))
+    assert th.shape == X.shape
+    for n in range(6):
+        m = ms[n]
+        ref = np.asarray(smartfill_allocations(sp, X[n, :m], W[n, :m], B=B))
+        np.testing.assert_allclose(th[n, :m], ref, atol=RTOL * B)
+        assert np.all(th[n, m:] == 0.0)
+        assert abs(th[n].sum() - B) < 1e-6 * B

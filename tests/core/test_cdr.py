@@ -2,6 +2,7 @@
 over random instances, and sensitivity (perturbed schedules must violate)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dependency
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

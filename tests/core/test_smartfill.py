@@ -30,10 +30,13 @@ def slowdown_instance(M):
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("a,p", [(1.0, 0.5), (10.0, 0.8)])
 @pytest.mark.parametrize("M", [5, 20, 60])
-def test_fig4_fig5_equals_hesrpt(a, p, M):
+@pytest.mark.parametrize("fast_path", [None, False])
+def test_fig4_fig5_equals_hesrpt(a, p, M, fast_path):
+    """Both the closed-form fast path (None→auto) and the numeric
+    minimizer (False) must reproduce heSRPT on its home turf."""
     sp = power(a, p, B)
     x, w = slowdown_instance(M)
-    sf = smartfill(sp, x, w, B=B)
+    sf = smartfill(sp, x, w, B=B, fast_path=fast_path)
     he = simulate_policy(sp, x, w, hesrpt_policy(p, B))
     assert abs(sf.J - he.J) / he.J < 1e-9
 
@@ -97,7 +100,7 @@ def test_execution_matches_prediction(name):
     sp = SPS[name]
     x, w = slowdown_instance(15)
     sf = smartfill(sp, x, w, B=B)
-    res = simulate_policy(sp, x, w, schedule_policy(sp, sf, x))
+    res = simulate_policy(sp, x, w, schedule_policy(sf))
     assert abs(res.J - sf.J) / sf.J < 1e-9
     np.testing.assert_allclose(res.T, np.array(sf.T), rtol=1e-9)
 

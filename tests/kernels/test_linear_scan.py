@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dependency
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.linear_scan.kernel import linear_scan

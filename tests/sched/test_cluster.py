@@ -37,6 +37,100 @@ def test_realloc_cost_hurts_and_merging_helps():
     assert J2 <= J1 * 1.05
 
 
+def test_integerize_preserves_budget_and_nonnegativity():
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        n = int(rng.integers(1, 12))
+        theta = rng.uniform(0.0, 30.0, n)
+        budget = int(rng.integers(1, 200))
+        out = integerize(theta, budget)
+        assert out.sum() == budget, (theta, budget)
+        assert np.all(out >= 0)
+        # largest-remainder: within one chip of the exact proportional share
+        assert np.abs(out - theta / theta.sum() * budget).max() <= 1.0
+
+
+def test_integerize_zero_sum_is_stable():
+    # an all-idle fleet must not divide by zero — it just gets nothing
+    out = integerize(np.zeros(4), 64)
+    assert out.shape == (4,) and out.dtype == np.int64
+    assert np.all(out == 0)
+    out = integerize(np.array([]), 64)
+    assert out.shape == (0,)
+
+
+def test_integerize_exact_integers_passthrough():
+    theta = np.array([16.0, 16.0, 32.0])
+    out = integerize(theta, 64)
+    assert np.array_equal(out, [16, 16, 32])
+
+
+def test_plan_fleets_matches_per_fleet_plan():
+    sp = log_speedup(1.0, 0.5, B)
+    cs = ClusterScheduler(sp, B)
+    fleets = [_jobs(3), _jobs(6), _jobs(5)]
+    orders, batched = cs.plan_fleets(fleets)
+    for n, fleet in enumerate(fleets):
+        _, single = cs.plan(fleet)
+        m = len(fleet)
+        assert abs(float(batched.J[n]) - single.J) / single.J < 1e-6
+        np.testing.assert_allclose(
+            np.asarray(batched.theta[n, :m, :m]),
+            np.asarray(single.theta), atol=1e-6 * B)
+
+
+def test_current_allocations_fleets_matches_single():
+    sp = log_speedup(1.0, 0.5, B)
+    cs = ClusterScheduler(sp, B)
+    fleets = [_jobs(4), _jobs(6)]
+    batched = cs.current_allocations_fleets(fleets)
+    for fleet, alloc in zip(fleets, batched):
+        single = cs.current_allocations(fleet)
+        np.testing.assert_allclose(alloc, single, atol=1e-6 * B)
+        assert abs(alloc.sum() - B) < 1e-6 * B
+
+
+def test_fleet_planning_excludes_completed_jobs():
+    """Completed jobs must not be planned or receive bandwidth."""
+    sp = log_speedup(1.0, 0.5, B)
+    cs = ClusterScheduler(sp, B)
+    fleet = _jobs(4)
+    fleet[1].done = 3.0                     # finished mid-simulation
+    fleet.append(Job(name="finished", size=0.0, weight=1.0, done=1.0))
+    batched = cs.current_allocations_fleets([fleet])[0]
+    single = cs.current_allocations(fleet)
+    np.testing.assert_allclose(batched, single, atol=1e-6 * B)
+    assert batched[1] == 0.0 and batched[-1] == 0.0
+    assert abs(batched.sum() - B) < 1e-6 * B
+    orders, sched = cs.plan_fleets([fleet])
+    assert 1 not in orders[0] and 4 not in orders[0]
+    assert int(sched.m[0]) == 3
+
+
+def test_fleet_allocations_all_completed_keeps_shapes():
+    sp = log_speedup(1.0, 0.5, B)
+    cs = ClusterScheduler(sp, B)
+    done_fleet = [Job("a", 0.0, 1.0, done=1.0), Job("b", 0.0, 1.0, done=2.0)]
+    allocs = cs.current_allocations_fleets([done_fleet, []])
+    assert allocs[0].shape == (2,) and np.all(allocs[0] == 0.0)
+    assert allocs[1].shape == (0,)
+    # matches the single-fleet method's shape contract
+    assert cs.current_allocations(done_fleet).shape == (2,)
+
+
+def test_coincident_arrivals_are_not_skipped():
+    sp = log_speedup(1.0, 0.5, B)
+    jobs = _jobs(3)
+    jobs.append(Job(name="late1", size=80.0, weight=0.0125, arrival=1.0))
+    jobs.append(Job(name="late2", size=60.0, weight=0.016, arrival=1.0))
+    events, J = ClusterScheduler(sp, B).simulate(jobs)
+    assert np.isfinite(J) and J > 0
+    # both coincident arrivals were admitted: after the arrival instant
+    # some event allocates bandwidth to job indices 3 and 4
+    post = np.array([th for t, th in events if t >= 1.0])
+    assert post.size and post[:, 3].max() > 0 and post[:, 4].max() > 0
+
+
 def test_integer_chips():
     theta = np.array([10.7, 20.2, 33.1])
     out = integerize(theta, 64)

@@ -1,0 +1,90 @@
+"""Admission control: marginal-ΔJ scoring via one batched SmartFill call."""
+import numpy as np
+import pytest
+
+from repro.core import log_speedup, smartfill
+from repro.serve.admission import AdmissionController
+
+B = 10.0
+
+
+def _sorted(x, w):
+    order = np.lexsort((w, -x))
+    return x[order], w[order]
+
+
+@pytest.fixture(scope="module")
+def sp():
+    return log_speedup(1.0, 1.0, B)
+
+
+def test_marginal_cost_matches_sequential_replanning(sp):
+    running = np.array([8.0, 5.0, 2.0])
+    r_w = 1.0 / running
+    cands = np.array([6.0, 1.0])
+    c_w = 1.0 / cands
+    ac = AdmissionController(sp, B)
+    dec = ac.evaluate(running, r_w, cands, c_w)
+
+    xs, ws = _sorted(running, r_w)
+    J_base = smartfill(sp, xs, ws, B=B, validate=False).J
+    assert abs(dec.baseline_J - J_base) / J_base < 1e-6
+    for i in range(2):
+        xs, ws = _sorted(np.append(running, cands[i]),
+                         np.append(r_w, c_w[i]))
+        J_i = smartfill(sp, xs, ws, B=B, validate=False).J
+        assert abs(dec.marginal_cost[i] - (J_i - J_base)) < 1e-6 * J_i
+
+
+def test_adding_work_never_helps(sp):
+    rng = np.random.default_rng(0)
+    running = np.sort(rng.uniform(1.0, 10.0, 5))[::-1]
+    cands = rng.uniform(0.5, 10.0, 7)
+    dec = AdmissionController(sp, B).evaluate(
+        running, 1.0 / running, cands, 1.0 / cands)
+    assert np.all(dec.marginal_cost > 0)
+
+
+def test_threshold_gates_admission(sp):
+    running = np.array([5.0, 3.0])
+    cands = np.array([0.5, 20.0])      # a tiny job and a huge job
+    dec = AdmissionController(sp, B, cost_threshold=np.inf).evaluate(
+        running, 1.0 / running, cands, 1.0 / cands)
+    assert dec.admit.all()
+    # a threshold between the two costs admits only the cheap one
+    thr = float(np.sort(dec.marginal_cost).mean())
+    dec2 = AdmissionController(sp, B, cost_threshold=thr).evaluate(
+        running, 1.0 / running, cands, 1.0 / cands)
+    assert dec2.admit.sum() == 1
+    assert dec2.admit[np.argmin(dec2.marginal_cost)]
+
+
+def test_admit_best_ranks_by_marginal_cost(sp):
+    running = np.array([5.0])
+    cands = np.array([9.0, 0.5, 3.0])
+    ac = AdmissionController(sp, B)
+    best = ac.admit_best(running, 1.0 / running, cands, 1.0 / cands, k=2)
+    dec = ac.evaluate(running, 1.0 / running, cands, 1.0 / cands)
+    assert list(best) == list(np.argsort(dec.marginal_cost, kind="stable")[:2])
+
+
+def test_non_agreeable_weights_rejected(sp):
+    """SmartFill's J is only optimal on agreeable instances — a mix where
+    the bigger job has the bigger weight must raise, not silently rank."""
+    running = np.array([8.0, 5.0])
+    r_w = np.array([5.0, 0.1])             # big job, big weight: not agreeable
+    cands = np.array([2.0])
+    with pytest.raises(ValueError, match="agreeable"):
+        AdmissionController(sp, B).evaluate(running, r_w, cands,
+                                            1.0 / cands)
+
+
+def test_empty_edge_cases(sp):
+    ac = AdmissionController(sp, B)
+    dec = ac.evaluate(np.array([]), np.array([]), np.array([]), np.array([]))
+    assert dec.baseline_J == 0.0 and dec.admit.shape == (0,)
+    # empty running set: marginal cost is the candidate's standalone J
+    cands = np.array([4.0])
+    dec = ac.evaluate(np.array([]), np.array([]), cands, 1.0 / cands)
+    J_solo = smartfill(sp, cands, 1.0 / cands, B=B, validate=False).J
+    assert abs(dec.marginal_cost[0] - J_solo) < 1e-6 * J_solo
