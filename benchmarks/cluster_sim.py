@@ -10,11 +10,15 @@ from __future__ import annotations
 
 import os
 
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
 import numpy as np
 
-from repro.core import (fit_power, hesrpt_policy, neg_power,
-                        simulate_policy, smartfill)
+from repro.core import fit_power, simulate_ensemble, simulate_policy
 from repro.sched.cluster import ClusterScheduler, Job
+from repro.sched.policies import EquiPolicy, HeSRPTPolicy, SmartFillPolicy
 from repro.sched.speedup_models import calibrate_from_dryrun, job_speedup
 
 B_CHIPS = 256.0
@@ -43,19 +47,35 @@ def bench_cluster(M: int = 12):
     jobs = [Job(name=f"job{i}", size=float(sizes[i]),
                 weight=float(weights[i])) for i in range(M)]
 
+    # exact (cost-free) run goes through the device scenario engine
     cs = ClusterScheduler(sp, B_CHIPS)
     _, J_sf = cs.simulate([Job(**vars(j)) for j in jobs])
 
     a_fit, p_fit = fit_power(
         lambda t: float(sp.s(np.float64(max(t, 1e-6)))), B_CHIPS)
-    he = simulate_policy(sp, sizes, weights, hesrpt_policy(p_fit, B_CHIPS),
-                         B=B_CHIPS)
+    he = simulate_policy(sp, sizes, weights,
+                         HeSRPTPolicy(p=p_fit, B=B_CHIPS), B=B_CHIPS)
 
+    # host event loop still charges the real-world costs
     _, J_cost = ClusterScheduler(sp, B_CHIPS, realloc_cost_s=30.0,
                                  min_delta=2.0).simulate(
         [Job(**vars(j)) for j in jobs])
     _, J_int = ClusterScheduler(sp, B_CHIPS, integer_chips=True).simulate(
         [Job(**vars(j)) for j in jobs])
+
+    # policy face-off over a random fleet ensemble — one compiled call.
+    # Per-job (not per-fleet) scaling: slowdown-weighted J is invariant
+    # under a common scale factor, so per-fleet scaling would collapse
+    # the ensemble to 64 copies of one instance.
+    K = 64
+    X = np.sort(np.tile(sizes, (K, 1)) * rng.uniform(0.5, 2.0, (K, M)),
+                axis=1)[:, ::-1].copy()
+    W = 1.0 / X
+    ens = simulate_ensemble(
+        sp, (SmartFillPolicy(sp, B=B_CHIPS),
+             HeSRPTPolicy(p=p_fit, B=B_CHIPS), EquiPolicy(B_CHIPS)),
+        X, W, B=B_CHIPS)
+    Jm = np.asarray(ens.J).mean(axis=1)
 
     gap = 100 * (he.J - J_sf) / he.J
     return [
@@ -68,4 +88,7 @@ def bench_cluster(M: int = 12):
         {"name": "cluster_smartfill_integer_chips_J", "us_per_call": J_int,
          "derived": f"integrality_overhead_pct="
                     f"{100*(J_int-J_sf)/J_sf:.3f}"},
+        {"name": f"cluster_ensemble_K{K}_meanJ", "us_per_call": float(Jm[0]),
+         "derived": (f"hesrpt_meanJ={Jm[1]:.4e};equi_meanJ={Jm[2]:.4e};"
+                     f"policies={'|'.join(ens.policy_names)}")},
     ]

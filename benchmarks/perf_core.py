@@ -24,10 +24,12 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (log_speedup, power, shifted_power, smartfill,
+from repro.core import (log_speedup, power, sample_workloads, shifted_power,
+                        simulate_ensemble, simulate_policy_device, smartfill,
                         smartfill_batched)
 from repro.core.gwf import solve_cap
 from repro.kernels.gwf_waterfill.ref import gwf_waterfill_ref
+from repro.sched.policies import EquiPolicy, HeSRPTPolicy, SmartFillPolicy
 
 B = 10.0
 
@@ -113,6 +115,59 @@ def bench_smartfill_batched(n_instances=256, ms=(16, 32), reps=2):
     return rows
 
 
+def bench_simulator(K=256, M=16, reps=3):
+    """Scenario-engine throughput: simulated events/sec, single vs ensemble.
+
+    Single = one jitted ``lax.scan`` run of re-planning SmartFill on an
+    M-job instance; ensemble = P policies × K random workloads in one
+    compiled call (``simulate_ensemble``).  Events counted are executed
+    (non-halt) engine events.
+    """
+    sp = power(1.0, 0.5, B)
+    x = np.arange(M, 0, -1.0)
+    w = 1.0 / x
+    pol_sf = SmartFillPolicy(sp, B=B)
+
+    def run_single():
+        return simulate_policy_device(sp, x, w, pol_sf, B=B, trace=False)
+
+    res = run_single()                              # compile + warm
+    n_ev = res.n_events
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        res = run_single()
+    dt_single = (time.perf_counter() - t0) / reps
+    rows = [{
+        "name": f"sim_single_smartfill_M{M}",
+        "us_per_call": dt_single * 1e6,
+        "events_per_sec": n_ev / dt_single,
+        "events": n_ev,
+    }]
+
+    wl = sample_workloads(0, K=K, M=M, B=B, m_range=(max(2, M // 2), M))
+    policies = (pol_sf, HeSRPTPolicy(0.5, B), EquiPolicy(B))
+
+    def run_ensemble():
+        out = simulate_ensemble(sp, policies, wl.X, wl.W, B=B)
+        jax.block_until_ready(out.J)
+        return out
+
+    out = run_ensemble()                            # compile + warm
+    total_events = int(np.asarray(out.n_events).sum())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = run_ensemble()
+    dt_ens = (time.perf_counter() - t0) / reps
+    rows.append({
+        "name": f"sim_ensemble_P{len(policies)}_K{K}_M{M}",
+        "us_per_call": dt_ens * 1e6,
+        "events_per_sec": total_events / dt_ens,
+        "events": total_events,
+        "instances_per_sec": len(policies) * K / dt_ens,
+    })
+    return rows
+
+
 def collect(quick: bool = False):
     """All rows + the single-vs-batched amortization summary.
 
@@ -124,6 +179,7 @@ def collect(quick: bool = False):
     single = bench_smartfill(ms=(10, 50) if quick else (10, 50, 100))
     single += bench_smartfill(ms=batched_ms)        # same-M baselines
     batched = bench_smartfill_batched(n_instances=n, ms=batched_ms)
+    simulator = bench_simulator(K=64 if quick else 256, M=16)
     summary = {}
     for r in batched:
         base = next((s for s in single
@@ -132,10 +188,16 @@ def collect(quick: bool = False):
         if base is not None:
             summary[r["name"] + "_amortization_x"] = (
                 base["us_per_call"] / r["us_per_instance"])
+    sim_single = simulator[0]
+    sim_ens = simulator[1]
+    summary["sim_ensemble_events_per_sec"] = sim_ens["events_per_sec"]
+    summary["sim_ensemble_amortization_x"] = (
+        sim_ens["events_per_sec"] / sim_single["events_per_sec"])
     return {
         "gwf": bench_gwf(),
         "smartfill_single": single,
         "smartfill_batched": batched,
+        "simulator": simulator,
         "summary": summary,
         "config": {"B": B, "n_instances": n, "x64": jax.config.jax_enable_x64},
     }
@@ -149,7 +211,7 @@ def bench_rows(quick: bool = False):
     """
     report = collect(quick=quick)
     return (report["gwf"] + report["smartfill_single"]
-            + report["smartfill_batched"])
+            + report["smartfill_batched"] + report["simulator"])
 
 
 def main():
@@ -160,10 +222,12 @@ def main():
     report = collect(quick=args.quick)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
-    for sec in ("smartfill_single", "smartfill_batched"):
+    for sec in ("smartfill_single", "smartfill_batched", "simulator"):
         for r in report[sec]:
             extra = (f"  {r['instances_per_sec']:.0f} inst/s"
                      if "instances_per_sec" in r else "")
+            if "events_per_sec" in r:
+                extra += f"  {r['events_per_sec']:.0f} events/s"
             print(f"{r['name']:48s} {r['us_per_call']:12.1f} µs/call{extra}")
     print(f"wrote {args.out}")
 

@@ -47,9 +47,12 @@ def main() -> None:
 
     if "perf" not in skip:
         for r in perf_core.bench_rows(quick=args.quick):
-            derived = (f"instances_per_sec={r['instances_per_sec']:.0f}"
-                       if "instances_per_sec" in r else "")
-            print(f"{r['name']},{r['us_per_call']:.1f},{derived}")
+            parts = []
+            if "instances_per_sec" in r:
+                parts.append(f"instances_per_sec={r['instances_per_sec']:.0f}")
+            if "events_per_sec" in r:
+                parts.append(f"events_per_sec={r['events_per_sec']:.0f}")
+            print(f"{r['name']},{r['us_per_call']:.1f},{';'.join(parts)}")
             sys.stdout.flush()
 
     if "cluster" not in skip:

@@ -28,8 +28,14 @@ from .batch import (  # noqa: F401
 from .hesrpt import fit_power, hesrpt_allocations, hesrpt_policy  # noqa: F401
 from .cdr import cdr_violation, estimate_constants  # noqa: F401
 from .simulator import (  # noqa: F401
+    EnsembleResult,
     SimResult,
+    n_events_for,
     schedule_policy,
+    simulate_ensemble,
     simulate_policy,
+    simulate_policy_device,
+    simulate_policy_reference,
     smartfill_sim_policy,
 )
+from .workloads import FAMILIES, WorkloadBatch, sample_workloads  # noqa: F401

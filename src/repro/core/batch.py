@@ -39,7 +39,28 @@ __all__ = [
     "BatchedSmartFillSchedule",
     "smartfill_batched",
     "smartfill_allocations_batched",
+    "validate_padded_instances",
 ]
+
+
+def validate_padded_instances(X, W, m) -> None:
+    """Host-check the sorting convention on each padded instance.
+
+    Raises ValueError naming the first offending instance whose active
+    prefix (slots 0..m−1) is not sizes-non-increasing with weights
+    non-decreasing.  Shared by ``smartfill_batched(validate=True)`` and
+    the serving tier's admission controller.
+    """
+    ms = np.asarray(m)
+    xs, ws = np.asarray(X), np.asarray(W)
+    for n in range(xs.shape[0]):
+        k = int(ms[n])
+        if k == 0:
+            continue
+        try:
+            _validate_instance(xs[n, :k], ws[n, :k])
+        except ValueError as e:
+            raise ValueError(f"instance {n}: {e}") from e
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,16 +160,7 @@ def smartfill_batched(
     Bv = jnp.broadcast_to(jnp.asarray(B, Xm.dtype), (N,))
 
     if validate:
-        ms = np.asarray(m)
-        xs, ws = np.asarray(Xm), np.asarray(Wm)
-        for n in range(N):
-            k = int(ms[n])
-            if k == 0:
-                continue
-            try:
-                _validate_instance(xs[n, :k], ws[n, :k])
-            except ValueError as e:
-                raise ValueError(f"instance {n}: {e}") from e
+        validate_padded_instances(Xm, Wm, m)
 
     fast = _is_pure_power(sp) and fast_path is not False
     theta, c, a, d, T, J, J_lin = jax.vmap(

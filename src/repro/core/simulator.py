@@ -1,75 +1,402 @@
-"""Event-driven continuous-time executor of scheduling policies.
+"""Device-resident scenario engine: event-driven execution of policies.
 
-Validates any policy under the *true* speedup function: between events
-allocations are constant, so the next event is the earliest completion
-min_i rem_i / s(θ_i); at each event the policy is re-invoked with the
-updated remaining sizes.  Exact for piecewise-constant policies (which
-both SmartFill and heSRPT are, Prop. 7) — no time discretization error.
+Between events allocations are constant, so the next event is the
+earliest of (a) a completion min_i rem_i / s(θ_i) and (b) a pending
+arrival; at each event the policy is re-invoked on the updated remaining
+sizes.  Exact for piecewise-constant policies (which SmartFill, heSRPT
+and every policy in ``sched/policies.py`` are, Prop. 7) — no time
+discretization error.
+
+Two executors share these semantics:
+
+``simulate_policy`` (device engine)
+    One jitted ``lax.scan`` over a **fixed** event count 4M+16 — enough
+    for M completions plus M arrival events with a 2×+16 safety margin.
+    Jobs are padded (size 0 ⇒ never active), arrivals are folded in as
+    events (the step advances to exactly ``min(t + dt_completion,
+    next_arrival)``), and halting is a masked no-op so the program shape
+    is static.  Policies must be jax-traceable ``(rem, w, active) → θ``
+    pytrees (see ``sched/policies.py``); legacy host callables are
+    transparently routed to the reference loop.
+
+``simulate_policy_reference`` (host oracle)
+    The original numpy event loop, kept as the differential-test oracle
+    for the device engine, extended with the same arrival-event
+    semantics.
+
+``simulate_ensemble`` evaluates P policies × K workloads in **one**
+compiled call: a Python-unrolled loop over policies (each a distinct
+pytree) around a ``jax.vmap`` over workloads, inside a single
+``jax.jit``.  Speedup parameters may themselves be batched per workload:
+any pytree leaf of ``sp`` (or of a policy) with leading dimension K is
+vmapped alongside the workload arrays.
 
 Used for
   * cross-checking SmartFill's predicted J (= Σ a_i x_i) against an
     independent execution of its schedule,
-  * evaluating the approximation-based heSRPT benchmark under a true
-    concave s (paper §6.2), and
-  * the cluster-scheduler event loop (sched/cluster.py builds on this).
+  * evaluating baseline policies (heSRPT, EQUI, …) under a true concave
+    s over large randomized ensembles (paper §6), and
+  * the cluster-scheduler event loop (sched/cluster.py) and the serving
+    tier's simulated admission scoring (serve/admission.py).
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
-__all__ = ["SimResult", "simulate_policy", "schedule_policy", "smartfill_sim_policy"]
+__all__ = [
+    "SimResult",
+    "EnsembleResult",
+    "n_events_for",
+    "simulate_policy",
+    "simulate_policy_device",
+    "simulate_policy_reference",
+    "simulate_ensemble",
+    "schedule_policy",
+    "smartfill_sim_policy",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class SimResult:
     T: np.ndarray          # completion time per job
-    J: float               # Σ w_i T_i
+    J: float               # Σ w_i T_i (inf if any job failed to finish)
     events: list           # (t, allocations) trace
     n_events: int
 
 
-def simulate_policy(sp, x, w, policy, B: float | None = None,
+@dataclasses.dataclass(frozen=True)
+class EnsembleResult:
+    """Stacked outcomes of P policies × K workloads (device arrays).
+
+    J[p, k] = Σ_i w_i T_i of policy p on workload k (+inf where the
+    policy failed to complete every job within the event budget);
+    T: (P, K, M) completion times; finished: (P, K) all-jobs-done flags;
+    n_events: (P, K) executed (non-halt) event counts.
+    """
+
+    J: jnp.ndarray
+    T: jnp.ndarray
+    finished: jnp.ndarray
+    n_events: jnp.ndarray
+    policy_names: tuple
+
+    def __len__(self) -> int:
+        return int(self.J.shape[0])
+
+
+def n_events_for(M: int) -> int:
+    """Fixed event budget of the device engine: 4M + 16."""
+    return 4 * int(M) + 16
+
+
+# ---------------------------------------------------------------------------
+# Device engine
+# ---------------------------------------------------------------------------
+
+def _sim_core(sp, policy, x, w, arrival, rtol, n_events):
+    """Traced single-instance event loop — the body shared by jit/vmap.
+
+    Jobs with x == 0 are padding: never arrive, never run, T = 0.
+    Returns (T, finished, ts, thetas, valid) where ts/thetas/valid are
+    the (n_events,)-padded event trace (valid=False ⇒ halt no-op).
+    """
+    dtype = x.dtype
+    M = x.shape[0]
+    real = x > 0
+    rem0 = jnp.where(real, x, 0.0)
+    # completion tolerance: relative to the largest job, floored at a few
+    # ulps of the working dtype so float32 runs still detect completions
+    eps = jnp.finfo(dtype).eps
+    tol = jnp.maximum(rtol, 8.0 * eps) * jnp.maximum(1.0, jnp.max(x, initial=0.0))
+    zero = jnp.zeros((), dtype)
+
+    def step(carry, _):
+        t, rem, T = carry
+        arrived = real & (arrival <= t)
+        active = arrived & (rem > 0)
+        theta = jnp.where(active, policy(rem, w, active), zero)
+        rates = jnp.where(active, sp.s(theta), zero)
+        runnable = active & (rates > 0)
+        dt_c = jnp.min(jnp.where(runnable,
+                                 rem / jnp.where(runnable, rates, 1.0),
+                                 jnp.inf))
+        pending = real & ~arrived
+        t_arr = jnp.min(jnp.where(pending, arrival, jnp.inf))
+        t_next = jnp.minimum(t + dt_c, t_arr)   # == t_arr exactly on arrivals
+        live = jnp.isfinite(t_next)
+        t_new = jnp.where(live, t_next, t)
+        dt = t_new - t
+        rem2 = jnp.where(active, rem - rates * dt, rem)
+        done_now = active & (rem2 <= tol)
+        T = jnp.where(done_now, t_new, T)
+        rem2 = jnp.where(done_now, zero, jnp.maximum(rem2, 0.0))
+        return (t_new, rem2, T), (t, theta, live)
+
+    carry0 = (zero, rem0, jnp.zeros((M,), dtype))
+    (_, rem_end, T), (ts, thetas, valid) = lax.scan(
+        step, carry0, None, length=n_events)
+    finished = jnp.all(~real | (rem_end <= 0))
+    return T, finished, ts, thetas, valid
+
+
+@partial(jax.jit, static_argnames=("n_events",))
+def _simulate_jit(sp, policy, x, w, arrival, rtol, n_events):
+    T, finished, ts, thetas, valid = _sim_core(
+        sp, policy, x, w, arrival, rtol, n_events)
+    J = jnp.where(finished, jnp.sum(w * T), jnp.inf)
+    return T, J, finished, ts, thetas, valid
+
+
+def _check_policy_budget(policy, B):
+    """The engine spends the *policy's* budget; a caller-supplied B is a
+    cross-check only.  Raise loudly on a concrete mismatch instead of
+    silently simulating a different budget than the caller asked for."""
+    if B is None:
+        return
+    pB = getattr(policy, "B", None)
+    if pB is None:
+        return
+    try:
+        ok = np.allclose(np.asarray(B, dtype=np.float64),
+                         np.asarray(pB, dtype=np.float64))
+    except (TypeError, ValueError, jax.errors.TracerArrayConversionError):
+        return                      # traced / non-broadcastable: trust caller
+    if not ok:
+        raise ValueError(
+            f"B={B} disagrees with {getattr(policy, 'name', policy)!r}'s "
+            f"own budget {pB}; the engine executes the policy's B — "
+            "construct the policy with the budget you want (per-workload "
+            "budgets: give the policy a (K,)-shaped B leaf)")
+
+
+def simulate_policy_device(sp, x, w, policy, B=None, arrival=None,
+                           rtol: float = 1e-12, max_events: int | None = None,
+                           trace: bool = True) -> SimResult:
+    """Run a jax-traceable policy through the ``lax.scan`` engine.
+
+    policy(rem, w, active) → (M,) allocations with Σ over active ≤ B;
+    must be a pytree of traceable ops (see ``sched/policies.py``).  The
+    bandwidth budget is the **policy's own B** — the ``B`` kwarg is only
+    cross-checked against it (mismatch raises).  ``arrival`` (optional)
+    holds per-job release times; jobs are folded in as events.  Returns
+    a host-materialized SimResult; jobs that did not complete within the
+    4M+16 event budget leave J = +inf.
+    """
+    _check_policy_budget(policy, B)
+    x = jnp.asarray(x, dtype=jnp.result_type(float))
+    w = jnp.asarray(w, dtype=x.dtype)
+    M = x.shape[0]
+    if M == 0:                          # match the reference: nothing to do
+        return SimResult(T=np.zeros(0), J=0.0, events=[], n_events=0)
+    arr = (jnp.zeros((M,), x.dtype) if arrival is None
+           else jnp.asarray(arrival, x.dtype))
+    n_events = int(max_events or n_events_for(M))
+    T, J, finished, ts, thetas, valid = _simulate_jit(
+        sp, policy, x, w, arr, jnp.asarray(rtol, x.dtype), n_events)
+    if not trace:
+        return SimResult(T=np.asarray(T), J=float(J), events=[],
+                         n_events=int(np.asarray(valid).sum()))
+    ts = np.asarray(ts)
+    thetas = np.asarray(thetas)
+    mask = np.asarray(valid)
+    events = [(float(ts[i]), thetas[i].copy())
+              for i in np.flatnonzero(mask)]
+    return SimResult(T=np.asarray(T), J=float(J), events=events,
+                     n_events=len(events))
+
+
+def simulate_policy(sp, x, w, policy, B=None, arrival=None,
                     rtol: float = 1e-12, max_events: int | None = None):
     """Run ``policy`` to completion under true speedup ``sp``.
 
+    Dispatch: pytree policies from ``sched/policies.py`` (marked
+    ``device_ready``) run on the ``lax.scan`` device engine; plain host
+    callables run on the numpy reference loop (the pre-engine behavior).
+    """
+    if getattr(policy, "device_ready", False):
+        return simulate_policy_device(sp, x, w, policy, B=B,
+                                      arrival=arrival, rtol=rtol,
+                                      max_events=max_events)
+    return simulate_policy_reference(sp, x, w, policy, B=B, arrival=arrival,
+                                     rtol=rtol, max_events=max_events)
+
+
+# ---------------------------------------------------------------------------
+# Ensemble runner: P policies × K workloads, one compiled call
+# ---------------------------------------------------------------------------
+
+def _batch_axes(tree, K: int):
+    """vmap in_axes for ``tree``: leaves with leading dim K map on 0."""
+    return jax.tree_util.tree_map(
+        lambda l: 0 if (hasattr(l, "ndim") and getattr(l, "ndim", 0) >= 1
+                        and l.shape[0] == K) else None, tree)
+
+
+@partial(jax.jit, static_argnames=("n_events",))
+def _ensemble_jit(sp, policies, X, W, ARR, rtol, n_events):
+    K = X.shape[0]
+    sp_axes = _batch_axes(sp, K)
+    Ts, Js, fins, nev = [], [], [], []
+    for pol in policies:                 # static unroll — one program
+        pol_axes = _batch_axes(pol, K)
+
+        def one(spv, pv, xk, wk, ak):
+            T, finished, _, _, valid = _sim_core(
+                spv, pv, xk, wk, ak, rtol, n_events)
+            J = jnp.where(finished, jnp.sum(wk * T), jnp.inf)
+            return T, J, finished, jnp.sum(valid)
+
+        T, J, finished, ne = jax.vmap(
+            one, in_axes=(sp_axes, pol_axes, 0, 0, 0))(
+                sp, pol, X, W, ARR)
+        Ts.append(T)
+        Js.append(J)
+        fins.append(finished)
+        nev.append(ne)
+    return (jnp.stack(Js), jnp.stack(Ts), jnp.stack(fins), jnp.stack(nev))
+
+
+def _check_axes_unambiguous(tree, K: int, M: int, what: str):
+    """With K == M a 1-D (K,) leaf could equally be per-job data; refuse
+    to guess (a wrong guess silently corrupts every instance)."""
+    if K != M:
+        return
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if getattr(leaf, "ndim", 0) == 1 and leaf.shape[0] == K:
+            raise ValueError(
+                f"{what} has a 1-D leaf of length {K} but K == M — the "
+                "engine cannot tell per-workload (K,) leaves from "
+                "per-job (M,) leaves; reshape per-workload leaves to "
+                "(K, 1) (they broadcast) or pick K ≠ M")
+
+
+def simulate_ensemble(sp, policies, X, W, arrival=None, B=None,
+                      rtol: float = 1e-12,
+                      n_events: int | None = None) -> EnsembleResult:
+    """Evaluate P policies × K workloads in one compiled device call.
+
+    Args:
+      sp: true speedup driving the dynamics.  Pytree leaves with leading
+        dimension K (e.g. per-workload ``RegularSpeedup`` parameters from
+        ``core/workloads.py``) are vmapped per workload; scalar leaves
+        are shared.  (When K == M this is ambiguous for 1-D leaves and
+        the call raises — reshape per-workload leaves to (K, 1).)
+      policies: sequence of device-ready policy pytrees
+        (``sched/policies.py``).  Per-workload policy parameters batch
+        the same way as ``sp`` — e.g. a (K,)-shaped ``B`` leaf gives
+        each workload its own budget.
+      X, W: (K, M) padded sizes / weights (size 0 ⇒ padding).
+      arrival: optional (K, M) release times (0 = present at start).
+      B: cross-check only — each policy spends its *own* B; a concrete
+        mismatch with a policy's budget raises.
+      n_events: event budget per instance; defaults to 4M+16.
+
+    Returns an EnsembleResult with all arrays still on device.
+    """
+    X = jnp.asarray(X, dtype=jnp.result_type(float))
+    W = jnp.asarray(W, dtype=X.dtype)
+    if X.ndim != 2 or W.shape != X.shape:
+        raise ValueError("X and W must both be (K, M)")
+    K, M = X.shape
+    ARR = (jnp.zeros_like(X) if arrival is None
+           else jnp.asarray(arrival, X.dtype))
+    if ARR.shape != X.shape:
+        raise ValueError("arrival must be (K, M)")
+    policies = tuple(policies)
+    if not policies:
+        raise ValueError("need at least one policy")
+    if M == 0:                          # K empty instances: all-zero result
+        P = len(policies)
+        return EnsembleResult(
+            J=jnp.zeros((P, K), X.dtype), T=jnp.zeros((P, K, 0), X.dtype),
+            finished=jnp.ones((P, K), bool),
+            n_events=jnp.zeros((P, K), jnp.int32),
+            policy_names=tuple(getattr(p, "name", type(p).__name__)
+                               for p in policies))
+    _check_axes_unambiguous(sp, K, M, "sp")
+    for p in policies:
+        if not getattr(p, "device_ready", False):
+            raise ValueError(
+                f"policy {p!r} is not device-ready; use sched/policies.py")
+        _check_policy_budget(p, B)
+        _check_axes_unambiguous(p, K, M, f"policy {getattr(p, 'name', p)!r}")
+    n_events = int(n_events or n_events_for(M))
+    J, T, finished, ne = _ensemble_jit(
+        sp, policies, X, W, ARR, jnp.asarray(rtol, X.dtype), n_events)
+    names = tuple(getattr(p, "name", type(p).__name__) for p in policies)
+    return EnsembleResult(J=J, T=T, finished=finished, n_events=ne,
+                          policy_names=names)
+
+
+# ---------------------------------------------------------------------------
+# Host reference loop (the pre-engine implementation) — the differential
+# oracle for the device engine.  Arrival events use the same semantics.
+# ---------------------------------------------------------------------------
+
+def simulate_policy_reference(sp, x, w, policy, B: float | None = None,
+                              arrival=None, rtol: float = 1e-12,
+                              max_events: int | None = None):
+    """Numpy event loop oracle; exact same event semantics as the engine.
+
     policy(rem, w, active) → (M,) allocations with Σ over active ≤ B.
+    Raises on budget violations, deadlock and event-budget exhaustion —
+    host-side checks the device engine cannot afford.
     """
     x = np.asarray(x, dtype=np.float64)
     w = np.asarray(w, dtype=np.float64)
     M = x.shape[0]
-    B = float(sp.B if B is None else B)
-    rem = x.copy()
-    active = rem > 0
+    B = float(getattr(sp, "B", 0.0) if B is None else B)
+    real = x > 0
+    arr = (np.zeros(M) if arrival is None
+           else np.asarray(arrival, dtype=np.float64))
+    rem = np.where(real, x, 0.0)
     T = np.zeros(M)
     t = 0.0
     events = []
-    limit = max_events or (4 * M + 16)
-    tol = rtol * max(1.0, float(x.max()))
+    limit = max_events or n_events_for(M)
+    # same tolerance formula as the device engine (float64 host side)
+    tol = max(rtol, 8.0 * np.finfo(np.float64).eps) * max(
+        1.0, float(x.max()) if M else 1.0)
 
     for _ in range(limit):
-        if not active.any():
+        arrived = real & (arr <= t)
+        active = arrived & (rem > 0)
+        pending = real & ~arrived
+        if not active.any() and not pending.any():
             return SimResult(T=T, J=float(np.sum(w * T)), events=events,
                              n_events=len(events))
-        theta = np.asarray(policy(rem, w, active), dtype=np.float64)
+        theta = np.where(active,
+                         np.asarray(policy(rem, w, active), dtype=np.float64),
+                         0.0)
         if theta[active].sum() > B * (1 + 1e-9):
             raise ValueError("policy exceeded bandwidth budget")
-        rates = np.array(sp.s(theta), dtype=np.float64)
-        rates[~active] = 0.0
+        rates = np.where(active, np.array(sp.s(theta), dtype=np.float64), 0.0)
         runnable = active & (rates > 0)
-        if not runnable.any():
+        if not runnable.any() and not pending.any():
             raise RuntimeError("deadlock: no active job has positive rate")
-        dt = float(np.min(rem[runnable] / rates[runnable]))
+        dt_c = (float(np.min(rem[runnable] / rates[runnable]))
+                if runnable.any() else np.inf)
+        t_arr = float(np.min(arr[pending])) if pending.any() else np.inf
+        t_next = min(t + dt_c, t_arr)
         events.append((t, theta.copy()))
-        t += dt
-        rem = rem - rates * dt
+        dt = t_next - t
+        t = t_next
+        rem = np.where(active, rem - rates * dt, rem)
         done = active & (rem <= tol)
         T[done] = t
         rem[done] = 0.0
-        active &= ~done
     raise RuntimeError(f"exceeded {limit} events — policy may not complete jobs")
 
+
+# ---------------------------------------------------------------------------
+# Host policy wrappers (legacy; dispatched to the reference loop)
+# ---------------------------------------------------------------------------
 
 def schedule_policy(schedule):
     """Wrap a precomputed SmartFillSchedule as a re-planning policy.
@@ -96,6 +423,8 @@ def smartfill_sim_policy(sp, B: float | None = None):
 
     At every event, re-run SmartFill on the remaining sizes.  For the
     OPT setting this must reproduce the one-shot schedule's J.
+    (Host-side; the device-resident equivalent is
+    ``sched.policies.SmartFillPolicy``.)
     """
     from .smartfill import smartfill_allocations
 

@@ -106,16 +106,19 @@ def _is_pure_power(sp: Speedup) -> bool:
     """True iff ``sp`` is s = aθ^p (closed-form μ* per iteration).
 
     Decidable only for concrete (non-traced) parameters; a traced ``sp``
-    conservatively takes the generic path.
+    conservatively takes the generic path.  Batched parameters (leaves
+    with a leading instance dimension, as produced by
+    ``core/workloads.py``) qualify iff *every* instance is pure power —
+    after vmap each lane sees its own scalar (w, γ).
     """
     if not isinstance(sp, RegularSpeedup) or sp.sigma != +1:
         return False
     try:
-        w = float(np.asarray(sp.w))
-        g = float(np.asarray(sp.gamma))
+        w = np.asarray(sp.w)
+        g = np.asarray(sp.gamma)
     except (TypeError, jax.errors.TracerArrayConversionError):
         return False
-    return w == 0.0 and -1.0 < g < 0.0
+    return bool(np.all(w == 0.0) and np.all((-1.0 < g) & (g < 0.0)))
 
 
 def _f_grid(sp, mus, c, a, k, W, B):

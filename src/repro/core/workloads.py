@@ -1,0 +1,146 @@
+"""Seeded random workload ensembles for the scenario engine.
+
+``sample_workloads`` draws K padded scheduling instances — sizes,
+weights, arrival times and (optionally) per-instance speedup-function
+parameters — the randomized evaluation setup of the paper's §6 and of
+Berg et al. / the multi-class extension (arXiv 2404.00346), shaped for
+``simulate_ensemble`` and ``smartfill_batched``:
+
+  * X, W, arrival: (K, M) numpy arrays; real jobs occupy the prefix
+    0..m_k−1 of each row (sizes non-increasing), padding is exact zeros;
+  * weights follow the prefix sorted non-decreasing, so every instance
+    is *agreeable* and SmartFill's J is the optimum;
+  * ``sp`` is None (caller supplies a shared server model) or a
+    ``RegularSpeedup`` whose leaves are (K,) arrays — one speedup per
+    instance, vmapped alongside the workload by ``simulate_ensemble``
+    and usable directly with ``smartfill_batched`` (σ = +1 families can
+    mix within one batch: power, shifted power, log, negative power).
+
+Everything is driven by one integer seed → ``np.random.default_rng``;
+generation is host-side (it is setup, not the hot loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .speedup import RegularSpeedup
+
+__all__ = ["WorkloadBatch", "sample_workloads", "FAMILIES"]
+
+FAMILIES = ("power", "shifted", "log", "neg_power")
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadBatch:
+    """K padded instances + optional per-instance speedup parameters."""
+
+    X: np.ndarray            # (K, M) sizes, prefix sorted non-increasing
+    W: np.ndarray            # (K, M) weights, prefix sorted non-decreasing
+    arrival: np.ndarray      # (K, M) release times (0 ⇒ present at start)
+    m: np.ndarray            # (K,) live-job counts
+    B: float
+    sp: RegularSpeedup | None   # leaves (K,) when family-sampled
+
+    def __len__(self) -> int:
+        return int(self.X.shape[0])
+
+    @property
+    def active(self) -> np.ndarray:
+        """(K, M) prefix masks (the batched-API convention)."""
+        return np.arange(self.X.shape[1])[None, :] < self.m[:, None]
+
+
+def _sample_family_params(rng, K: int, family):
+    """(A, w, gamma) arrays, σ = +1, for K instances of ``family``.
+
+    ``family`` may be one name or a sequence to mix uniformly.
+    """
+    fams = (family,) if isinstance(family, str) else tuple(family)
+    for f in fams:
+        if f not in FAMILIES:
+            raise ValueError(f"unknown speedup family {f!r}; use {FAMILIES}")
+    pick = rng.integers(0, len(fams), K)
+    A = np.empty(K)
+    w = np.empty(K)
+    gamma = np.empty(K)
+    a = rng.uniform(0.5, 2.0, K)
+    p01 = rng.uniform(0.3, 0.9, K)          # exponents for 0<p<1 families
+    z = rng.uniform(0.5, 6.0, K)
+    pl = rng.uniform(0.3, 2.0, K)           # log slope
+    pn = rng.uniform(-2.0, -0.5, K)         # negative-power exponents
+    for k in range(K):
+        f = fams[pick[k]]
+        if f == "power":                    # s = aθ^p
+            A[k], w[k], gamma[k] = a[k] * p01[k], 0.0, p01[k] - 1.0
+        elif f == "shifted":                # s = a(θ+z)^p − az^p
+            A[k], w[k], gamma[k] = a[k] * p01[k], z[k], p01[k] - 1.0
+        elif f == "log":                    # s = a ln(pθ+1)
+            A[k], w[k], gamma[k] = a[k], 1.0 / pl[k], -1.0
+        else:                               # neg_power: s = az^p − a(θ+z)^p
+            A[k], w[k], gamma[k] = -a[k] * pn[k], z[k], pn[k] - 1.0
+    return A, w, gamma
+
+
+def sample_workloads(
+    seed: int,
+    K: int,
+    M: int,
+    *,
+    B: float = 10.0,
+    family=None,
+    size_range: tuple = (0.5, 20.0),
+    weights: str = "slowdown",
+    m_range: tuple | None = None,
+    arrival_rate: float = 0.0,
+) -> WorkloadBatch:
+    """Draw K padded scheduling instances from one seed.
+
+    Args:
+      seed, K, M: rng seed, instance count, padded width.
+      B: server bandwidth recorded on the batch (and on ``sp``).
+      family: None → ``sp`` is None (shared server model supplied by the
+        caller); a name from ``FAMILIES`` or a sequence of names → one
+        σ=+1 ``RegularSpeedup`` with (K,) parameter leaves, mixing
+        families uniformly when several are given.
+      size_range: uniform job-size support.
+      weights: 'slowdown' → w = 1/x (always agreeable); 'random' →
+        independent U(0.1, 5) weights sorted to keep the instance
+        agreeable.
+      m_range: (lo, hi) live-job counts per instance (inclusive);
+        default every instance carries M jobs.
+      arrival_rate: 0 → all jobs present at t=0; > 0 → every job gets a
+        Poisson release time (rate per unit time), randomly paired with
+        the size slots; one release time is always 0 so the instance
+        starts non-empty.
+
+    Returns a WorkloadBatch (numpy; feed straight to the engine).
+    """
+    rng = np.random.default_rng(seed)
+    lo, hi = m_range if m_range is not None else (M, M)
+    if not (1 <= lo <= hi <= M):
+        raise ValueError(f"m_range must satisfy 1 ≤ lo ≤ hi ≤ {M}")
+    m = rng.integers(lo, hi + 1, K)
+    X = np.zeros((K, M))
+    W = np.zeros((K, M))
+    ARR = np.zeros((K, M))
+    for k in range(K):
+        mk = int(m[k])
+        xs = np.sort(rng.uniform(*size_range, mk))[::-1]
+        X[k, :mk] = xs
+        if weights == "slowdown":
+            W[k, :mk] = 1.0 / xs
+        elif weights == "random":
+            W[k, :mk] = np.sort(rng.uniform(0.1, 5.0, mk))
+        else:
+            raise ValueError("weights must be 'slowdown' or 'random'")
+        if arrival_rate > 0 and mk > 1:
+            times = np.cumsum(rng.exponential(1.0 / arrival_rate, mk))
+            times[0] = 0.0                         # start non-empty
+            ARR[k, :mk] = rng.permutation(times)
+    sp = None
+    if family is not None:
+        A, w, gamma = _sample_family_params(rng, K, family)
+        sp = RegularSpeedup(A=A, w=w, gamma=gamma, sigma=+1, B=B)
+    return WorkloadBatch(X=X, W=W, arrival=ARR, m=m, B=float(B), sp=sp)

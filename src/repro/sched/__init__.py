@@ -1,3 +1,12 @@
 from .cluster import ClusterScheduler, Job, integerize  # noqa: F401
+from .policies import (  # noqa: F401
+    EquiPolicy,
+    GWFStaticPolicy,
+    HeSRPTPolicy,
+    Policy,
+    SRPT1Policy,
+    SmartFillPolicy,
+    default_zoo,
+)
 from .speedup_models import calibrate_from_dryrun, job_speedup  # noqa: F401
 from .elastic import ElasticTrainer, mesh_for_chips  # noqa: F401

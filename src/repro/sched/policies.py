@@ -1,0 +1,251 @@
+"""Policy zoo for the scenario engine — device-resident allocators.
+
+Every policy is a frozen-dataclass pytree implementing one interface,
+
+    policy(rem, w, active) → (M,) allocations θ with Σ over active ≤ B,
+
+in pure jnp ops, so policies are swappable inside the engine's
+``lax.scan`` (``core/simulator.py``) and batchable under ``jax.vmap``
+(``simulate_ensemble``).  All numeric parameters — the speedup function,
+B, heSRPT's exponent, static constants — are pytree *children*, so any
+of them can carry a leading (K,) workload dimension and be vmapped per
+instance by the ensemble runner (e.g. per-workload budgets or fitted
+exponents); only structural knobs (grid sizes, the resolved fast-path
+flag) are static aux data.  The budget a policy spends is **its own
+``B``** — the engine executes whatever the policy allocates.
+
+The zoo covers the paper's §6 comparison set:
+
+  * ``SmartFillPolicy`` — re-plans the OPT solution (Algorithm 2) on the
+    remaining sizes at every event; by Prop. 7 this reproduces the
+    one-shot schedule exactly (time consistency).
+  * ``HeSRPTPolicy``  — Berg et al.'s closed form for s = aθ^p, applied
+    (exactly, or as the paper's approximation-based benchmark) under
+    any true speedup.
+  * ``EquiPolicy``    — EQUI: B/m to each active job.
+  * ``SRPT1Policy``   — single-server SRPT: everything to the smallest
+    remaining job (the p → 1 limit of heSRPT).
+  * ``GWFStaticPolicy`` — water-fills with *static* derivative-ratio
+    constants (default: proportional to weights) each event; the
+    ablation showing the value of SmartFill's carried CDR constants.
+
+All policies tolerate padded jobs (``active`` False ⇒ θ = 0) and an
+empty active set (θ ≡ 0), which the engine's halt steps rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gwf import solve_cap
+from repro.core.smartfill import _is_pure_power, _solve
+from repro.core.speedup import Speedup
+
+__all__ = [
+    "Policy",
+    "SmartFillPolicy",
+    "HeSRPTPolicy",
+    "EquiPolicy",
+    "SRPT1Policy",
+    "GWFStaticPolicy",
+    "default_zoo",
+]
+
+_TINY = 1e-300
+
+
+def _active_order(rem, w, active):
+    """Permutation putting active jobs first, sorted the SmartFill way:
+    remaining size non-increasing, ties by weight non-decreasing."""
+    key = jnp.where(active, -rem, jnp.inf)
+    return jnp.lexsort((w, key))
+
+
+class Policy:
+    """Marker base: the engine dispatches on ``device_ready``."""
+
+    device_ready = True
+    name = "policy"
+
+    def __call__(self, rem, w, active):
+        raise NotImplementedError
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class EquiPolicy(Policy):
+    """EQUI: split B evenly over the active jobs."""
+
+    B: float
+    name = "EQUI"
+
+    def tree_flatten(self):
+        return (self.B,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(B=children[0])
+
+    def __call__(self, rem, w, active):
+        m = jnp.sum(active)
+        share = self.B / jnp.maximum(m, 1)
+        return jnp.where(active, share, 0.0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SRPT1Policy(Policy):
+    """SRPT-1: the whole budget to the smallest remaining active job."""
+
+    B: float
+    name = "SRPT-1"
+
+    def tree_flatten(self):
+        return (self.B,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(B=children[0])
+
+    def __call__(self, rem, w, active):
+        key = jnp.where(active, rem, jnp.inf)
+        i = jnp.argmin(key)
+        out = jnp.zeros_like(rem).at[i].set(self.B)
+        return jnp.where(active, out, 0.0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class HeSRPTPolicy(Policy):
+    """Berg et al. closed form: θ_i/B = (W_i^m − W_{i−1}^m)/W_k^m,
+    m = 1/(1−p), over active jobs ranked by remaining size (desc)."""
+
+    p: float
+    B: float
+    name = "heSRPT"
+
+    def tree_flatten(self):
+        return (self.p, self.B), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(p=children[0], B=children[1])
+
+    def __call__(self, rem, w, active):
+        M = rem.shape[0]
+        order = _active_order(rem, w, active)
+        ws = jnp.where(active, w, 0.0)[order]
+        # shares depend only on weight *ratios* — normalize so the
+        # cumsum powers cannot underflow (w ~ 1e-10 slowdown weights
+        # raised to 1/(1−p) would flush to 0 in float32)
+        ws = ws / jnp.maximum(jnp.max(ws), _TINY)
+        m = jnp.sum(active)
+        mexp = 1.0 / (1.0 - self.p)
+        Wc = jnp.cumsum(ws)
+        Wm = jnp.maximum(Wc, 0.0) ** mexp
+        Wm_prev = jnp.concatenate([jnp.zeros((1,), Wm.dtype), Wm[:-1]])
+        Wk = Wm[jnp.maximum(m - 1, 0)]
+        shares = self.B * (Wm - Wm_prev) / jnp.maximum(Wk, _TINY)
+        shares = jnp.where(jnp.arange(M) < m, shares, 0.0)
+        out = jnp.zeros_like(rem).at[order].set(shares)
+        return jnp.where(active, out, 0.0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SmartFillPolicy(Policy):
+    """Re-planning SmartFill: the optimal allocation for the current
+    remaining sizes — column m−1 of Algorithm 2 run on (rem, w).
+
+    ``fast`` is resolved at construction (host side, where the speedup's
+    parameters are concrete) so the closed-form μ* path survives
+    jit/vmap round-trips, where ``sp``'s leaves become tracers.
+    """
+
+    sp: Speedup
+    B: float
+    coarse: int = 512
+    zoom_rounds: int = 4
+    zoom_pts: int = 64
+    fast: bool | None = None
+    name = "SmartFill"
+
+    def __post_init__(self):
+        if self.fast is None:
+            object.__setattr__(self, "fast", _is_pure_power(self.sp))
+
+    def tree_flatten(self):
+        return (self.sp, self.B), (self.coarse, self.zoom_rounds,
+                                   self.zoom_pts, self.fast)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        coarse, zoom_rounds, zoom_pts, fast = aux
+        return cls(sp=children[0], B=children[1], coarse=coarse,
+                   zoom_rounds=zoom_rounds, zoom_pts=zoom_pts, fast=fast)
+
+    def __call__(self, rem, w, active):
+        M = rem.shape[0]
+        order = _active_order(rem, w, active)
+        xs = jnp.where(active, rem, 0.0)[order]
+        ws = jnp.where(active, w, 0.0)[order]
+        m = jnp.sum(active)
+        theta, *_ = _solve(self.sp, xs, ws, jnp.asarray(self.B, xs.dtype),
+                           m, self.coarse, self.zoom_rounds, self.zoom_pts,
+                           bool(self.fast))
+        col = jnp.take(theta, jnp.clip(m - 1, 0, M - 1), axis=1)
+        col = jnp.where(jnp.arange(M) < m, col, 0.0)
+        out = jnp.zeros_like(rem).at[order].set(col)
+        return jnp.where(active, out, 0.0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GWFStaticPolicy(Policy):
+    """Water-fill with static CDR constants (default c ∝ w) each event.
+
+    Solves the CAP (Algorithm 1) for the active set with constants that
+    never adapt — the baseline isolating what SmartFill's carried
+    constants c_k (Cor. 2.1) buy over naive weighted water-filling.
+    """
+
+    sp: Speedup
+    B: float
+    c: jnp.ndarray | None = None    # per-job constants; None ⇒ w-derived
+    name = "GWF-static"
+
+    def tree_flatten(self):
+        return (self.sp, self.c, self.B), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(sp=children[0], c=children[1], B=children[2])
+
+    def __call__(self, rem, w, active):
+        if self.c is None:
+            wmax = jnp.max(jnp.where(active, w, 0.0))
+            c = jnp.where(active, w, 1.0) / jnp.maximum(wmax, _TINY)
+        else:
+            c = self.c
+        c = jnp.clip(c, 1e-12, None)
+        th = solve_cap(self.sp, jnp.asarray(self.B, rem.dtype), c, active)
+        return jnp.where(active, th, 0.0)
+
+
+def default_zoo(sp: Speedup, B: float | None = None,
+                p_fit: float = 0.5) -> tuple:
+    """The paper's §6 comparison set for one server model.
+
+    ``p_fit`` is the power-law exponent heSRPT plans with (for pure-power
+    speedups pass the true p; otherwise a ``fit_power`` fit).
+    """
+    B = float(sp.B if B is None else B)
+    return (
+        SmartFillPolicy(sp, B=B),
+        HeSRPTPolicy(p=p_fit, B=B),
+        EquiPolicy(B=B),
+        SRPT1Policy(B=B),
+        GWFStaticPolicy(sp, B=B),
+    )

@@ -12,6 +12,14 @@ Instances are padded to R+1 slots with the batched API's prefix-mask
 convention (see ``repro.core.batch``): instance 0 is the running set
 alone, instance 1+i is the running set plus candidate i, each sorted
 sizes-non-increasing / weights-non-decreasing.
+
+Two marginal-cost estimators (``estimator=``):
+
+  * ``"plan"`` (default) — the batched SmartFill planner's J.
+  * ``"simulate"`` — execute SmartFill on every mix through the
+    device-resident scenario engine (one ``simulate_ensemble`` call);
+    identical ΔJ by time consistency, and the place where execution-side
+    cost models (reallocation, preemption) can enter the score.
 """
 from __future__ import annotations
 
@@ -56,10 +64,13 @@ class AdmissionController:
     """
 
     def __init__(self, sp: Speedup, B: float | None = None,
-                 cost_threshold: float = np.inf):
+                 cost_threshold: float = np.inf, estimator: str = "plan"):
+        if estimator not in ("plan", "simulate"):
+            raise ValueError("estimator must be 'plan' or 'simulate'")
         self.sp = sp
         self.B = float(sp.B if B is None else B)
         self.cost_threshold = float(cost_threshold)
+        self.estimator = estimator
 
     def evaluate(self, running_sizes, running_weights,
                  cand_sizes, cand_weights) -> AdmissionDecision:
@@ -96,25 +107,49 @@ class AdmissionController:
             X[1 + i], W[1 + i] = _sorted_instance(xs, ws)
             act[1 + i] = True
 
-        # validate=True: SmartFill's optimality requires *agreeable*
-        # instances (after the size-descending sort, weights must be
-        # non-decreasing — e.g. slowdown weights w = 1/x).  A silent
-        # solve on a non-agreeable mix would rank candidates by a J
-        # that is not the optimal weighted completion time.
-        try:
-            sched = smartfill_batched(self.sp, X, W, B=self.B, active=act,
-                                      validate=True)
-        except ValueError as e:
-            raise ValueError(
-                "admission instances must be agreeable (larger size ⇒ "
-                f"smaller-or-equal weight, e.g. w = 1/x): {e}") from e
-        J = np.asarray(sched.J)
+        # SmartFill's optimality (and hence ΔJ ranking) requires
+        # *agreeable* instances (after the size-descending sort, weights
+        # must be non-decreasing — e.g. slowdown weights w = 1/x).  A
+        # silent solve on a non-agreeable mix would rank candidates by a
+        # J that is not the optimal weighted completion time.
+        self._validate_agreeable(X, W, act)
+        if self.estimator == "simulate":
+            J = self._simulated_J(X, W)
+        else:
+            sched = smartfill_batched(self.sp, X, W, B=self.B, active=act)
+            J = np.asarray(sched.J)
         marginal = J[1:] - J[0]
         return AdmissionDecision(
             admit=marginal <= self.cost_threshold,
             marginal_cost=marginal,
             baseline_J=float(J[0]),
         )
+
+    @staticmethod
+    def _validate_agreeable(X, W, act):
+        from repro.core.batch import validate_padded_instances
+
+        try:
+            validate_padded_instances(X, W, act.sum(axis=1))
+        except ValueError as e:
+            raise ValueError(
+                "admission instances must be agreeable (larger size ⇒ "
+                f"smaller-or-equal weight, e.g. w = 1/x): {e}") from e
+
+    def _simulated_J(self, X, W) -> np.ndarray:
+        """Score mixes by *executing* SmartFill on the scenario engine.
+
+        One ``simulate_ensemble`` call over the C+1 padded instances —
+        an independent event-driven estimate of the same ΔJ the planner
+        predicts (equal to ≤1e-6 by Prop. 7 / time consistency), and the
+        hook for cost models the planner cannot see.
+        """
+        from repro.core import simulate_ensemble
+        from repro.sched.policies import SmartFillPolicy
+
+        res = simulate_ensemble(
+            self.sp, (SmartFillPolicy(self.sp, B=self.B),), X, W, B=self.B)
+        return np.asarray(res.J[0])
 
     def _baseline_J(self, rs, rw) -> float:
         if rs.shape[0] == 0:

@@ -1,0 +1,207 @@
+"""Differential tests: device engine == numpy reference oracle.
+
+The ``lax.scan`` scenario engine and ``simulate_policy_reference`` share
+event semantics by construction; these tests pin them together — J, T
+and the full event trace — across every speedup family in
+``core/speedup.py`` (plus a GenericSpeedup), including coincident
+completions, coincident arrivals and zero-weight jobs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    GenericSpeedup,
+    log_speedup,
+    n_events_for,
+    neg_power,
+    power,
+    saturating,
+    shifted_power,
+    simulate_policy,
+    simulate_policy_device,
+    simulate_policy_reference,
+)
+from repro.core.hesrpt import hesrpt_policy
+from repro.sched.policies import (
+    EquiPolicy,
+    GWFStaticPolicy,
+    HeSRPTPolicy,
+    SRPT1Policy,
+    SmartFillPolicy,
+)
+
+B = 10.0
+RTOL = 1e-6
+
+SPS = {
+    "power": power(1.0, 0.5, B),
+    "shifted": shifted_power(1.0, 4.0, 0.5, B),
+    "log": log_speedup(1.0, 1.0, B),
+    "neg_power": neg_power(5.0, 2.0, -1.0, B),
+    "saturating": saturating(1.0, 12.0, 2.0, B),
+    "generic": GenericSpeedup(
+        s_fn=lambda t: jnp.log1p(t) + 0.5 * (jnp.sqrt(1.0 + t) - 1.0),
+        ds_fn=lambda t: 1.0 / (1.0 + t) + 0.25 / jnp.sqrt(1.0 + t),
+        B=B),
+}
+
+
+def _instance(M=10):
+    x = np.arange(M, 0, -1.0)
+    return x, 1.0 / x
+
+
+def _assert_match(dev, ref, rtol=RTOL):
+    assert np.isfinite(ref.J)
+    assert abs(dev.J - ref.J) / max(ref.J, 1e-12) < rtol
+    np.testing.assert_allclose(dev.T, ref.T, rtol=rtol, atol=rtol)
+    assert dev.n_events == ref.n_events
+    for (td, thd), (tr, thr) in zip(dev.events, ref.events):
+        assert abs(td - tr) <= rtol * max(1.0, tr)
+        np.testing.assert_allclose(thd, thr, atol=rtol * B)
+
+
+# ---------------------------------------------------------------------------
+# Every speedup family, cheap policies — full-trace equality
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fam", list(SPS))
+@pytest.mark.parametrize("mkpol", [
+    lambda sp: HeSRPTPolicy(p=0.5, B=B),
+    lambda sp: EquiPolicy(B),
+    lambda sp: SRPT1Policy(B),
+    lambda sp: GWFStaticPolicy(sp, B=B),
+], ids=["hesrpt", "equi", "srpt1", "gwfstatic"])
+def test_device_matches_reference_all_families(fam, mkpol):
+    sp = SPS[fam]
+    x, w = _instance(10)
+    pol = mkpol(sp)
+    dev = simulate_policy_device(sp, x, w, pol, B=B)
+    ref = simulate_policy_reference(sp, x, w, pol, B=B)
+    _assert_match(dev, ref)
+
+
+@pytest.mark.parametrize("fam", ["power", "log", "saturating"])
+def test_device_matches_reference_smartfill(fam):
+    """Re-planning SmartFill through both executors (heavier: a full
+    solve per event) — covers the fast path, parking and σ = −1."""
+    sp = SPS[fam]
+    x, w = _instance(6)
+    pol = SmartFillPolicy(sp, B=B)
+    dev = simulate_policy_device(sp, x, w, pol, B=B)
+    ref = simulate_policy_reference(sp, x, w, pol, B=B)
+    _assert_match(dev, ref)
+
+
+# ---------------------------------------------------------------------------
+# Edge cases the event loop must agree on exactly
+# ---------------------------------------------------------------------------
+def test_coincident_completions():
+    """Equal sizes under EQUI finish at the same instant — one event."""
+    sp = SPS["power"]
+    x = np.array([4.0, 2.0, 2.0, 2.0, 1.0])
+    w = np.array([0.25, 0.5, 0.5, 0.5, 1.0])
+    for pol in (EquiPolicy(B), HeSRPTPolicy(p=0.5, B=B)):
+        dev = simulate_policy_device(sp, x, w, pol, B=B)
+        ref = simulate_policy_reference(sp, x, w, pol, B=B)
+        _assert_match(dev, ref)
+    # the three equal jobs really do complete simultaneously under EQUI
+    dev = simulate_policy_device(sp, x, w, EquiPolicy(B), B=B)
+    assert dev.T[1] == dev.T[2] == dev.T[3]
+
+
+def test_zero_weight_jobs():
+    sp = SPS["power"]
+    x = np.array([3.0, 2.0, 1.0])
+    w = np.array([0.0, 0.0, 1.0])
+    pol = SmartFillPolicy(sp, B=B)
+    dev = simulate_policy_device(sp, x, w, pol, B=B)
+    ref = simulate_policy_reference(sp, x, w, pol, B=B)
+    _assert_match(dev, ref)
+    assert np.isfinite(dev.J)
+
+
+def test_zero_size_padding_stays_inert():
+    sp = SPS["log"]
+    x = np.array([5.0, 3.0, 0.0, 0.0])
+    w = np.array([0.2, 1.0, 0.0, 0.0])
+    pol = HeSRPTPolicy(p=0.5, B=B)
+    dev = simulate_policy_device(sp, x, w, pol, B=B)
+    ref = simulate_policy_reference(sp, x, w, pol, B=B)
+    _assert_match(dev, ref)
+    assert dev.T[2] == dev.T[3] == 0.0
+    for _, th in dev.events:
+        assert th[2] == th[3] == 0.0
+
+
+@pytest.mark.parametrize("fam", ["power", "log"])
+def test_arrivals_fold_in_as_events(fam):
+    """Release times — incl. a coincident pair — through both executors."""
+    sp = SPS[fam]
+    x, w = _instance(8)
+    arr = np.array([0.0, 0.0, 0.0, 2.0, 2.0, 5.0, 0.0, 9.0])
+    pol = HeSRPTPolicy(p=0.5, B=B)
+    dev = simulate_policy_device(sp, x, w, pol, B=B, arrival=arr)
+    ref = simulate_policy_reference(sp, x, w, pol, B=B, arrival=arr)
+    _assert_match(dev, ref)
+    # arrival instants appear as exact event times
+    ts = [t for t, _ in dev.events]
+    for t_arr in (2.0, 5.0):
+        assert any(t == t_arr for t in ts)
+    # no job runs before it arrives
+    for t, th in dev.events:
+        late = arr > t
+        assert np.all(th[late] == 0.0)
+
+
+def test_event_budget_is_4m_plus_16():
+    assert n_events_for(8) == 48
+    sp = SPS["power"]
+    x, w = _instance(8)
+    arr = np.linspace(0.0, 3.0, 8)   # every job its own arrival event
+    dev = simulate_policy_device(sp, x, w, HeSRPTPolicy(p=0.5, B=B),
+                                 B=B, arrival=arr)
+    assert np.isfinite(dev.J)
+    assert dev.n_events <= n_events_for(8)
+
+
+@jax.tree_util.register_pytree_node_class
+class _ZeroPolicy(EquiPolicy):
+    """Allocates nothing — every active job is parked forever."""
+
+    def __call__(self, rem, w, active):
+        return jnp.zeros_like(rem)
+
+
+def test_unfinishable_instance_reports_inf():
+    """All-parked deadlock halts instead of looping: J = +inf."""
+    sp = SPS["power"]
+    x = np.array([2.0, 1.0])
+    w = np.array([1.0, 1.0])
+    dev = simulate_policy_device(sp, x, w, _ZeroPolicy(B), B=B)
+    assert dev.J == np.inf
+    with pytest.raises(RuntimeError):
+        simulate_policy_reference(sp, x, w, _ZeroPolicy(B), B=B)
+
+
+def test_empty_instance():
+    sp = SPS["power"]
+    e = np.zeros(0)
+    dev = simulate_policy_device(sp, e, e, EquiPolicy(B), B=B)
+    ref = simulate_policy_reference(sp, e, e, EquiPolicy(B), B=B)
+    assert dev.J == ref.J == 0.0
+    assert dev.n_events == ref.n_events == 0
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: legacy host callables keep the reference loop
+# ---------------------------------------------------------------------------
+def test_dispatch_host_callable_equals_device_policy():
+    sp = SPS["power"]
+    x, w = _instance(9)
+    via_host = simulate_policy(sp, x, w, hesrpt_policy(0.5, B), B=B)
+    via_dev = simulate_policy(sp, x, w, HeSRPTPolicy(p=0.5, B=B), B=B)
+    assert abs(via_host.J - via_dev.J) / via_host.J < RTOL
+    np.testing.assert_allclose(via_host.T, via_dev.T, rtol=RTOL)
+    assert via_host.n_events == via_dev.n_events

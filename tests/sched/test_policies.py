@@ -1,0 +1,163 @@
+"""Policy zoo: interface invariants + closed-form equivalences +
+cluster device-path parity."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    hesrpt_allocations,
+    log_speedup,
+    power,
+    smartfill_allocations,
+)
+from repro.core.gwf import cap_residual
+from repro.sched.cluster import ClusterScheduler, Job
+from repro.sched.policies import (
+    EquiPolicy,
+    GWFStaticPolicy,
+    HeSRPTPolicy,
+    SRPT1Policy,
+    SmartFillPolicy,
+    default_zoo,
+)
+
+B = 10.0
+SP = {"power": power(1.0, 0.5, B), "log": log_speedup(1.0, 1.0, B)}
+
+
+def _mk_policies(sp):
+    return (SmartFillPolicy(sp, B=B), HeSRPTPolicy(p=0.5, B=B),
+            EquiPolicy(B), SRPT1Policy(B), GWFStaticPolicy(sp, B=B))
+
+
+# ---------------------------------------------------------------------------
+# Interface invariants every zoo policy must satisfy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fam", list(SP))
+def test_budget_nonnegativity_and_masking(fam):
+    sp = SP[fam]
+    rng = np.random.default_rng(0)
+    rem = jnp.asarray(rng.uniform(0.5, 10.0, 8))
+    w = jnp.asarray(np.sort(rng.uniform(0.1, 2.0, 8)))
+    active = jnp.asarray([True, True, False, True, True, False, True, True])
+    for pol in _mk_policies(sp):
+        th = np.asarray(pol(rem, w, active))
+        assert th.shape == rem.shape, pol.name
+        assert np.all(th >= 0), pol.name
+        assert th.sum() <= B * (1 + 1e-9), pol.name
+        assert np.all(th[~np.asarray(active)] == 0.0), pol.name
+
+
+@pytest.mark.parametrize("fam", list(SP))
+def test_empty_active_set_is_all_zero_and_finite(fam):
+    sp = SP[fam]
+    rem = jnp.asarray(np.arange(5, 0, -1.0))
+    w = jnp.asarray(1.0 / np.arange(5, 0, -1.0))
+    none = jnp.zeros(5, dtype=bool)
+    for pol in _mk_policies(sp):
+        th = np.asarray(pol(rem, w, none))
+        assert np.all(th == 0.0), pol.name
+        assert np.all(np.isfinite(th)), pol.name
+
+
+# ---------------------------------------------------------------------------
+# Closed-form / planner equivalences
+# ---------------------------------------------------------------------------
+def test_hesrpt_policy_matches_closed_form():
+    x = np.arange(7, 0, -1.0)
+    w = 1.0 / x
+    pol = HeSRPTPolicy(p=0.6, B=B)
+    th = np.asarray(pol(jnp.asarray(x), jnp.asarray(w),
+                        jnp.ones(7, dtype=bool)))
+    ref = hesrpt_allocations(w, 0.6, B)
+    np.testing.assert_allclose(th, ref, rtol=1e-9)
+
+
+def test_hesrpt_policy_unsorted_input():
+    """The policy must rank by remaining size itself."""
+    x = np.array([2.0, 7.0, 4.0])
+    w = np.array([0.5, 1.0 / 7.0, 0.25])
+    pol = HeSRPTPolicy(p=0.5, B=B)
+    th = np.asarray(pol(jnp.asarray(x), jnp.asarray(w),
+                        jnp.ones(3, dtype=bool)))
+    order = np.argsort(-x)
+    ref = hesrpt_allocations(w[order], 0.5, B)
+    np.testing.assert_allclose(th[order], ref, rtol=1e-9)
+
+
+@pytest.mark.parametrize("fam", list(SP))
+def test_smartfill_policy_matches_planner_column(fam):
+    sp = SP[fam]
+    x = np.arange(6, 0, -1.0)
+    w = 1.0 / x
+    pol = SmartFillPolicy(sp, B=B)
+    th = np.asarray(pol(jnp.asarray(x), jnp.asarray(w),
+                        jnp.ones(6, dtype=bool)))
+    ref = np.asarray(smartfill_allocations(sp, x, w, B=B))
+    np.testing.assert_allclose(th, ref, atol=1e-8 * B)
+
+
+def test_equi_and_srpt1_shapes():
+    rem = jnp.asarray([5.0, 3.0, 1.0, 4.0])
+    w = jnp.asarray([0.2, 0.33, 1.0, 0.25])
+    active = jnp.asarray([True, True, True, False])
+    th = np.asarray(EquiPolicy(B)(rem, w, active))
+    np.testing.assert_allclose(th, [B / 3, B / 3, B / 3, 0.0])
+    th = np.asarray(SRPT1Policy(B)(rem, w, active))
+    np.testing.assert_allclose(th, [0.0, 0.0, B, 0.0])
+
+
+def test_gwf_static_solves_cap():
+    sp = SP["log"]
+    rem = jnp.asarray(np.arange(5, 0, -1.0))
+    w = jnp.asarray(np.sort(np.random.default_rng(1).uniform(0.1, 2.0, 5)))
+    active = jnp.ones(5, dtype=bool)
+    pol = GWFStaticPolicy(sp, B=B)
+    th = pol(rem, w, active)
+    c = np.asarray(w) / float(np.max(np.asarray(w)))
+    res = cap_residual(sp, B, jnp.asarray(c), th)
+    assert float(res["budget"]) < 1e-8
+    assert float(res["ratio"]) < 1e-6
+
+
+def test_default_zoo_contents():
+    zoo = default_zoo(SP["log"], p_fit=0.48)
+    names = [p.name for p in zoo]
+    assert names == ["SmartFill", "heSRPT", "EQUI", "SRPT-1", "GWF-static"]
+    assert all(getattr(p, "device_ready", False) for p in zoo)
+
+
+# ---------------------------------------------------------------------------
+# Cluster scheduler: device fast path ≡ host event loop
+# ---------------------------------------------------------------------------
+def _jobs(M=6):
+    x = np.arange(M, 0, -1.0) * 100.0
+    return [Job(name=f"j{i}", size=x[i], weight=1.0 / x[i])
+            for i in range(M)]
+
+
+def test_cluster_device_path_matches_host_loop():
+    sp = log_speedup(1.0, 0.5, 64.0)
+    cs = ClusterScheduler(sp, 64.0, min_delta=0.0)
+    jobs = _jobs()
+    jobs.append(Job(name="late", size=50.0, weight=0.02, arrival=1.0))
+    ev_dev, J_dev = cs.simulate([Job(**vars(j)) for j in jobs])
+    ev_host, J_host = cs.simulate_host([Job(**vars(j)) for j in jobs])
+    assert abs(J_dev - J_host) / J_host < 1e-6
+    assert len(ev_dev) == len(ev_host)
+
+
+def test_cluster_device_path_skips_completed_jobs():
+    sp = log_speedup(1.0, 0.5, 64.0)
+    cs = ClusterScheduler(sp, 64.0, min_delta=0.0)
+    jobs = _jobs(4)
+    jobs[1].done = 3.0
+    events, J = cs.simulate(jobs)
+    assert np.isfinite(J) and J > 0
+    for _, th in events:
+        assert th[1] == 0.0
+    # pre-completed jobs keep the host-loop J convention (recorded flow
+    # time still counts), so both paths agree
+    _, J_host = cs.simulate_host([Job(**vars(j)) for j in jobs])
+    assert abs(J - J_host) / J_host < 1e-6

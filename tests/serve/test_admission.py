@@ -79,6 +79,21 @@ def test_non_agreeable_weights_rejected(sp):
                                             1.0 / cands)
 
 
+def test_simulated_estimator_matches_planner(sp):
+    """estimator='simulate' executes every mix on the scenario engine —
+    by time consistency the ΔJ ranking equals the planner's ≤1e-6."""
+    running = np.array([8.0, 5.0, 2.0])
+    cands = np.array([6.0, 1.0, 3.5])
+    plan = AdmissionController(sp, B).evaluate(
+        running, 1.0 / running, cands, 1.0 / cands)
+    sim = AdmissionController(sp, B, estimator="simulate").evaluate(
+        running, 1.0 / running, cands, 1.0 / cands)
+    np.testing.assert_allclose(sim.marginal_cost, plan.marginal_cost,
+                               rtol=1e-6, atol=1e-9)
+    with pytest.raises(ValueError, match="estimator"):
+        AdmissionController(sp, B, estimator="oracle")
+
+
 def test_empty_edge_cases(sp):
     ac = AdmissionController(sp, B)
     dec = ac.evaluate(np.array([]), np.array([]), np.array([]), np.array([]))
