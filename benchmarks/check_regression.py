@@ -1,0 +1,159 @@
+"""Diff a BENCH_core.json run against the committed baseline.
+
+Fails (exit 1) when any matched benchmark row regresses by more than
+``--threshold`` (default 30%) on its primary metric — us_per_instance
+where present, else us_per_call.  Rows present on only one side are
+reported but never fail the check (benchmarks may be added/retired, and
+quick mode runs a subset).
+
+CI's slow job runs the quick sweep and then:
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --current BENCH_core.json --baseline benchmarks/BENCH_baseline.json
+
+The committed baseline is regenerated with ``--update-baseline`` after a
+deliberate performance change:
+
+    PYTHONPATH=src python -m benchmarks.perf_core --quick --out /tmp/b.json
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --current /tmp/b.json --update-baseline
+
+The threshold can be loosened for noisy runners via the
+``BENCH_REGRESSION_THRESHOLD`` env var (a float, e.g. ``0.8``), and
+``--calibrate ROW`` (CI passes ``calibration_fixed_work``) divides out
+the runner-speed difference measured on that row before comparing —
+without it, a baseline recorded on a faster machine than the runner
+would flag *every* row.  The calibration row must NOT share any code
+the gate protects — ``calibration_fixed_work`` is a fixed-FLOP matmul
+chain touching no scheduler code at all; a row that shares the hot
+path would rescale a core regression into every other row and hide it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import shutil
+import sys
+
+_SECTIONS = ("calibration", "gwf", "smartfill_single", "smartfill_batched",
+             "simulator")
+_DEFAULT_BASELINE = pathlib.Path(__file__).parent / "BENCH_baseline.json"
+
+
+def _metric(row: dict):
+    """(metric name, value) a row is judged on; lower is better."""
+    for key in ("us_per_instance", "us_per_call"):
+        if key in row:
+            return key, float(row[key])
+    return None, None
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        report = json.load(f)
+    rows = {}
+    for sec in _SECTIONS:
+        for row in report.get(sec, []):
+            key, val = _metric(row)
+            if key is not None:
+                rows[row["name"]] = (key, val)
+    return rows
+
+
+def compare(current: dict, baseline: dict, threshold: float,
+            speed_scale: float = 1.0, min_us: float = 0.0):
+    """Returns (regressions, improvements, unmatched) row lists.
+
+    ``speed_scale`` multiplies current values before comparison (< 1 ⇒
+    the current machine measured slower on the calibration row, so its
+    times are scaled down accordingly).  Rows whose baseline metric is
+    under ``min_us`` sit below the timer/dispatch noise floor of shared
+    runners and are skipped rather than gated.
+    """
+    regressions, improvements, unmatched = [], [], []
+    for name, (key, base_val) in sorted(baseline.items()):
+        if name not in current:
+            unmatched.append(f"baseline-only: {name}")
+            continue
+        if base_val < min_us:
+            unmatched.append(f"sub-noise-floor (<{min_us:g}us): {name}")
+            continue
+        cur_key, cur_val = current[name]
+        cur_val = cur_val * speed_scale
+        ratio = cur_val / base_val if base_val > 0 else float("inf")
+        line = (f"{name:44s} {key:>15s}  base {base_val:12.1f}  "
+                f"now {cur_val:12.1f}  ({ratio:5.2f}x)")
+        if ratio > 1.0 + threshold:
+            regressions.append(line)
+        elif ratio < 1.0 / (1.0 + threshold):
+            improvements.append(line)
+    for name in sorted(set(current) - set(baseline)):
+        unmatched.append(f"current-only:  {name}")
+    return regressions, improvements, unmatched
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", default="BENCH_core.json")
+    ap.add_argument("--baseline", default=str(_DEFAULT_BASELINE))
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get(
+                        "BENCH_REGRESSION_THRESHOLD", 0.30)))
+    ap.add_argument("--calibrate", default=None, metavar="ROW",
+                    help="divide out runner-speed drift measured on this "
+                         "benchmark row (use calibration_fixed_work)")
+    ap.add_argument("--min-us", type=float, default=250.0,
+                    help="skip rows whose baseline metric is below this "
+                         "(sub-quarter-millisecond timings jitter far "
+                         "beyond 30%% on shared runners); 0 gates "
+                         "everything")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="copy --current over --baseline and exit")
+    args = ap.parse_args(argv)
+
+    if args.update_baseline:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated from {args.current} -> {args.baseline}")
+        return 0
+
+    if not pathlib.Path(args.baseline).exists():
+        print(f"no baseline at {args.baseline}; nothing to check")
+        return 0
+
+    current = load_rows(args.current)
+    baseline = load_rows(args.baseline)
+    speed_scale = 1.0
+    if args.calibrate:
+        if args.calibrate in current and args.calibrate in baseline:
+            cur_cal = current[args.calibrate][1]
+            base_cal = baseline[args.calibrate][1]
+            if cur_cal > 0 and base_cal > 0:
+                speed_scale = base_cal / cur_cal
+            print(f"calibrated on {args.calibrate}: runner is "
+                  f"{1.0 / speed_scale:.2f}x the baseline machine's time "
+                  f"(scale {speed_scale:.3f})")
+        else:
+            print(f"calibration row {args.calibrate!r} missing on one "
+                  "side; comparing uncalibrated")
+    regressions, improvements, unmatched = compare(
+        current, baseline, args.threshold, speed_scale, args.min_us)
+
+    for line in unmatched:
+        print(f"[skip] {line}")
+    for line in improvements:
+        print(f"[faster] {line}")
+    if regressions:
+        print(f"\n{len(regressions)} row(s) regressed more than "
+              f"{args.threshold:.0%}:")
+        for line in regressions:
+            print(f"[REGRESSION] {line}")
+        return 1
+    print(f"\nOK: no row regressed more than {args.threshold:.0%} "
+          f"({len(baseline)} baseline rows, {len(current)} current)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,7 +11,13 @@ from .speedup import (  # noqa: F401
     saturating,
     shifted_power,
 )
-from .gwf import solve_cap, solve_cap_generic, solve_cap_regular  # noqa: F401
+from .gwf import (  # noqa: F401
+    solve_cap,
+    solve_cap_batched,
+    solve_cap_generic,
+    solve_cap_regular,
+    solve_cap_regular_reference,
+)
 from .smartfill import (  # noqa: F401
     SmartFillSchedule,
     completion_times,

@@ -131,9 +131,9 @@ def smartfill_batched(
     W,
     B=None,
     active=None,
-    coarse: int = 512,
-    zoom_rounds: int = 4,
-    zoom_pts: int = 64,
+    coarse: int = 32,
+    descent_iters: int = 40,
+    cap_iters: int = 64,
     fast_path: bool | None = None,
     validate: bool = False,
 ) -> BatchedSmartFillSchedule:
@@ -165,7 +165,7 @@ def smartfill_batched(
     fast = _is_pure_power(sp) and fast_path is not False
     theta, c, a, d, T, J, J_lin = jax.vmap(
         lambda x, w, b, mm: _solve(sp, x, w, b, mm,
-                                   coarse, zoom_rounds, zoom_pts, fast)
+                                   coarse, descent_iters, cap_iters, fast)
     )(Xm, Wm, Bv, m)
     return BatchedSmartFillSchedule(
         theta=theta, c=c, a=a, durations=d, T=T,

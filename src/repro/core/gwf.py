@@ -18,16 +18,32 @@ Two solver paths:
     ``s'(θ) = A (w + σθ)^γ``): with auxiliary function ``g(h) = A (σh)^γ``
     every bottle is a rectangle, ``θ_i(h) = u_i (h − h_i)^+`` with width
     ``u_i = c_i^{1/γ}`` and bottom ``h_i = σ w / u_i`` (paper §4.5.1).
-    β is piecewise linear → exact solve by breakpoint search.
+    β is piecewise linear and is inverted *exactly* in O(k log k): one
+    sort of the 2k breakpoints (bottle starts and caps), then prefix
+    sums of the slope increments ``±u_i`` and offsets ``±u_i·h_i`` give
+    β at every breakpoint in a single cumulative pass — no k×2k
+    ``vmap(beta)`` evaluation matrix.  Memory is linear in k.
+
+``solve_cap_regular_reference``
+    The pre-overhaul O(k²) breakpoint search (β evaluated from scratch
+    at each of the 2k breakpoints under ``vmap``).  Kept as the
+    differential-test oracle for the prefix-sum solver.
 
 ``solve_cap_generic``
-    For arbitrary concave ``s``: fixed-iteration bisection on the *water
-    pressure* ``λ = g(h)`` (strictly decreasing in h, so β is decreasing
-    in λ), with the inner derivative inverse evaluated via the speedup's
-    own ``ds_inv``.  Fully vectorized; jit/vmap-compatible.
+    For arbitrary concave ``s``: bisection on the *water pressure*
+    ``λ = g(h)`` (strictly decreasing in h, so β is decreasing in λ),
+    with the inner derivative inverse evaluated via the speedup's own
+    ``ds_inv``.  Fully vectorized; jit/vmap-compatible.  Supports a
+    warm-start ``bracket`` (validated against β before use, so a stale
+    hint can only widen back to the safe bracket, never corrupt the
+    answer), an adaptive ``rel_tol`` early exit that cuts iterations
+    once the λ-bracket is relatively tight, and ``return_bracket`` so
+    callers (SmartFill's scan) can carry the bracket across solves.
 
 Both paths accept an ``active`` mask so they can live inside fixed-shape
 ``lax`` loops (SmartFill pads every CAP instance to M jobs).
+``solve_cap_batched`` is the N-instance front door with size-aware
+dispatch onto the fused Pallas waterfill kernel on TPU.
 
 All functions are pure and dtype-polymorphic; run under
 ``jax.config.update("jax_enable_x64", True)`` for reference precision.
@@ -42,7 +58,12 @@ from .speedup import RegularSpeedup, Speedup
 __all__ = [
     "solve_cap",
     "solve_cap_regular",
+    "solve_cap_regular_reference",
     "solve_cap_generic",
+    "solve_cap_batched",
+    "waterfill_prepare",
+    "waterfill_solve",
+    "waterfill_level",
     "cap_residual",
 ]
 
@@ -53,8 +74,81 @@ def _masked(x, active, fill):
     return jnp.where(active, x, fill)
 
 
+def waterfill_prepare(u, h0, active):
+    """O(k log k) factorization of the WFP for fixed bottles (u, h0).
+
+    The *uncapped* fill curve β(h) = Σᵢ uᵢ·(h − h0ᵢ)⁺ is piecewise
+    linear with the bottle starts h0ᵢ as its only breakpoints (the
+    per-bottle cap at the budget is inert at the crossing: Σθ = b with
+    θ ≥ 0 already forces every θᵢ ≤ b, so capped and uncapped curves
+    agree at and below it).  One sort of the starts plus prefix sums of
+    the slope increments uᵢ and offsets uᵢ·h0ᵢ gives
+
+        β(pos_j) = pos_j·Σu − Σ(u·h0)          (cumulative to j)
+
+    at every breakpoint.  The factorization is *budget-independent*:
+    ``waterfill_solve`` then inverts β(h) = b for any b in O(k) — one
+    searchsorted and a linear interpolation — which is what lets
+    SmartFill's μ-minimizer price ~70 budgets per iteration against a
+    single sort.  Inactive bottles must arrive with u = 0.
+    """
+    u = jnp.asarray(u)
+    if active is None:
+        active = u > 0
+    # Finite sentinel just past the largest active start: a huge constant
+    # would multiply fp residue in the prefix sums and corrupt β's tail,
+    # breaking the sortedness the crossing search relies on.
+    h0_max = jnp.max(_masked(h0, active, -jnp.inf))
+    sentinel = jnp.where(jnp.isfinite(h0_max), h0_max + 1.0, 1.0)
+    pos = _masked(h0, active, sentinel)
+    order = jnp.argsort(pos)
+    pos = pos[order]
+    slope = jnp.cumsum(u[order])                  # Σ u over started bottles
+    offset = jnp.cumsum((u * jnp.where(active, h0, 0.0))[order])
+    vals = pos * slope - offset                   # β at each breakpoint
+    return pos, slope, vals
+
+
+def _invert_fill_curve(prep, b):
+    """Level h with β(h) = b on a prepared curve — O(k) per budget.
+
+    Beyond the last breakpoint β is linear with the total slope, so the
+    same interpolation extrapolates exactly; on a zero-slope segment
+    (degenerate all-inactive curve) the segment's left edge is returned.
+    """
+    pos, slope, vals = prep
+    k = pos.shape[0]
+    b = jnp.asarray(b, pos.dtype)
+    idx = jnp.clip(jnp.searchsorted(vals, b, side="left"), 1, k) - 1
+    seg_slope = slope[idx]
+    pos_slope = seg_slope > 0
+    h = pos[idx] + (b - vals[idx]) / jnp.where(pos_slope, seg_slope, 1.0)
+    return jnp.where(pos_slope, h, pos[idx])
+
+
+def waterfill_solve(prep, u, h0, b, active):
+    """Invert a prepared fill curve at budget ``b`` — O(k) per budget.
+
+    Returns (k,) allocations θᵢ = clip(uᵢ·(h* − h0ᵢ), 0, b) with
+    β(h*) = b.
+    """
+    b = jnp.asarray(b, prep[0].dtype)
+    h = _invert_fill_curve(prep, b)
+    theta = jnp.clip(u * (h - h0), 0.0, b)
+    return jnp.where(active & (b > 0), theta, 0.0)
+
+
+def waterfill_level(u, h0, b, active=None):
+    """Exact water level h with β(h) = b, in O(k log k) (one-shot)."""
+    u = jnp.asarray(u)
+    if active is None:
+        active = u > 0
+    return _invert_fill_curve(waterfill_prepare(u, h0, active),
+                              jnp.asarray(b, u.dtype))
+
+
 def solve_cap_regular(sp: RegularSpeedup, b, c, active=None):
-    """Closed-form CAP for regular speedup functions.
+    """Closed-form CAP for regular speedup functions — O(k log k).
 
     Args:
       sp: RegularSpeedup with ``s'(θ) = A (w + σθ)^γ``.
@@ -65,6 +159,28 @@ def solve_cap_regular(sp: RegularSpeedup, b, c, active=None):
 
     Returns:
       (k,) allocations θ with Σθ = b (exact up to fp).
+    """
+    c = jnp.asarray(c)
+    k = c.shape[0]
+    if active is None:
+        active = jnp.ones((k,), dtype=bool)
+    b = jnp.asarray(b, dtype=c.dtype)
+    b_safe = jnp.maximum(b, jnp.asarray(1e-300, c.dtype))
+
+    u = sp.bottle_width(c)            # u_i = c_i^{1/γ}
+    h0 = sp.bottle_bottom(c)          # h_i = σ·w/u_i
+    u = _masked(u, active, 0.0)
+    theta = waterfill_solve(waterfill_prepare(u, h0, active),
+                            u, h0, b_safe, active)
+    return jnp.where(b > 0, theta, jnp.zeros_like(theta))
+
+
+def solve_cap_regular_reference(sp: RegularSpeedup, b, c, active=None):
+    """Pre-overhaul O(k²) closed-form CAP (β re-evaluated per breakpoint).
+
+    The differential-test oracle for ``solve_cap_regular``: identical
+    math, but β is recomputed from scratch at each of the 2k breakpoints
+    under ``vmap`` — quadratic work and memory in k.
     """
     c = jnp.asarray(c)
     k = c.shape[0]
@@ -91,10 +207,6 @@ def solve_cap_regular(sp: RegularSpeedup, b, c, active=None):
     v_lo = vals[idx - 1]
     in_seg = active & (h_lo >= starts - 1e-300) & (h_lo < caps)
     slope = jnp.sum(jnp.where(in_seg, u, 0.0))
-    # If the crossing lands exactly on a breakpoint, fp noise can push the
-    # search into a zero-slope plateau (β constant between a bottle's cap
-    # and the next bottle's start).  There v_lo == b up to fp — take the
-    # plateau's left edge; otherwise interpolate, clamped to the segment.
     h_interp = h_lo + (b_safe - v_lo) / jnp.where(slope > 0, slope, 1.0)
     h = jnp.where(slope > 0, jnp.minimum(h_interp, h_hi), h_lo)
     theta = jnp.clip(u * (h - h0), 0.0, b_safe)
@@ -102,13 +214,30 @@ def solve_cap_regular(sp: RegularSpeedup, b, c, active=None):
     return jnp.where(b > 0, theta, jnp.zeros_like(theta))
 
 
-def solve_cap_generic(sp: Speedup, b, c, active=None, iters: int = 96):
+def solve_cap_generic(sp: Speedup, b, c, active=None, iters: int = 96,
+                      bracket=None, rel_tol: float | None = None,
+                      return_bracket: bool = False):
     """CAP for arbitrary concave speedups — bisection on water pressure λ.
 
     θ_i(λ) = clip(s'⁻¹(c_i λ), 0, b); β(λ) = Σ θ_i(λ) is strictly
-    decreasing, so a scalar bisection on λ finds β(λ) = b.  The bracket is
-    [s'(b)/max c, s'(0⁺)/min c] (paper (10b)/(10c)); when s'(0) = ∞ the
-    upper end uses s'(ε) with ε = b/(8k), which already forces β < b.
+    decreasing, so a scalar bisection on λ finds β(λ) = b.  The safe
+    bracket is [s'(b)/max c, s'(0⁺)/min c] (paper (10b)/(10c)); when
+    s'(0) = ∞ the upper end uses s'(ε) with ε = b/(8k), which already
+    forces β < b.
+
+    Args:
+      bracket: optional (λ_lo, λ_hi) warm-start hint (e.g. the bracket
+        returned by the previous solve of a nearby instance).  Each end
+        is *validated* against β before use — a hint end that no longer
+        brackets λ* falls back to the safe bracket, so a stale hint can
+        cost two extra β evaluations but never a wrong answer.
+      rel_tol: when set, the bisection exits early once
+        ``hi ≤ lo·(1 + rel_tol)`` (a ``lax.while_loop`` bounded by
+        ``iters``) — this is what makes warm-started solves cheap.
+        Floored at a few ULP of the working dtype so the exit still
+        fires in float32 (1 + 1e-13 rounds to 1.0f there).
+      return_bracket: also return the final (λ_lo, λ_hi), for carrying
+        across solves.
     """
     c = jnp.asarray(c)
     k = c.shape[0]
@@ -136,7 +265,18 @@ def solve_cap_generic(sp: Speedup, b, c, active=None, iters: int = 96):
         th = jnp.where(y >= ds0, 0.0, th)
         return _masked(th, active, 0.0)
 
-    def body(_, carry):
+    if bracket is not None:
+        w_lo = jnp.maximum(jnp.asarray(bracket[0], c.dtype), 1e-300)
+        w_hi = jnp.asarray(bracket[1], c.dtype)
+        # β decreasing: β(w_lo) ≥ b ⇔ λ* ≥ w_lo (valid lower end);
+        # β(w_hi) ≤ b ⇔ λ* ≤ w_hi (valid upper end).
+        lam_lo = jnp.where(jnp.sum(theta_of(w_lo)) >= b_safe,
+                           jnp.maximum(w_lo, lam_lo), lam_lo)
+        lam_hi = jnp.where(jnp.sum(theta_of(w_hi)) <= b_safe,
+                           jnp.minimum(w_hi, lam_hi), lam_hi)
+        lam_hi = jnp.maximum(lam_hi, lam_lo * (1.0 + 1e-12))
+
+    def shrink(carry):
         lo, hi = carry
         # bisect in log-space for relative precision across wide λ ranges
         mid = jnp.exp(0.5 * (jnp.log(lo) + jnp.log(hi)))
@@ -146,14 +286,34 @@ def solve_cap_generic(sp: Speedup, b, c, active=None, iters: int = 96):
         hi = jnp.where(beta > b_safe, hi, mid)
         return lo, hi
 
-    lo, hi = jax.lax.fori_loop(0, iters, body, (lam_lo, lam_hi))
+    if rel_tol is None:
+        lo, hi = jax.lax.fori_loop(
+            0, iters, lambda _, carry: shrink(carry), (lam_lo, lam_hi))
+    else:
+        rel = jnp.maximum(jnp.asarray(rel_tol, c.dtype),
+                          16.0 * jnp.finfo(c.dtype).eps)
+
+        def cond(state):
+            i, lo, hi = state
+            return (i < iters) & (hi > lo * (1.0 + rel))
+
+        def body(state):
+            i, lo, hi = state
+            lo, hi = shrink((lo, hi))
+            return i + 1, lo, hi
+
+        _, lo, hi = jax.lax.while_loop(cond, body, (0, lam_lo, lam_hi))
+
     lam = jnp.exp(0.5 * (jnp.log(lo) + jnp.log(hi)))
     theta = theta_of(lam)
     # exact budget: rescale the fp residual onto the positive allocations
     tot = jnp.sum(theta)
     theta = jnp.where(tot > 0, theta * (b_safe / tot), theta)
     theta = jnp.minimum(theta, b_safe)
-    return jnp.where(b > 0, theta, jnp.zeros_like(theta))
+    theta = jnp.where(b > 0, theta, jnp.zeros_like(theta))
+    if return_bracket:
+        return theta, (lo, hi)
+    return theta
 
 
 def solve_cap(sp: Speedup, b, c, active=None, iters: int = 96):
@@ -161,6 +321,65 @@ def solve_cap(sp: Speedup, b, c, active=None, iters: int = 96):
     if isinstance(sp, RegularSpeedup):
         return solve_cap_regular(sp, b, c, active)
     return solve_cap_generic(sp, b, c, active, iters=iters)
+
+
+def solve_cap_batched(sp: Speedup, b, c, active=None, iters: int = 64,
+                      impl: str = "auto"):
+    """CAP over N instances at once: (N, k) c-vectors, scalar or (N,) b.
+
+    The batched front door for controllers that water-fill many tenants
+    per tick.  Dispatch (``impl="auto"``):
+
+      * RegularSpeedup on TPU with k ≥ the kernel threshold → the fused
+        Pallas *generic waterfill* kernel (blocked θ(λ) + reduction per
+        bisection step; sort-free, which is what the TPU wants —
+        ``kernels/gwf_waterfill``);
+      * RegularSpeedup elsewhere → ``vmap`` of the O(k log k) closed
+        form;
+      * any other speedup → ``vmap`` of the λ-bisection.
+
+    ``impl`` ∈ {"auto", "closed", "bisect", "pallas"} forces a path.
+    Scalar speedup parameters are shared across instances; leaves with a
+    leading N dimension are vmapped per instance.
+    """
+    c = jnp.asarray(c)
+    if c.ndim != 2:
+        raise ValueError("c must be (N, k)")
+    N, k = c.shape
+    if active is None:
+        active = jnp.ones((N, k), dtype=bool)
+    b_v = jnp.broadcast_to(jnp.asarray(b, c.dtype), (N,))
+    regular = isinstance(sp, RegularSpeedup)
+    if impl == "auto":
+        from repro.kernels.gwf_waterfill.ops import use_pallas_for
+        if regular and use_pallas_for(k):
+            impl = "pallas"
+        else:
+            impl = "closed" if regular else "bisect"
+    if impl == "pallas":
+        if not regular:
+            raise ValueError("impl='pallas' needs a RegularSpeedup")
+        from repro.kernels.gwf_waterfill.ops import generic_waterfill_op
+        cm = jnp.where(active, c, 0.0)
+        return generic_waterfill_op(
+            cm, jnp.broadcast_to(jnp.asarray(sp.A, c.dtype), (N,)),
+            jnp.broadcast_to(jnp.asarray(sp.w, c.dtype), (N,)),
+            jnp.broadcast_to(jnp.asarray(sp.gamma, c.dtype), (N,)),
+            b_v, sigma=sp.sigma, iters=iters)
+    sp_axes = jax.tree_util.tree_map(
+        lambda l: 0 if (getattr(l, "ndim", 0) >= 1 and l.shape[0] == N)
+        else None, sp)
+    if impl == "closed":
+        if not regular:
+            raise ValueError("impl='closed' needs a RegularSpeedup")
+        return jax.vmap(solve_cap_regular, in_axes=(sp_axes, 0, 0, 0))(
+            sp, b_v, c, active)
+    if impl != "bisect":
+        raise ValueError(f"unknown impl {impl!r}")
+    return jax.vmap(
+        lambda spv, bv, cv, av: solve_cap_generic(spv, bv, cv, av,
+                                                  iters=iters),
+        in_axes=(sp_axes, 0, 0, 0))(sp, b_v, c, active)
 
 
 def cap_residual(sp: Speedup, b, c, theta, active=None, tol: float = 1e-6):

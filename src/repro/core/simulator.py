@@ -31,6 +31,12 @@ pytree) around a ``jax.vmap`` over workloads, inside a single
 any pytree leaf of ``sp`` (or of a policy) with leading dimension K is
 vmapped alongside the workload arrays.
 
+Engine throughput is dominated by the per-event policy call — for
+``SmartFillPolicy`` that is a full re-plan, so the events/sec reported
+by ``benchmarks/perf_core.py`` scale directly with the solver hot path
+(the O(k log k) factorized water-filling and the bracketed-descent μ*
+minimizer of ``core/gwf.py`` / ``core/smartfill.py``).
+
 Used for
   * cross-checking SmartFill's predicted J (= Σ a_i x_i) against an
     independent execution of its schedule,

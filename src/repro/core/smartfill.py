@@ -32,16 +32,26 @@ Device-resident design
 The whole recursion is one jitted ``lax.scan`` over iterations k with
 fixed shapes — no Python loop, no host round-trips per iteration:
 
-  * the 1-D minimization runs fully on-device: a mixed log+linear coarse
-    grid (to resolve minima near μ→0) followed by ``lax.fori_loop``
-    grid-zoom rounds using ``jnp.argmin`` — derivative-free, robust to
-    the kinks F inherits from CAP's parking breakpoints;
+  * the 1-D minimization runs fully on-device: a small mixed log+linear
+    *localization* grid (``coarse`` points, to place the unimodal
+    minimum's basin, resolving basins near μ→0) followed by a
+    fixed-iteration **golden-section descent** inside the bracketing
+    grid cell — ``descent_iters`` single-CAP evaluations shrink the
+    bracket by φ⁻¹ per step (φ⁻¹⁴⁰ ≈ 4·10⁻⁹), replacing the old
+    512-point grid + 4×64 grid-zoom (~768 CAP solves per iteration)
+    with ~70;
   * for the pure-power subfamily of ``RegularSpeedup`` (s = aθ^p — the
     heSRPT family, where the paper's closed form applies) μ* is computed
-    in closed form per iteration, skipping the grid search entirely:
+    in closed form per iteration, skipping the search entirely:
     μ*/B = (W_{k+1}^m − W_k^m)/W_{k+1}^m with m = 1/(1−p) [Berg et al.];
-    for the wider regular class the CAP inside F is already closed form
-    (``solve_cap_regular``), only the scalar argmin is iterative;
+    for the wider regular class the CAP inside F is closed form in
+    O(k log k) (``solve_cap_regular``), only the scalar argmin is
+    iterative;
+  * on the generic (non-regular) path every F evaluation is a full
+    λ-bisection; the scan carries the previous iteration's λ-bracket as
+    a warm start (validated, so it can never corrupt the solve) and the
+    bisection exits adaptively once the bracket is relatively tight —
+    see ``solve_cap_generic(bracket=…, rel_tol=…)``;
   * the solver core takes a traced active-job count ``m`` so the same
     compiled program serves padded instances — ``jax.vmap`` over
     (x, w, B, m) is the batched planning API in ``core/batch.py``.
@@ -49,10 +59,11 @@ fixed shapes — no Python loop, no host round-trips per iteration:
 After warmup a call executes with zero per-iteration host syncs; the only
 transfer is the final schedule read-back in the ``smartfill()`` wrapper.
 ``smartfill_reference`` preserves the original host-loop implementation
-as the equivalence oracle for tests.
+(including the original grid + grid-zoom minimizer) as the equivalence
+oracle for tests.
 
 Precision: run under ``jax.config.update("jax_enable_x64", True)`` for
-reference accuracy.  In float32 the grid-zoom minimizer loses ~1e-3
+reference accuracy.  In float32 the scalar minimizer loses ~1e-3
 relative J on near-linear speedups (power p ≳ 0.9), where F's minimum
 is shallow; the closed-form fast path is exact in either precision.
 """
@@ -66,7 +77,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from .gwf import solve_cap
+from .gwf import (solve_cap, solve_cap_generic, waterfill_prepare,
+                  waterfill_solve)
 from .speedup import RegularSpeedup, Speedup
 
 __all__ = [
@@ -121,6 +133,33 @@ def _is_pure_power(sp: Speedup) -> bool:
     return bool(np.all(w == 0.0) and np.all((-1.0 < g) & (g < 0.0)))
 
 
+# Golden-section constants: φ⁻¹ and φ⁻² (= 1 − φ⁻¹).
+_INVPHI = 0.6180339887498949
+_INVPHI2 = 0.3819660112501051
+# Warm λ-bracket widening between SmartFill iterations (generic path):
+# the previous iteration's λ* moves with c_{k+1} and the new budget, but
+# rarely by more than this factor; a larger move is caught by the
+# bracket validation inside solve_cap_generic and falls back to the
+# safe bracket.
+_WARM_WIDEN = 256.0
+# Adaptive λ-bisection exit: stop once hi ≤ lo·(1 + rel_tol).
+_CAP_REL_TOL = 1e-13
+
+
+def _mu_floor(B, dtype):
+    """Dtype-aware positive lower edge of the μ-minimizer's domain.
+
+    The historical floor ``B * 1e-9`` underflows to exactly 0 for small
+    budgets (float32: B ≲ 1e-29), and μ = 0 puts s(0) = 0 on the
+    phase-rate diagonal, NaN-ing the back-substituted durations.  Floor
+    at ``tiny/eps`` of the working dtype (≈1e-31 in f32, ≈1e-292 in
+    f64): far below any meaningful allocation, but positive and normal.
+    """
+    fi = jnp.finfo(dtype)
+    floor = jnp.asarray(fi.tiny, dtype) / jnp.asarray(fi.eps, dtype)
+    return jnp.maximum(B * 1e-9, floor)
+
+
 def _f_grid(sp, mus, c, a, k, W, B):
     """Vectorized F(μ) over a grid. c/a are padded to M; first k entries live.
 
@@ -139,41 +178,118 @@ def _f_grid(sp, mus, c, a, k, W, B):
 
 
 def _argmin_bracket(mus, vals, n):
-    """(best μ, best F, bracket) of a grid; NaN-safe, fully on-device."""
-    i = jnp.argmin(jnp.where(jnp.isnan(vals), jnp.inf, vals))
+    """(best μ, best F, bracket, ok) of a grid; NaN-safe, on-device.
+
+    ``ok`` is False when *every* grid value is non-finite (a degenerate
+    instance) — the caller must then propagate a finite fallback instead
+    of silently trusting index 0, which would poison the scan carry.
+    """
+    finite = jnp.isfinite(vals)
+    i = jnp.argmin(jnp.where(finite, vals, jnp.inf))
     lo = mus[jnp.maximum(i - 1, 0)]
     hi = mus[jnp.minimum(i + 1, n - 1)]
-    return mus[i], vals[i], lo, hi
+    return mus[i], vals[i], lo, hi, jnp.any(finite)
 
 
-def _minimize_f(sp, c, a, k, W, B, coarse, zoom_rounds, zoom_pts):
-    """argmin_μ F(μ) on (0, B] by mixed coarse grid + grid-zoom.
+def _make_f(sp, c, a, k, W, B, warm, cap_iters):
+    """Build (F, cap) for one SmartFill iteration.
 
-    Entirely traced: ``jnp.argmin`` + ``lax.fori_loop`` — zero host syncs.
+    ``F(μ)`` is the single-point objective for the descent loop;
+    ``cap(μ)`` returns ``(θ, λ-bracket)`` — the final CAP solve at the
+    chosen μ*.  On the regular path the CAP's water-filling curve is
+    *factorized once* here (``waterfill_prepare`` — the sort and prefix
+    sums depend only on c, not on the budget), and both F and cap
+    invert it in O(k), so the per-iteration sort is paid exactly once.
+    On the generic path each F evaluation is a warm-started, adaptively
+    terminated λ-bisection (the warm bracket is this SmartFill
+    iteration's, widened once here) and cap runs the full-precision
+    bisection, returning the bracket to carry forward.
     """
-    dtype = c.dtype
-    B = jnp.asarray(B, dtype)
-    lo = B * 1e-9
+    M = c.shape[0]
+    active = jnp.arange(M) < k
+
+    if isinstance(sp, RegularSpeedup):
+        u = jnp.where(active, sp.bottle_width(c), 0.0)
+        h0 = sp.bottle_bottom(c)
+        prep = waterfill_prepare(u, h0, active)
+
+        def F(mu):
+            th = waterfill_solve(prep, u, h0, B - mu, active)
+            served = jnp.where(active, a * sp.s(th), 0.0)
+            return (W - jnp.sum(served)) / sp.s(mu)
+
+        def cap(mu):
+            return waterfill_solve(prep, u, h0, B - mu, active), warm
+    else:
+        bracket = (warm[0] / _WARM_WIDEN, warm[1] * _WARM_WIDEN)
+
+        def F(mu):
+            th = solve_cap_generic(sp, B - mu, c, active, iters=cap_iters,
+                                   bracket=bracket, rel_tol=_CAP_REL_TOL)
+            served = jnp.where(active, a * sp.s(th), 0.0)
+            return (W - jnp.sum(served)) / sp.s(mu)
+
+        def cap(mu):
+            return solve_cap_generic(sp, B - mu, c, active, iters=96,
+                                     bracket=bracket, return_bracket=True)
+    return F, cap
+
+
+def _minimize_f(F, B, coarse, descent_iters):
+    """argmin_μ F(μ) on (0, B]: coarse localization + golden-section.
+
+    A mixed log+linear ``coarse``-point grid places the basin of the
+    unimodal F (the log half resolves basins near μ→0); golden-section
+    then contracts the bracketing cell by φ⁻¹ per iteration with one
+    F evaluation each.  Entirely traced — zero host syncs.  If every
+    probe is non-finite (degenerate instance) the minimizer returns the
+    finite fallback μ = B.
+    """
+    B = jnp.asarray(B)
+    dtype = B.dtype
+    lo = _mu_floor(B, dtype)
     g1 = jnp.geomspace(lo, B, coarse // 2, dtype=dtype)
     g2 = jnp.linspace(B / (coarse // 2), B, coarse // 2, dtype=dtype)
     mus = jnp.sort(jnp.concatenate([g1, g2]))
-    vals = _f_grid(sp, mus, c, a, k, W, B)
-    mu, val, mu_lo, mu_hi = _argmin_bracket(mus, vals, mus.shape[0])
+    vals = jax.vmap(F)(mus)
+    mu0, val0, mu_lo, mu_hi, ok = _argmin_bracket(mus, vals, mus.shape[0])
 
-    def zoom(_, carry):
-        mu_lo, mu_hi, _, _ = carry
-        mz = jnp.linspace(mu_lo, mu_hi, zoom_pts, dtype=dtype)
-        vz = _f_grid(sp, mz, c, a, k, W, B)
-        mu, val, lo2, hi2 = _argmin_bracket(mz, vz, zoom_pts)
-        return lo2, hi2, mu, val
+    span = mu_hi - mu_lo
+    x1 = mu_lo + _INVPHI2 * span
+    x2 = mu_lo + _INVPHI * span
+    f1 = F(x1)
+    f2 = F(x2)
 
-    _, _, mu, val = lax.fori_loop(0, zoom_rounds, zoom,
-                                  (mu_lo, mu_hi, mu, val))
-    return mu, val
+    def body(_, st):
+        glo, ghi, x1, x2, f1, f2 = st
+        left = (jnp.where(jnp.isnan(f1), jnp.inf, f1)
+                <= jnp.where(jnp.isnan(f2), jnp.inf, f2))
+        glo2 = jnp.where(left, glo, x1)
+        ghi2 = jnp.where(left, x2, ghi)
+        span = ghi2 - glo2
+        p = jnp.where(left, glo2 + _INVPHI2 * span, glo2 + _INVPHI * span)
+        fp = F(p)
+        nx1 = jnp.where(left, p, x2)
+        nf1 = jnp.where(left, fp, f2)
+        nx2 = jnp.where(left, x1, p)
+        nf2 = jnp.where(left, f1, fp)
+        return glo2, ghi2, nx1, nx2, nf1, nf2
+
+    _, _, x1, x2, f1, f2 = lax.fori_loop(
+        0, descent_iters, body, (mu_lo, mu_hi, x1, x2, f1, f2))
+
+    # best of the two interior points and the coarse argmin itself
+    cand_mu = jnp.stack([mu0, x1, x2])
+    cand_f = jnp.stack([val0, f1, f2])
+    i = jnp.argmin(jnp.where(jnp.isfinite(cand_f), cand_f, jnp.inf))
+    mu, val = cand_mu[i], cand_f[i]
+    bad = ~(ok & jnp.isfinite(val))
+    return jnp.where(bad, B, mu), jnp.where(bad, jnp.inf, val)
 
 
-@partial(jax.jit, static_argnames=("coarse", "zoom_rounds", "zoom_pts", "fast"))
-def _solve(sp, x, w, B, m, coarse, zoom_rounds, zoom_pts, fast):
+@partial(jax.jit,
+         static_argnames=("coarse", "descent_iters", "cap_iters", "fast"))
+def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast):
     """Fixed-shape SmartFill core: lax.scan over iterations k = 1..M−1.
 
     Args:
@@ -181,6 +297,10 @@ def _solve(sp, x, w, B, m, coarse, zoom_rounds, zoom_pts, fast):
       B: scalar budget (traced — per-instance under vmap).
       m: traced count of live jobs (prefix 0..m−1); iterations k ≥ m are
         masked no-ops so padded instances share the compiled program.
+      coarse / descent_iters: static minimizer sizes (localization grid
+        points / golden-section iterations).
+      cap_iters: static λ-bisection budget per generic CAP solve (upper
+        bound — the adaptive exit usually stops earlier).
       fast: static — closed-form μ* for the pure-power family.
 
     Returns (theta, c, a, durations, T, J, J_linear) as device arrays.
@@ -197,26 +317,36 @@ def _solve(sp, x, w, B, m, coarse, zoom_rounds, zoom_pts, fast):
     a0 = jnp.zeros((M,), dtype).at[0].set(
         jnp.where(live0, w[0] / sp.s(B), zero))
     col0 = jnp.where((idx == 0) & live0, B, zero)
+    # generic-path λ-bracket warm start, carried across iterations; the
+    # full-range init is rejected by the first solve's validation and
+    # simply means "no hint yet"
+    fi = jnp.finfo(dtype)
+    warm0 = (jnp.asarray(fi.tiny, dtype) / jnp.asarray(fi.eps, dtype),
+             jnp.asarray(fi.max, dtype) / 4.0)
 
     def step(carry, k):
-        c, a = carry
+        c, a, warm = carry
         live = k < m
         W = Wc[k]
         active = idx < k
+        F, cap = _make_f(sp, c, a, k, W, B, warm, cap_iters)
         if fast:
             # heSRPT closed form for s = aθ^p (p = γ+1, m = 1/(1−p) = −1/γ).
-            # Clamped to the grid minimizer's domain [B·1e-9, B]: a
+            # Clamped to the minimizer's domain [_mu_floor(B), B]: a
             # zero-weight live job gives μ = 0 exactly, which would put
             # s(0) = 0 on the phase-rate diagonal and NaN the durations.
             mexp = -1.0 / sp.gamma
             Wk = Wc[k] ** mexp
             Wk1 = Wc[k - 1] ** mexp
             mu = B * (Wk - Wk1) / jnp.maximum(Wk, 1e-300)
-            mu = jnp.clip(mu, B * 1e-9, B)
+            mu = jnp.clip(mu, _mu_floor(B, dtype), B)
         else:
-            mu, _ = _minimize_f(sp, c, a, k, W, B,
-                                coarse, zoom_rounds, zoom_pts)
-        th_rest = solve_cap(sp, B - mu, c, active)      # (M,) padded
+            mu, _ = _minimize_f(F, B, coarse, descent_iters)
+        th_rest, warm2 = cap(mu)                        # (M,) padded
+        if not isinstance(sp, RegularSpeedup):
+            # only a live iteration may move the carried warm bracket
+            warm = (jnp.where(live, warm2[0], warm[0]),
+                    jnp.where(live, warm2[1], warm[1]))
         # (29): a_{k+1} = F(μ*), evaluated on the one CAP solve above
         served = jnp.where(active, a * sp.s(th_rest), zero)
         a_next = (W - jnp.sum(served)) / sp.s(mu)
@@ -229,9 +359,9 @@ def _solve(sp, x, w, B, m, coarse, zoom_rounds, zoom_pts, fast):
         c = c.at[k].set(jnp.where(live, jnp.maximum(c_next, 1e-300), zero))
         a = a.at[k].set(jnp.where(live, a_next, zero))
         col = jnp.where(live, col, zero)
-        return (c, a), col
+        return (c, a, warm), col
 
-    (c, a), cols = lax.scan(step, (c0, a0), jnp.arange(1, M))
+    (c, a, _), cols = lax.scan(step, (c0, a0, warm0), jnp.arange(1, M))
     theta = jnp.concatenate([col0[:, None], cols.T], axis=1)
 
     active_jobs = idx < m
@@ -284,10 +414,10 @@ def smartfill(
     x,
     w,
     B: float | None = None,
-    coarse: int = 512,
-    zoom_rounds: int = 4,
+    coarse: int = 32,
+    descent_iters: int = 40,
     validate: bool = True,
-    zoom_pts: int = 64,
+    cap_iters: int = 64,
     fast_path: bool | None = None,
 ) -> SmartFillSchedule:
     """Run SmartFill (Algorithm 2) — single jitted device program.
@@ -298,9 +428,12 @@ def smartfill(
       x: (M,) job sizes, non-increasing.
       w: (M,) weights, non-decreasing.
       B: server bandwidth; defaults to sp.B.
+      coarse: localization-grid points for the μ* minimizer.
+      descent_iters: golden-section iterations inside the bracket.
+      cap_iters: λ-bisection budget per generic-path F evaluation.
       fast_path: None (default) auto-enables the closed-form μ* path for
-        pure-power speedups; False forces the generic grid-zoom minimizer
-        (used by equivalence tests).
+        pure-power speedups; False forces the bracketed-descent
+        minimizer (used by equivalence tests).
 
     Returns a SmartFillSchedule.
     """
@@ -313,7 +446,7 @@ def smartfill(
 
     fast = _is_pure_power(sp) and fast_path is not False
     theta, c, a, d, T, J, J_lin = _solve(
-        sp, x, w, B, M, coarse, zoom_rounds, zoom_pts, fast)
+        sp, x, w, B, M, coarse, descent_iters, cap_iters, fast)
     return SmartFillSchedule(
         theta=theta, c=c, a=a, durations=d, T=T,
         J=float(J), J_linear=float(J_lin),
@@ -335,7 +468,9 @@ def smartfill_allocations(sp: Speedup, rem, w, B: float | None = None):
 # ---------------------------------------------------------------------------
 # Host-loop reference (pre-refactor implementation) — the test oracle for
 # the device-resident solver.  Kept verbatim in structure: a Python loop
-# over iterations with host-synced argmins.
+# over iterations with host-synced argmins and the original 512-point
+# grid + grid-zoom μ* minimizer (the oracle the bracketed descent is
+# differential-tested against).
 # ---------------------------------------------------------------------------
 
 _f_grid_jit = jax.jit(_f_grid)
@@ -343,7 +478,7 @@ _f_grid_jit = jax.jit(_f_grid)
 
 def _minimize_f_ref(sp, c, a, k, W, B, coarse=512, zoom_rounds=4, zoom_pts=64):
     dtype = c.dtype
-    lo = jnp.asarray(B, dtype) * 1e-9
+    lo = _mu_floor(jnp.asarray(B, dtype), dtype)
     g1 = jnp.geomspace(lo, B, coarse // 2, dtype=dtype)
     g2 = jnp.linspace(B / (coarse // 2), B, coarse // 2, dtype=dtype)
     mus = jnp.sort(jnp.concatenate([g1, g2]))

@@ -8,5 +8,8 @@ Each kernel ships as <name>/{kernel.py, ops.py, ref.py}:
 flash_attention — blocked online-softmax attention (GQA/window/softcap)
 linear_scan     — chunked diagonal recurrence (Mamba / RG-LRU)
 gwf_waterfill   — the paper's GWF hot spot: fixed-iteration vectorized
-                  bisection water-filling over VPU-tiled job arrays
+                  bisection water-filling over VPU-tiled job arrays;
+                  plus the fused instance-batched *generic waterfill*
+                  (λ-bisection with in-kernel regular-family derivative
+                  inverse) behind a size-aware impl="auto" dispatch
 """

@@ -1,21 +1,31 @@
-"""GWF water-filling — Pallas TPU kernel for the paper's hot spot.
+"""GWF water-filling — Pallas TPU kernels for the paper's hot spot.
 
-Solves the Water-Filling Problem (paper §4.5) for *regular* speedup
-functions: find the level h with  β(h) = Σᵢ clip(uᵢ·(h − h₀ᵢ), 0, b) = b,
-then θᵢ = clip(uᵢ·(h − h₀ᵢ), 0, b).
+Two fused kernels share the same TPU-native shape: classical
+water-filling is sort-based and sequential — hostile to the TPU's
+vector units — so both recast the solve as a *fixed-iteration bisection*
+whose every iteration is one fused VPU pass over the (8, 128)-tiled job
+arrays resident in VMEM (elementwise map, clip, reduce) with the
+[lo, hi] bracket carried in registers.  No sort, no data-dependent
+control flow, deterministic latency — exactly what a cluster scheduler
+embedded in a serving loop needs when managing thousands of jobs.
 
-Classical water-filling is sort-based and sequential — hostile to the
-TPU's vector units.  The TPU-native adaptation (DESIGN.md §5) recasts it
-as a *fixed-iteration bisection in the water level*: each iteration is
-one fused VPU pass over the (8, 128)-tiled job arrays resident in VMEM
-(multiply, clip, reduce) with the [lo, hi] bracket carried in scratch.
-No sort, no data-dependent control flow, deterministic latency — exactly
-what a cluster scheduler embedded in a serving loop needs when managing
-thousands of jobs.
+``gwf_waterfill`` (level bisection)
+    The WFP for rectangle bottles (paper §4.5.1): find h with
+    β(h) = Σᵢ clip(uᵢ·(h − h₀ᵢ), 0, b) = b, then θᵢ from h.  One
+    instance per call; jobs padded to a multiple of 1024 and shaped
+    (rows, 8, 128); inactive slots get u = 0.
 
-Layout: jobs padded to a multiple of 1024 and shaped (rows, 8, 128);
-inactive slots get u = 0 (they contribute nothing to β).  64 iterations
-bracket h to ~2⁻⁶⁴ of the initial interval — beyond f32 resolution.
+``generic_waterfill`` (pressure bisection, batched)
+    The *generic* CAP path fused end-to-end: bisection on the water
+    pressure λ with the regular-family derivative inverse
+    θᵢ(λ) = σ((cᵢλ/A)^{1/γ} − w) evaluated blockwise in-kernel, one
+    grid step per instance — N independent (c, A, w, γ, b) instances
+    solved in a single ``pallas_call``.  This is the TPU path even for
+    regular speedups at scale: the closed form needs a sort, the
+    bisection needs only maps and reductions.
+
+64 iterations bracket the answer to ~2⁻⁶⁴ of the initial interval —
+beyond f32 resolution.
 """
 from __future__ import annotations
 
@@ -25,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .ref import lam_bracket
 
 _TILE = 1024  # 8 sublanes × 128 lanes
 
@@ -84,3 +96,85 @@ def gwf_waterfill(u, h0, b, *, iters: int = 64, interpret: bool = False):
         interpret=interpret,
     )(up, hp, b_arr)
     return theta.reshape(Mp)[:M]
+
+
+def _generic_wf_kernel(c_ref, par_ref, theta_ref, *, iters, sigma):
+    c = c_ref[...]                      # (1, rows, 8, 128) — one instance
+    A = par_ref[0, 0]
+    w = par_ref[0, 1]
+    ginv = par_ref[0, 2]                # 1/γ, precomputed host-side
+    b = par_ref[0, 3]
+    lam_lo = par_ref[0, 4]
+    lam_hi = par_ref[0, 5]
+    ds0 = par_ref[0, 6]
+    active = c > 0.0
+
+    def theta_of(lam):
+        y = c * lam
+        # (y/A)^{1/γ} via exp/log — the VPU has no generic power; the
+        # base is 1 on inactive lanes so the log stays finite.
+        base = jnp.where(active, y / A, 1.0)
+        th = sigma * (jnp.exp(ginv * jnp.log(base)) - w)
+        th = jnp.clip(th, 0.0, b)
+        # park jobs whose marginal value at zero is below the pressure
+        th = jnp.where(y >= ds0, 0.0, th)
+        return jnp.where(active, th, 0.0)
+
+    def body(i, carry):
+        lo, hi = carry
+        # bisect in log-space for relative precision across wide λ ranges
+        mid = jnp.exp(0.5 * (jnp.log(lo) + jnp.log(hi)))
+        below = jnp.sum(theta_of(mid)) > b       # β > b ⇒ λ* right of mid
+        lo = jnp.where(below, mid, lo)
+        hi = jnp.where(below, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lam_lo, lam_hi))
+    th = theta_of(jnp.exp(0.5 * (jnp.log(lo) + jnp.log(hi))))
+    # exact budget: rescale the fp residual onto the positive allocations
+    tot = jnp.sum(th)
+    th = jnp.where(tot > 0, th * (b / tot), th)
+    theta_ref[...] = jnp.minimum(th, b)
+
+
+def generic_waterfill(c, A, w, gamma, b, *, sigma: int = 1, iters: int = 64,
+                      interpret: bool = False):
+    """Fused batched generic waterfill: (N, K) c-vectors → (N, K) θ.
+
+    One grid step per instance; each step runs the whole λ-bisection
+    over its VMEM-resident block.  A, w, gamma, b are (N,) per-instance
+    scalars (SMEM); ``sigma`` ∈ {+1, −1} is static.  Inactive slots are
+    marked by c = 0.  Kernel math is float32.
+    """
+    c = jnp.asarray(c)
+    if c.ndim != 2:
+        raise ValueError("c must be (N, K)")
+    N, K = c.shape
+    dt = c.dtype
+    A = jnp.broadcast_to(jnp.asarray(A, dt), (N,))
+    w = jnp.broadcast_to(jnp.asarray(w, dt), (N,))
+    gamma = jnp.broadcast_to(jnp.asarray(gamma, dt), (N,))
+    b = jnp.broadcast_to(jnp.asarray(b, dt), (N,))
+    lam_lo, lam_hi, ds0 = lam_bracket(c, A, w, gamma, b, sigma)
+
+    Kp = -(-K // _TILE) * _TILE
+    rows = Kp // _TILE
+    cp = jnp.pad(c.astype(jnp.float32), ((0, 0), (0, Kp - K)))
+    cp = cp.reshape(N, rows, 8, 128)
+    par = jnp.stack(
+        [A, w, 1.0 / gamma, b, lam_lo, lam_hi, ds0, jnp.zeros_like(A)],
+        axis=1).astype(jnp.float32)                      # (N, 8)
+
+    theta = pl.pallas_call(
+        functools.partial(_generic_wf_kernel, iters=iters, sigma=sigma),
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, rows, 8, 128), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((1, 8), lambda n: (n, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, rows, 8, 128), lambda n: (n, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, rows, 8, 128), jnp.float32),
+        interpret=interpret,
+    )(cp, par)
+    return theta.reshape(N, Kp)[:, :K]

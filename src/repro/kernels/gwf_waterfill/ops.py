@@ -1,22 +1,61 @@
-"""Jitted public wrapper for the water-filling kernel."""
+"""Jitted public wrappers + size-aware dispatch for the waterfill kernels.
+
+``impl="auto"`` picks the Pallas kernel only where it wins: on a TPU
+backend **and** at job counts at or above ``PALLAS_MIN_K`` — below that
+the fixed ``pallas_call`` launch overhead loses to the fused-XLA
+reference, and off-TPU the reference is the only compiled path
+(``interpret`` mode is for tests).  The threshold is importable so
+benchmarks and docs stay in sync with the dispatch.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 
-from .kernel import gwf_waterfill
-from .ref import gwf_waterfill_ref
+from .kernel import generic_waterfill, gwf_waterfill
+from .ref import generic_waterfill_ref, gwf_waterfill_ref
 
-__all__ = ["gwf_waterfill_op", "gwf_waterfill_ref"]
+__all__ = [
+    "PALLAS_MIN_K",
+    "use_pallas_for",
+    "gwf_waterfill_op",
+    "generic_waterfill_op",
+    "gwf_waterfill_ref",
+    "generic_waterfill_ref",
+]
+
+# Smallest per-instance job count at which the Pallas kernels beat the
+# pure-XLA reference on TPU (one VMEM tile): below one (8, 128)-tiled
+# 1024-slot block the launch overhead dominates.
+PALLAS_MIN_K = 1024
+
+
+def use_pallas_for(k: int) -> bool:
+    """True when ``impl='auto'`` would route a k-job solve to Pallas."""
+    return jax.default_backend() == "tpu" and k >= PALLAS_MIN_K
 
 
 @functools.partial(jax.jit, static_argnames=("iters", "impl"))
 def gwf_waterfill_op(u, h0, b, iters=64, impl="auto"):
-    """impl: 'pallas' | 'interpret' | 'ref' | 'auto'."""
+    """Single-instance regular WFP.  impl: 'pallas' | 'interpret' | 'ref'
+    | 'auto' (size-aware: Pallas on TPU at k ≥ PALLAS_MIN_K)."""
     if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+        impl = "pallas" if use_pallas_for(u.shape[-1]) else "ref"
     if impl == "ref":
         return gwf_waterfill_ref(u, h0, b)
     return gwf_waterfill(u, h0, b, iters=iters,
                          interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "iters", "impl"))
+def generic_waterfill_op(c, A, w, gamma, b, sigma=1, iters=64, impl="auto"):
+    """Batched generic waterfill (N instances × K jobs).  Same ``impl``
+    contract as ``gwf_waterfill_op``; the auto threshold is on K."""
+    if impl == "auto":
+        impl = "pallas" if use_pallas_for(c.shape[-1]) else "ref"
+    if impl == "ref":
+        return generic_waterfill_ref(c, A, w, gamma, b, sigma=sigma,
+                                     iters=iters)
+    return generic_waterfill(c, A, w, gamma, b, sigma=sigma, iters=iters,
+                             interpret=(impl == "interpret"))

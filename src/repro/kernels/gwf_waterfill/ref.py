@@ -1,33 +1,106 @@
-"""Pure-jnp oracle for the water-filling kernel: the closed-form
-breakpoint solve from core/gwf.py specialized to (u, h0) inputs."""
+"""Pure-jnp oracles for the water-filling kernels.
+
+``gwf_waterfill_ref``      — the exact piecewise-linear WFP solve from
+                             ``core/gwf.py`` (O(k log k) sort + prefix
+                             sums) specialized to (u, h0) inputs.
+``generic_waterfill_ref``  — the batched λ-bisection (generic
+                             waterfill) for the regular-family
+                             parameterization s'(θ) = A(w + σθ)^γ; the
+                             oracle for the fused Pallas kernel and the
+                             CPU/GPU fallback of its ``impl="auto"``
+                             dispatch.
+
+Both are jit/vmap-friendly pure functions.
+"""
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+_BIG = 1e30
+
 
 def gwf_waterfill_ref(u, h0, b):
     """Exact piecewise-linear WFP solve. u (M,), h0 (M,), scalar b."""
+    from repro.core.gwf import waterfill_level
+
     u = u.astype(jnp.float64) if u.dtype == jnp.float64 else u.astype(jnp.float32)
     h0 = h0.astype(u.dtype)
     b = jnp.asarray(b, u.dtype)
     active = u > 0
-    starts = jnp.where(active, h0, 1e30)
-    caps = jnp.where(active, h0 + b / jnp.maximum(u, 1e-30), 2e30)
-
-    def beta(h):
-        vol = jnp.clip(u * (h - h0), 0.0, b)
-        return jnp.sum(jnp.where(active, vol, 0.0))
-
-    bp = jnp.sort(jnp.concatenate([starts, caps]))
-    vals = jax.vmap(beta)(bp)
-    k = u.shape[0]
-    idx = jnp.clip(jnp.searchsorted(vals, b, side="left"), 1, 2 * k - 1)
-    h_lo, h_hi = bp[idx - 1], bp[idx]
-    v_lo = vals[idx - 1]
-    in_seg = active & (h_lo >= starts - 1e-30) & (h_lo < caps)
-    slope = jnp.sum(jnp.where(in_seg, u, 0.0))
-    h = jnp.where(slope > 0,
-                  jnp.minimum(h_lo + (b - v_lo) / jnp.where(slope > 0, slope, 1.0), h_hi),
-                  h_lo)
+    h = waterfill_level(u, h0, b, active)
     return jnp.where(active, jnp.clip(u * (h - h0), 0.0, b), 0.0)
+
+
+def lam_bracket(c, A, w, gamma, b, sigma):
+    """Safe λ-bisection bracket for one instance of the regular family.
+
+    Mirrors ``core/gwf.py::solve_cap_generic``: λ ∈ [s'(b)/max c,
+    s'(0⁺)/min c], with s'(ε), ε = b/(8k), standing in for an infinite
+    s'(0) (the w = 0, σ = +1 power family).  Returns (lam_lo, lam_hi,
+    ds0) with ds0 = s'(0) capped at 1e30 so it stays f32-representable.
+    """
+    k = c.shape[-1]
+    active = c > 0
+    c_hi = jnp.max(jnp.where(active, c, -jnp.inf), axis=-1)
+    c_lo = jnp.min(jnp.where(active, c, jnp.inf), axis=-1)
+
+    def ds(t):
+        return A * (w + sigma * t) ** gamma
+
+    ds_b = ds(b)
+    eps = b / (8.0 * k)
+    ds0 = jnp.where(w > 0, A * jnp.maximum(w, 1e-300) ** gamma,
+                    jnp.asarray(_BIG, c.dtype))
+    ds_top = jnp.where(w > 0, ds0, ds(eps))
+    lam_lo = ds_b / c_hi
+    lam_hi = ds_top / c_lo * (1.0 + 1e-6)
+    lam_hi = jnp.maximum(lam_hi, lam_lo * (1.0 + 1e-6))
+    # degenerate (no active jobs): any positive bracket keeps logs finite
+    good = jnp.isfinite(lam_lo) & (lam_lo > 0) & jnp.isfinite(lam_hi)
+    lam_lo = jnp.where(good, lam_lo, 1.0)
+    lam_hi = jnp.where(good, lam_hi, 2.0)
+    return lam_lo, lam_hi, ds0
+
+
+@partial(jax.jit, static_argnames=("sigma", "iters"))
+def generic_waterfill_ref(c, A, w, gamma, b, sigma=1, iters=64):
+    """Batched generic waterfill, pure jnp: (N, K) c → (N, K) θ.
+
+    A, w, gamma, b are (N,) per-instance scalars; ``sigma`` (static ±1)
+    is shared.  Inactive slots are marked by c = 0.
+    """
+    c = jnp.asarray(c)
+    dt = c.dtype
+    A = jnp.broadcast_to(jnp.asarray(A, dt), c.shape[:1])
+    w = jnp.broadcast_to(jnp.asarray(w, dt), c.shape[:1])
+    gamma = jnp.broadcast_to(jnp.asarray(gamma, dt), c.shape[:1])
+    b = jnp.broadcast_to(jnp.asarray(b, dt), c.shape[:1])
+
+    def one(c1, A1, w1, g1, b1):
+        lam_lo, lam_hi, ds0 = lam_bracket(c1, A1, w1, g1, b1, sigma)
+        active = c1 > 0
+
+        def theta_of(lam):
+            y = c1 * lam
+            base = jnp.where(active, y / A1, 1.0)
+            th = sigma * (base ** (1.0 / g1) - w1)
+            th = jnp.clip(th, 0.0, b1)
+            th = jnp.where(y >= ds0, 0.0, th)
+            return jnp.where(active, th, 0.0)
+
+        def body(_, carry):
+            lo, hi = carry
+            mid = jnp.exp(0.5 * (jnp.log(lo) + jnp.log(hi)))
+            below = jnp.sum(theta_of(mid)) > b1
+            return jnp.where(below, mid, lo), jnp.where(below, hi, mid)
+
+        lo, hi = jax.lax.fori_loop(0, iters, body, (lam_lo, lam_hi))
+        th = theta_of(jnp.exp(0.5 * (jnp.log(lo) + jnp.log(hi))))
+        tot = jnp.sum(th)
+        th = jnp.where(tot > 0, th * (b1 / tot), th)
+        return jnp.minimum(th, b1)
+
+    return jax.vmap(one)(c, A, w, gamma, b)

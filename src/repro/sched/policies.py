@@ -166,9 +166,9 @@ class SmartFillPolicy(Policy):
 
     sp: Speedup
     B: float
-    coarse: int = 512
-    zoom_rounds: int = 4
-    zoom_pts: int = 64
+    coarse: int = 32
+    descent_iters: int = 40
+    cap_iters: int = 64
     fast: bool | None = None
     name = "SmartFill"
 
@@ -177,14 +177,15 @@ class SmartFillPolicy(Policy):
             object.__setattr__(self, "fast", _is_pure_power(self.sp))
 
     def tree_flatten(self):
-        return (self.sp, self.B), (self.coarse, self.zoom_rounds,
-                                   self.zoom_pts, self.fast)
+        return (self.sp, self.B), (self.coarse, self.descent_iters,
+                                   self.cap_iters, self.fast)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        coarse, zoom_rounds, zoom_pts, fast = aux
+        coarse, descent_iters, cap_iters, fast = aux
         return cls(sp=children[0], B=children[1], coarse=coarse,
-                   zoom_rounds=zoom_rounds, zoom_pts=zoom_pts, fast=fast)
+                   descent_iters=descent_iters, cap_iters=cap_iters,
+                   fast=fast)
 
     def __call__(self, rem, w, active):
         M = rem.shape[0]
@@ -193,8 +194,8 @@ class SmartFillPolicy(Policy):
         ws = jnp.where(active, w, 0.0)[order]
         m = jnp.sum(active)
         theta, *_ = _solve(self.sp, xs, ws, jnp.asarray(self.B, xs.dtype),
-                           m, self.coarse, self.zoom_rounds, self.zoom_pts,
-                           bool(self.fast))
+                           m, self.coarse, self.descent_iters,
+                           self.cap_iters, bool(self.fast))
         col = jnp.take(theta, jnp.clip(m - 1, 0, M - 1), axis=1)
         col = jnp.where(jnp.arange(M) < m, col, 0.0)
         out = jnp.zeros_like(rem).at[order].set(col)

@@ -13,7 +13,13 @@ from repro.core import (
     power,
     shifted_power,
 )
-from repro.core.gwf import cap_residual, solve_cap, solve_cap_generic
+from repro.core.gwf import (
+    cap_residual,
+    solve_cap,
+    solve_cap_generic,
+    solve_cap_regular,
+    solve_cap_regular_reference,
+)
 
 B = 10.0
 
@@ -90,6 +96,40 @@ def test_cap_property(b, raw, fam):
     c = np.sort(np.asarray(raw, dtype=np.float64))[::-1]
     c = c / c[0]
     _check(FAMILIES[fam], float(b), jnp.asarray(c.copy()), tol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    b=st.floats(0.05, 10.0),
+    k=st.integers(2, 24),
+    n_pad=st.integers(0, 6),
+    seed=st.integers(0, 2**31 - 1),
+    fam=st.sampled_from(list(FAMILIES)),
+)
+def test_prefix_sum_cap_matches_reference(b, k, n_pad, seed, fam):
+    """Property: the O(k log k) sort+prefix-sum regular CAP equals the
+    O(k²) breakpoint-search reference on random masked/padded instances,
+    to ≤1e-10 in f64 and to a dtype-eps-scaled bound in f32."""
+    rng = np.random.default_rng(seed)
+    c = np.sort(rng.uniform(0.02, 1.0, k))[::-1]
+    c[0] = 1.0
+    c = np.concatenate([c, rng.uniform(0.0, 1.0, n_pad)])  # padded tail
+    active = np.arange(k + n_pad) < k
+    sp = FAMILIES[fam]
+    new = np.asarray(solve_cap_regular(
+        sp, float(b), jnp.asarray(c), jnp.asarray(active)))
+    ref = np.asarray(solve_cap_regular_reference(
+        sp, float(b), jnp.asarray(c), jnp.asarray(active)))
+    np.testing.assert_allclose(new, ref, atol=1e-10, rtol=0)
+    assert np.all(new[k:] == 0.0)
+    # float32: same instance, tolerance scaled by the dtype's resolution
+    c32 = jnp.asarray(c, jnp.float32)
+    new32 = np.asarray(solve_cap_regular(
+        sp, jnp.float32(b), c32, jnp.asarray(active)))
+    ref32 = np.asarray(solve_cap_regular_reference(
+        sp, jnp.float32(b), c32, jnp.asarray(active)))
+    tol32 = 256.0 * np.finfo(np.float32).eps * max(1.0, float(b))
+    np.testing.assert_allclose(new32, ref32, atol=tol32, rtol=1e-3)
 
 
 @settings(max_examples=25, deadline=None)

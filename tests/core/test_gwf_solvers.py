@@ -1,0 +1,101 @@
+"""Deterministic solver-equivalence tests for the CAP/GWF overhaul.
+
+These run without hypothesis (which guards the property sweeps in
+``test_gwf.py``): seeded random sweeps pin the O(k log k) prefix-sum
+regular CAP to the O(k²) reference, the batched front door to the
+per-instance solves, and the warm-started λ-bisection to the plain one.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import log_speedup, neg_power, power, shifted_power
+from repro.core.gwf import (
+    solve_cap_batched,
+    solve_cap_generic,
+    solve_cap_regular,
+    solve_cap_regular_reference,
+)
+
+B = 10.0
+
+FAMILIES = {
+    "power": power(1.0, 0.5, B),
+    "shifted": shifted_power(1.0, 4.0, 0.5, B),
+    "log": log_speedup(1.0, 1.0, B),
+    "neg_power": neg_power(1.0, 1.0, -1.0, B),
+}
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+def test_prefix_sum_matches_reference_sweep(fam):
+    """Seeded sweep: masked/padded instances, f64 ≤ 1e-10 and f32 to a
+    dtype-eps-scaled bound (same property as the hypothesis sweep)."""
+    sp = FAMILIES[fam]
+    rng = np.random.default_rng(hash(fam) % 2**31)
+    for trial in range(25):
+        k = int(rng.integers(2, 40))
+        n_pad = int(rng.integers(0, 8))
+        b = float(rng.uniform(0.05, 10.0))
+        c = np.sort(rng.uniform(0.02, 1.0, k))[::-1]
+        c[0] = 1.0
+        c = np.concatenate([c, rng.uniform(0.0, 1.0, n_pad)])
+        active = np.arange(k + n_pad) < k
+        new = np.asarray(solve_cap_regular(
+            sp, b, jnp.asarray(c), jnp.asarray(active)))
+        ref = np.asarray(solve_cap_regular_reference(
+            sp, b, jnp.asarray(c), jnp.asarray(active)))
+        np.testing.assert_allclose(new, ref, atol=1e-10, rtol=0,
+                                   err_msg=f"trial {trial}")
+        assert np.all(new[k:] == 0.0)
+        assert abs(new.sum() - b) < 1e-9 * max(1.0, b)
+        c32 = jnp.asarray(c, jnp.float32)
+        new32 = np.asarray(solve_cap_regular(
+            sp, jnp.float32(b), c32, jnp.asarray(active)))
+        ref32 = np.asarray(solve_cap_regular_reference(
+            sp, jnp.float32(b), c32, jnp.asarray(active)))
+        tol32 = 256.0 * np.finfo(np.float32).eps * max(1.0, b)
+        np.testing.assert_allclose(new32, ref32, atol=tol32, rtol=1e-3)
+
+
+def test_solve_cap_batched_matches_per_instance():
+    sp = FAMILIES["shifted"]
+    rng = np.random.default_rng(7)
+    N, K = 6, 12
+    C = np.zeros((N, K))
+    for n in range(N):
+        k = rng.integers(2, K + 1)
+        C[n, :k] = np.sort(rng.uniform(0.05, 1.0, k))[::-1]
+    bs = rng.uniform(0.5, 9.0, N)
+    out = np.asarray(solve_cap_batched(sp, jnp.asarray(bs), jnp.asarray(C),
+                                       jnp.asarray(C > 0)))
+    for n in range(N):
+        ref = np.asarray(solve_cap_regular(sp, bs[n], jnp.asarray(C[n]),
+                                           jnp.asarray(C[n] > 0)))
+        np.testing.assert_allclose(out[n], ref, atol=1e-10)
+    # bisect impl agrees too (the path the Pallas kernel fuses)
+    gen = np.asarray(solve_cap_batched(sp, jnp.asarray(bs), jnp.asarray(C),
+                                       jnp.asarray(C > 0), impl="bisect",
+                                       iters=96))
+    np.testing.assert_allclose(gen, out, atol=1e-6)
+
+
+def test_generic_warm_bracket_is_validated():
+    """A hopelessly wrong warm bracket must not corrupt the solve."""
+    sp = FAMILIES["log"]
+    c = jnp.array([1.0, 0.6, 0.3, 0.1])
+    ref = solve_cap_generic(sp, 5.0, c, iters=96)
+    for bad in [(1e-20, 1e-19), (1e15, 1e18), (1e-10, 1e12)]:
+        th = solve_cap_generic(sp, 5.0, c, iters=96, bracket=bad)
+        np.testing.assert_allclose(np.asarray(th), np.asarray(ref),
+                                   atol=1e-8)
+    # a *correct* warm bracket with adaptive exit reproduces it cheaply
+    th, (lo, hi) = solve_cap_generic(sp, 5.0, c, iters=96,
+                                     return_bracket=True)
+    th2 = solve_cap_generic(sp, 5.0, c, iters=96,
+                            bracket=(lo / 256.0, hi * 256.0),
+                            rel_tol=1e-13)
+    np.testing.assert_allclose(np.asarray(th2), np.asarray(ref), atol=1e-8)
+    # adaptive exit alone returns the same answer as the fixed loop
+    th3 = solve_cap_generic(sp, 5.0, c, iters=96, rel_tol=1e-13)
+    np.testing.assert_allclose(np.asarray(th3), np.asarray(ref), atol=1e-8)

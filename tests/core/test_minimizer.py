@@ -1,0 +1,115 @@
+"""Bracketed-descent μ* minimizer: equivalence with the grid-zoom
+oracle, degenerate-instance fallback, and the dtype-aware domain floor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    GenericSpeedup,
+    log_speedup,
+    neg_power,
+    power,
+    shifted_power,
+    smartfill,
+    smartfill_reference,
+)
+from repro.core.smartfill import (_argmin_bracket, _make_f, _minimize_f,
+                                  _mu_floor)
+
+B = 10.0
+
+SPS = {
+    "power": power(1.0, 0.5, B),
+    "shifted": shifted_power(1.0, 4.0, 0.5, B),
+    "log": log_speedup(1.0, 1.0, B),
+    "neg_power": neg_power(5.0, 2.0, -1.0, B),
+}
+
+
+# ---------------------------------------------------------------------------
+# Bracketed descent == grid-zoom (the pre-overhaul minimizer, preserved in
+# smartfill_reference) on every speedup family
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", list(SPS))
+def test_descent_matches_grid_zoom(name):
+    sp = SPS[name]
+    x = np.arange(9, 0, -1.0)
+    w = 1.0 / x
+    new = smartfill(sp, x, w, B=B, fast_path=False)
+    ref = smartfill_reference(sp, x, w, B=B)
+    # μ* per iteration is the diagonal of Θ
+    mu_new = np.diag(np.asarray(new.theta))
+    mu_ref = np.diag(np.asarray(ref.theta))
+    np.testing.assert_allclose(mu_new, mu_ref, atol=1e-6 * B)
+    assert abs(new.J - ref.J) / ref.J < 1e-6
+    np.testing.assert_allclose(np.asarray(new.a), np.asarray(ref.a),
+                               rtol=1e-5)
+
+
+def test_descent_matches_grid_zoom_generic_speedup():
+    sp = GenericSpeedup(
+        s_fn=lambda t: jnp.sqrt(t) + jnp.log1p(t),
+        ds_fn=lambda t: 0.5 / jnp.sqrt(jnp.maximum(t, 1e-300))
+        + 1.0 / (1.0 + t),
+        B=B,
+    )
+    x = np.arange(6, 0, -1.0)
+    w = 1.0 / x
+    new = smartfill(sp, x, w, B=B)
+    ref = smartfill_reference(sp, x, w, B=B)
+    np.testing.assert_allclose(np.diag(np.asarray(new.theta)),
+                               np.diag(np.asarray(ref.theta)), atol=1e-6 * B)
+    assert abs(new.J - ref.J) / ref.J < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Degenerate instances: an all-NaN objective must yield the finite
+# fallback μ = B, not a silent argmin of index 0
+# ---------------------------------------------------------------------------
+def test_argmin_bracket_all_nan_reports_not_ok():
+    mus = jnp.linspace(0.1, 1.0, 8)
+    vals = jnp.full((8,), jnp.nan)
+    *_, ok = _argmin_bracket(mus, vals, 8)
+    assert not bool(ok)
+    # a single finite value flips it
+    *_, ok = _argmin_bracket(mus, vals.at[3].set(1.0), 8)
+    assert bool(ok)
+
+
+def test_minimize_f_nan_instance_falls_back_to_B():
+    sp = SPS["log"]
+    M = 6
+    c = jnp.zeros((M,)).at[0].set(1.0).at[1].set(0.5)
+    a = jnp.zeros((M,))
+    warm = (jnp.asarray(1e-30), jnp.asarray(1e30))
+    Bj = jnp.asarray(B)
+    # NaN cumulative weight makes every F probe NaN
+    F, _ = _make_f(sp, c, a, jnp.asarray(2), jnp.nan, Bj, warm, cap_iters=32)
+    mu, val = _minimize_f(F, Bj, coarse=16, descent_iters=8)
+    assert float(mu) == B
+    assert not np.isfinite(float(val))
+    # sane W recovers a finite interior minimizer
+    F, _ = _make_f(sp, c, a, jnp.asarray(2), jnp.asarray(1.5), Bj, warm,
+                   cap_iters=32)
+    mu, val = _minimize_f(F, Bj, coarse=16, descent_iters=8)
+    assert 0.0 < float(mu) <= B and np.isfinite(float(val))
+
+
+# ---------------------------------------------------------------------------
+# Dtype-aware μ floor: B·1e-9 underflows to 0 in float32 for small B
+# ---------------------------------------------------------------------------
+def test_mu_floor_positive_in_float32():
+    for b in (10.0, 1e-3, 1e-30, 1e-38):
+        bf = jnp.asarray(b, jnp.float32)
+        floor = _mu_floor(bf, jnp.float32)
+        assert float(floor) > 0.0, b
+        # and it is normal (usable in geomspace logs), not subnormal
+        assert float(floor) >= np.finfo(np.float32).tiny
+    # the historical expression really does underflow where the floor holds
+    assert float(jnp.asarray(1e-38, jnp.float32) * 1e-9) == 0.0
+
+
+def test_mu_floor_preserves_f64_behavior():
+    b = jnp.asarray(10.0, jnp.float64)
+    assert float(_mu_floor(b, jnp.float64)) == pytest.approx(1e-8, rel=1e-9)

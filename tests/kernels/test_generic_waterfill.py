@@ -1,0 +1,111 @@
+"""Fused generic-waterfill kernel: interpret-mode parity vs the jnp
+reference and the closed-form CAP, plus the size-aware auto dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import log_speedup, neg_power, saturating, shifted_power
+from repro.core.gwf import solve_cap_regular
+from repro.kernels.gwf_waterfill.kernel import generic_waterfill
+from repro.kernels.gwf_waterfill.ops import (
+    PALLAS_MIN_K,
+    generic_waterfill_op,
+    generic_waterfill_ref,
+    use_pallas_for,
+)
+
+B = 10.0
+
+FAMILIES = {
+    "shifted": shifted_power(1.0, 4.0, 0.5, B),
+    "log": log_speedup(1.0, 1.0, B),
+    "neg_power": neg_power(1.0, 1.0, -1.0, B),
+    "saturating": saturating(1.0, 12.0, 2.0, B),
+}
+
+
+def _instances(rng, N, K):
+    C = np.zeros((N, K))
+    for n in range(N):
+        k = rng.integers(2, K + 1)
+        C[n, :k] = np.sort(rng.uniform(0.05, 1.0, k))[::-1]
+    bs = rng.uniform(0.5, 9.0, N)
+    return C, bs
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+def test_ref_matches_closed_form(fam):
+    sp = FAMILIES[fam]
+    rng = np.random.default_rng(0)
+    C, bs = _instances(rng, N=6, K=17)
+    th = np.asarray(generic_waterfill_ref(
+        jnp.asarray(C), sp.A, sp.w, sp.gamma, jnp.asarray(bs),
+        sigma=sp.sigma, iters=80))
+    for n in range(C.shape[0]):
+        ref = np.asarray(solve_cap_regular(sp, bs[n], jnp.asarray(C[n]),
+                                           jnp.asarray(C[n] > 0)))
+        np.testing.assert_allclose(th[n], ref, atol=1e-8)
+        assert abs(th[n].sum() - bs[n]) < 1e-8 * max(1.0, bs[n])
+
+
+@pytest.mark.parametrize("fam", ["shifted", "log", "saturating"])
+def test_kernel_interpret_matches_closed_form(fam):
+    sp = FAMILIES[fam]
+    rng = np.random.default_rng(1)
+    C, bs = _instances(rng, N=4, K=23)
+    th = np.asarray(generic_waterfill(
+        jnp.asarray(C), sp.A, sp.w, sp.gamma, jnp.asarray(bs),
+        sigma=sp.sigma, iters=64, interpret=True))
+    assert th.shape == C.shape
+    for n in range(C.shape[0]):
+        ref = np.asarray(solve_cap_regular(sp, bs[n], jnp.asarray(C[n]),
+                                           jnp.asarray(C[n] > 0)))
+        # f32 kernel vs f64 closed form
+        np.testing.assert_allclose(th[n], ref, atol=2e-4 * max(1.0, bs[n]))
+        assert np.all(th[n][C[n] == 0.0] == 0.0)
+
+
+def test_kernel_interpret_large_padded_instance():
+    """K > one 1024-slot tile exercises the multi-row block layout."""
+    sp = FAMILIES["shifted"]
+    rng = np.random.default_rng(2)
+    K = 1500
+    c = np.zeros(K)
+    c[:1200] = np.sort(rng.uniform(0.05, 1.0, 1200))[::-1]
+    th = np.asarray(generic_waterfill(
+        jnp.asarray(c[None, :]), sp.A, sp.w, sp.gamma,
+        jnp.asarray([7.0]), sigma=sp.sigma, iters=64, interpret=True))[0]
+    ref = np.asarray(solve_cap_regular(sp, 7.0, jnp.asarray(c),
+                                       jnp.asarray(c > 0)))
+    np.testing.assert_allclose(th, ref, atol=2e-3)
+    assert abs(th.sum() - 7.0) < 1e-3 * 7.0
+
+
+def test_auto_dispatch_is_size_and_backend_aware():
+    # on CPU auto must route to the reference, at any size
+    if jax.default_backend() != "tpu":
+        assert not use_pallas_for(PALLAS_MIN_K)
+        sp = FAMILIES["log"]
+        rng = np.random.default_rng(3)
+        C, bs = _instances(rng, N=3, K=9)
+        out = generic_waterfill_op(jnp.asarray(C), sp.A, sp.w, sp.gamma,
+                                   jnp.asarray(bs), sigma=sp.sigma)
+        ref = generic_waterfill_ref(jnp.asarray(C), sp.A, sp.w, sp.gamma,
+                                    jnp.asarray(bs), sigma=sp.sigma)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-12)
+    else:  # pragma: no cover - TPU CI only
+        assert use_pallas_for(PALLAS_MIN_K)
+        assert not use_pallas_for(PALLAS_MIN_K - 1)
+
+
+def test_degenerate_empty_instance_is_all_zero():
+    sp = FAMILIES["log"]
+    C = np.zeros((2, 8))
+    C[1, :3] = [1.0, 0.5, 0.2]
+    th = np.asarray(generic_waterfill_ref(
+        jnp.asarray(C), sp.A, sp.w, sp.gamma, jnp.asarray([5.0, 5.0]),
+        sigma=sp.sigma))
+    assert np.all(th[0] == 0.0)
+    assert abs(th[1].sum() - 5.0) < 1e-8
