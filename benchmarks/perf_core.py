@@ -15,6 +15,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import pathlib
+import subprocess
+import sys
 import time
 
 import jax
@@ -201,6 +205,100 @@ def bench_simulator(K=256, M=16, reps=3):
     return rows
 
 
+FLEET_DEVICE_COUNTS = (1, 2, 4, 8)
+
+
+def bench_fleet_worker(devices: int, base_n: int, quick: bool) -> list:
+    """Measure sharded planning/simulation on THIS process's devices.
+
+    Runs inside a subprocess whose XLA_FLAGS forced ``devices`` host
+    devices (the flag must be set before jax initializes, hence the
+    process boundary).  Weak scaling: the per-device load is fixed at
+    ``base_n`` instances, so N = base_n · D and ideal instances/sec
+    grows linearly with D.
+    """
+    from repro.distributed import (fleet_mesh, plan_sharded,
+                                   simulate_ensemble_sharded)
+
+    if len(jax.devices()) != devices:
+        raise RuntimeError(
+            f"fleet worker expected {devices} devices, found "
+            f"{len(jax.devices())} — XLA_FLAGS not applied?")
+    mesh = fleet_mesh()
+    N, M = base_n * devices, 16
+    sp = _SPS["regular"]
+    wl = sample_workloads(0, K=N, M=M, B=B, m_range=(max(2, M // 2), M))
+
+    def run_plan():
+        out = plan_sharded(sp, wl.X, wl.W, B=B, mesh=mesh)
+        jax.block_until_ready(out.J)
+        return out
+
+    run_plan()                                   # compile + warm
+    dt = _time(run_plan, reps=3, warmup=1) / 1e6
+    rows = [{
+        "name": f"fleet_plan_weak_D{devices}",
+        "devices": devices, "instances": N,
+        "us_per_call": dt * 1e6,
+        "instances_per_sec": N / dt,
+        "us_per_instance": dt / N * 1e6,
+    }]
+    if not quick:
+        policies = (HeSRPTPolicy(0.5, B), EquiPolicy(B))
+
+        def run_sim():
+            out = simulate_ensemble_sharded(sp, policies, wl.X, wl.W, B=B,
+                                            mesh=mesh)
+            jax.block_until_ready(out.J)
+            return out
+
+        out = run_sim()
+        events = int(np.asarray(out.n_events).sum())
+        dt = _time(run_sim, reps=3, warmup=1) / 1e6
+        rows.append({
+            "name": f"fleet_sim_weak_D{devices}",
+            "devices": devices, "instances": len(policies) * N,
+            "us_per_call": dt * 1e6,
+            "instances_per_sec": len(policies) * N / dt,
+            "events_per_sec": events / dt,
+        })
+    return rows
+
+
+def bench_fleet(quick: bool = False):
+    """Weak-scaling rows: sharded instances/sec at 1/2/4/8 host devices.
+
+    Each device count runs in its own subprocess because
+    ``--xla_force_host_platform_device_count`` only takes effect before
+    jax initializes; workers report rows back as JSON on stdout.
+    """
+    base_n = 32 if quick else 64
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    rows = []
+    for D in FLEET_DEVICE_COUNTS:
+        env = dict(os.environ)
+        flags = env.get("XLA_FLAGS", "")
+        env["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={D}").strip()
+        # the forced device count only applies to the CPU backend — on a
+        # GPU/TPU host the worker would otherwise come up with the
+        # accelerator's device count and hard-fail its sanity check
+        env["JAX_PLATFORMS"] = "cpu"
+        env["PYTHONPATH"] = (str(repo / "src") + os.pathsep
+                             + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+        cmd = [sys.executable, "-m", "benchmarks.perf_core",
+               "--fleet-worker", str(D), "--fleet-base-n", str(base_n)]
+        if quick:
+            cmd.append("--quick")
+        out = subprocess.run(cmd, env=env, cwd=repo, capture_output=True,
+                             text=True)
+        if out.returncode != 0:
+            raise RuntimeError(
+                f"fleet worker D={D} failed:\n{out.stderr[-2000:]}")
+        rows.extend(json.loads(out.stdout.strip().splitlines()[-1]))
+    return rows
+
+
 def collect(quick: bool = False):
     """All rows + the single-vs-batched amortization summary.
 
@@ -214,6 +312,7 @@ def collect(quick: bool = False):
     single += bench_smartfill(ms=batched_ms)        # same-M baselines
     batched = bench_smartfill_batched(n_instances=n, ms=batched_ms)
     simulator = bench_simulator(K=64 if quick else 256, M=16)
+    fleet = bench_fleet(quick=quick)
     summary = {}
     for r in batched:
         base = next((s for s in single
@@ -233,14 +332,26 @@ def collect(quick: bool = False):
     summary["sim_ensemble_events_per_sec"] = sim_ens["events_per_sec"]
     summary["sim_ensemble_amortization_x"] = (
         sim_ens["events_per_sec"] / sim_single["events_per_sec"])
+    # weak-scaling efficiency: throughput relative to D=1 (1.0 = ideal;
+    # on an oversubscribed CPU host the curve flattens at the physical
+    # core count — the rows pin the mechanism, not the silicon)
+    fleet_by_d = {r["devices"]: r for r in fleet
+                  if r["name"].startswith("fleet_plan_")}
+    base = fleet_by_d.get(1)
+    if base:
+        for d, r in sorted(fleet_by_d.items()):
+            summary[f"fleet_plan_weak_scaling_D{d}_x"] = (
+                r["instances_per_sec"] / base["instances_per_sec"])
     return {
         "calibration": bench_calibration(),
         "gwf": gwf,
         "smartfill_single": single,
         "smartfill_batched": batched,
         "simulator": simulator,
+        "fleet": fleet,
         "summary": summary,
-        "config": {"B": B, "n_instances": n, "x64": jax.config.jax_enable_x64},
+        "config": {"B": B, "n_instances": n, "x64": jax.config.jax_enable_x64,
+                   "fleet_devices": list(FLEET_DEVICE_COUNTS)},
     }
 
 
@@ -252,18 +363,28 @@ def bench_rows(quick: bool = False):
     """
     report = collect(quick=quick)
     return (report["gwf"] + report["smartfill_single"]
-            + report["smartfill_batched"] + report["simulator"])
+            + report["smartfill_batched"] + report["simulator"]
+            + report["fleet"])
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="BENCH_core.json")
+    ap.add_argument("--fleet-worker", type=int, default=None,
+                    help="internal: measure sharded rows on this many "
+                         "forced host devices and print them as JSON")
+    ap.add_argument("--fleet-base-n", type=int, default=64)
     args = ap.parse_args()
+    if args.fleet_worker is not None:
+        print(json.dumps(bench_fleet_worker(args.fleet_worker,
+                                            args.fleet_base_n, args.quick)))
+        return
     report = collect(quick=args.quick)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
-    for sec in ("smartfill_single", "smartfill_batched", "simulator"):
+    for sec in ("smartfill_single", "smartfill_batched", "simulator",
+                "fleet"):
         for r in report[sec]:
             extra = (f"  {r['instances_per_sec']:.0f} inst/s"
                      if "instances_per_sec" in r else "")

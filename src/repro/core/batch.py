@@ -37,10 +37,39 @@ from .speedup import Speedup
 
 __all__ = [
     "BatchedSmartFillSchedule",
+    "batch_axes",
+    "check_axes_unambiguous",
+    "current_allocations_from",
     "smartfill_batched",
     "smartfill_allocations_batched",
     "validate_padded_instances",
 ]
+
+
+def batch_axes(tree, K: int):
+    """vmap in_axes for ``tree``: leaves with leading dim K map on 0.
+
+    The same convention as ``simulate_ensemble``'s speedup/policy
+    batching — any pytree leaf with leading dimension K is treated as
+    per-instance data; everything else is shared.
+    """
+    return jax.tree_util.tree_map(
+        lambda l: 0 if (hasattr(l, "ndim") and getattr(l, "ndim", 0) >= 1
+                        and l.shape[0] == K) else None, tree)
+
+
+def check_axes_unambiguous(tree, K: int, M: int, what: str) -> None:
+    """With K == M a 1-D (K,) leaf could equally be per-job data; refuse
+    to guess (a wrong guess silently corrupts every instance)."""
+    if K != M:
+        return
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if getattr(leaf, "ndim", 0) == 1 and leaf.shape[0] == K:
+            raise ValueError(
+                f"{what} has a 1-D leaf of length {K} but K == M — "
+                "per-instance (K,) leaves cannot be told apart from "
+                "per-job (M,) leaves; reshape per-instance leaves to "
+                "(K, 1) (they broadcast) or pick K ≠ M")
 
 
 def validate_padded_instances(X, W, m) -> None:
@@ -163,10 +192,18 @@ def smartfill_batched(
         validate_padded_instances(Xm, Wm, m)
 
     fast = _is_pure_power(sp) and fast_path is not False
+    # Per-instance speedup parameters: any pytree leaf of sp with leading
+    # dimension N (e.g. the (K,)-leaved RegularSpeedup batches from
+    # core/workloads.py) is vmapped alongside its instance, exactly as in
+    # simulate_ensemble.  Scalar leaves stay shared.
+    check_axes_unambiguous(sp, N, Xm.shape[1], "sp")
+    sp_axes = batch_axes(sp, N)
     theta, c, a, d, T, J, J_lin = jax.vmap(
-        lambda x, w, b, mm: _solve(sp, x, w, b, mm,
-                                   coarse, descent_iters, cap_iters, fast)
-    )(Xm, Wm, Bv, m)
+        lambda spv, x, w, b, mm: _solve(spv, x, w, b, mm,
+                                        coarse, descent_iters, cap_iters,
+                                        fast),
+        in_axes=(sp_axes, 0, 0, 0, 0),
+    )(sp, Xm, Wm, Bv, m)
     return BatchedSmartFillSchedule(
         theta=theta, c=c, a=a, durations=d, T=T,
         J=J, J_linear=J_lin, active=active, m=m,
@@ -188,7 +225,18 @@ def smartfill_allocations_batched(
     earliest phase, with all m active jobs live).  Returns (N, M)
     allocations; padded slots are 0.
     """
-    sched = smartfill_batched(sp, REM, W, B=B, active=active, **kwargs)
+    return current_allocations_from(
+        smartfill_batched(sp, REM, W, B=B, active=active, **kwargs))
+
+
+def current_allocations_from(sched: BatchedSmartFillSchedule) -> jnp.ndarray:
+    """Current-instant allocations of an already-solved batched plan.
+
+    Column m−1 of each instance's schedule (the earliest phase, all m
+    active jobs live) — shared by ``smartfill_allocations_batched`` and
+    the sharded fleet planner's consumers, which hold a
+    ``BatchedSmartFillSchedule`` from ``plan_sharded`` instead.
+    """
     M = sched.theta.shape[-1]
     col = jnp.clip(sched.m - 1, 0, M - 1)
     th = jnp.take_along_axis(sched.theta, col[:, None, None], axis=2)[..., 0]

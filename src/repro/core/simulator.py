@@ -239,9 +239,9 @@ def simulate_policy(sp, x, w, policy, B=None, arrival=None,
 
 def _batch_axes(tree, K: int):
     """vmap in_axes for ``tree``: leaves with leading dim K map on 0."""
-    return jax.tree_util.tree_map(
-        lambda l: 0 if (hasattr(l, "ndim") and getattr(l, "ndim", 0) >= 1
-                        and l.shape[0] == K) else None, tree)
+    from .batch import batch_axes
+
+    return batch_axes(tree, K)
 
 
 @partial(jax.jit, static_argnames=("n_events",))
@@ -270,16 +270,11 @@ def _ensemble_jit(sp, policies, X, W, ARR, rtol, n_events):
 
 def _check_axes_unambiguous(tree, K: int, M: int, what: str):
     """With K == M a 1-D (K,) leaf could equally be per-job data; refuse
-    to guess (a wrong guess silently corrupts every instance)."""
-    if K != M:
-        return
-    for leaf in jax.tree_util.tree_leaves(tree):
-        if getattr(leaf, "ndim", 0) == 1 and leaf.shape[0] == K:
-            raise ValueError(
-                f"{what} has a 1-D leaf of length {K} but K == M — the "
-                "engine cannot tell per-workload (K,) leaves from "
-                "per-job (M,) leaves; reshape per-workload leaves to "
-                "(K, 1) (they broadcast) or pick K ≠ M")
+    to guess (a wrong guess silently corrupts every instance).  One
+    shared implementation with the batched planner (core/batch.py)."""
+    from .batch import check_axes_unambiguous
+
+    check_axes_unambiguous(tree, K, M, what)
 
 
 def simulate_ensemble(sp, policies, X, W, arrival=None, B=None,

@@ -1,5 +1,6 @@
 from .sharding import (  # noqa: F401
     LOGICAL_RULES,
+    active_mesh,
     constrain,
     logical_to_spec,
     param_sharding,
@@ -7,3 +8,22 @@ from .sharding import (  # noqa: F401
 )
 from .compression import (  # noqa: F401
     init_ef_state, int8_compress, make_error_feedback_compressor)
+
+# The fleet layer re-exports lazily (PEP 562): it pulls in the whole
+# core solver/simulator stack, which the lightweight sharding-utility
+# consumers (launch/*, sched/elastic.py) must not pay for — and eager
+# importing would make any future repro.core → repro.distributed
+# import a cycle.
+_FLEET_EXPORTS = ("active_fleet_mesh", "fleet_mesh", "plan_sharded",
+                  "simulate_ensemble_sharded")
+
+
+def __getattr__(name):
+    if name in _FLEET_EXPORTS:
+        from . import fleet
+        return getattr(fleet, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_FLEET_EXPORTS))

@@ -1,0 +1,431 @@
+"""Fleet-sharding layer: partition the instance axis over a device mesh.
+
+``smartfill_batched`` and ``simulate_ensemble`` are one-device programs:
+a ``vmap`` over the instance axis.  At cloud scale the ensemble itself
+outgrows one accelerator — thousands of tenants planned per decision
+round, heSRPT-style policy sweeps over tens of thousands of workload
+instances (Berg et al.) — so this module shards that axis over a 1-D
+``jax.sharding.Mesh`` with ``shard_map``:
+
+``plan_sharded``
+    ``smartfill_batched`` with instances partitioned across the mesh.
+``simulate_ensemble_sharded``
+    ``simulate_ensemble`` with workloads partitioned across the mesh
+    (policies stay unrolled, as in the single-device runner).
+
+Both wrap the same driver (``_run_sharded``):
+
+  * the instance count N is padded up to a multiple of the device count
+    (and of the chunk size) — padded instances are **inert**: sizes,
+    weights and live-job counts pad with zeros (m = 0 rows are masked
+    no-ops inside the solver; size-0 jobs never run in the engine),
+    while speedup/policy parameter leaves pad by edge replication so the
+    padded rows still hold *valid* family parameters;
+  * instances are laid out as a ``(n_chunks, chunk)`` megabatch and the
+    per-device program is a ``lax.scan`` over chunks around the vmapped
+    single-instance core — so a sweep with K ≫ device memory streams
+    through the mesh in bounded-size chunks (``chunk_size`` bounds the
+    live working set; the scan reuses it every step);
+  * there is **no cross-device communication**: every instance is an
+    independent solve, so the shard_map body is collective-free and the
+    sharded result equals the single-device result instance by
+    instance.
+
+Per-instance batching follows the ensemble convention: any pytree leaf
+of ``sp`` (or of a policy) with leading dimension N is split across the
+mesh alongside its instances; all other leaves are replicated.
+
+The mesh resolution order is: explicit ``mesh=`` argument, then the
+innermost active ``with Mesh(...)`` context (``sharding.active_mesh``),
+then a fresh 1-D mesh over all local devices (``fleet_mesh()``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.core.batch import (BatchedSmartFillSchedule, _prepare,
+                              check_axes_unambiguous,
+                              validate_padded_instances)
+from repro.core.simulator import (EnsembleResult, _check_policy_budget,
+                                  _sim_core, n_events_for)
+from repro.core.smartfill import _is_pure_power, _solve
+
+from .sharding import active_mesh
+
+__all__ = [
+    "active_fleet_mesh",
+    "fleet_mesh",
+    "plan_sharded",
+    "simulate_ensemble_sharded",
+]
+
+FLEET_AXIS = "fleet"
+
+
+def active_fleet_mesh() -> Mesh | None:
+    """The innermost active ``with Mesh(...)`` when it is 1-D, else None.
+
+    The dispatch predicate consumers use (sched/cluster.py planning,
+    serve/admission.py's simulate estimator): a 1-D mesh context means
+    "shard the instance axis here"; a multi-axis (model-parallel) mesh
+    is somebody else's and is left alone.  Only *concrete* meshes
+    qualify — on jax ≥ 0.5 ``active_mesh()`` can surface an
+    ``AbstractMesh`` (axis names/sizes but no device placement), which
+    shard_map cannot be driven with; those fall through to the
+    single-device path instead of crashing.
+    """
+    mesh = active_mesh()
+    if (mesh is not None and len(mesh.axis_names) == 1
+            and getattr(mesh, "devices", None) is not None):
+        return mesh
+    return None
+
+
+def fleet_mesh(n_devices: int | None = None,
+               axis_name: str = FLEET_AXIS) -> Mesh:
+    """A 1-D mesh over the first ``n_devices`` local devices (all by
+    default) — the instance-axis mesh both sharded entry points expect.
+
+    On CPU, force a multi-device host with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before
+    jax initializes; see examples/fleet_sweep.py).
+    """
+    devs = np.asarray(jax.devices())
+    if n_devices is not None:
+        if n_devices > devs.size:
+            raise ValueError(
+                f"asked for {n_devices} devices, only {devs.size} present")
+        devs = devs[:n_devices]
+    return Mesh(devs, (axis_name,))
+
+
+def _resolve_mesh(mesh: Mesh | None) -> Mesh:
+    """Explicit mesh, else the active 1-D mesh context, else all devices."""
+    if mesh is None:
+        mesh = active_fleet_mesh()      # multi-axis/abstract: not ours
+    if mesh is None:
+        mesh = fleet_mesh()
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"fleet sharding needs a 1-D mesh, got axes {mesh.axis_names}")
+    if getattr(mesh, "devices", None) is None:
+        raise ValueError(
+            "fleet sharding needs a concrete Mesh with device placement, "
+            "got an abstract mesh — build one with fleet_mesh()")
+    return mesh
+
+
+class _SplitLeaves:
+    """Partition a pytree's leaves into per-instance and shared lists.
+
+    A leaf is per-instance iff its leading dimension equals N (the
+    ensemble-runner convention).  ``key`` — (treedef, is_batched) — is
+    hashable and fully determines ``_merge_leaves``, so the compiled
+    driver programs cache on it (repeated calls with the same pytree
+    *structure* must not re-jit; an admission controller plans every
+    decision round).
+    """
+
+    def __init__(self, tree, N: int):
+        leaves, self.treedef = jax.tree_util.tree_flatten(tree)
+        self.is_batched = tuple(
+            hasattr(l, "ndim") and getattr(l, "ndim", 0) >= 1
+            and l.shape[0] == N for l in leaves)
+        self.batched = tuple(l for l, b in zip(leaves, self.is_batched) if b)
+        self.shared = tuple(l for l, b in zip(leaves, self.is_batched)
+                            if not b)
+
+    @property
+    def key(self):
+        return (self.treedef, self.is_batched)
+
+
+def _merge_leaves(key, batched, shared):
+    """Rebuild the original pytree from split leaf lists (see above)."""
+    treedef, is_batched = key
+    batched, shared = list(batched), list(shared)
+    leaves = [batched.pop(0) if b else shared.pop(0) for b in is_batched]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _pad_rows(leaf, total: int, edge: bool):
+    """Pad a leading-dim-N leaf up to ``total`` rows.
+
+    ``edge=True`` replicates the last row (speedup/policy parameters:
+    padded instances keep *valid* family params so the solver cannot
+    NaN on them); ``edge=False`` pads zeros (sizes/weights/counts: the
+    inert-instance convention)."""
+    leaf = jnp.asarray(leaf)
+    n = leaf.shape[0]
+    if n == total:
+        return leaf
+    if edge:
+        tail = jnp.broadcast_to(leaf[-1:],
+                                (total - n,) + leaf.shape[1:])
+    else:
+        tail = jnp.zeros((total - n,) + leaf.shape[1:], leaf.dtype)
+    return jnp.concatenate([leaf, tail], axis=0)
+
+
+def _chunk_layout(N: int, D: int, chunk_size: int | None):
+    """(total, n_chunks, chunk): instance-axis padding plan.
+
+    ``chunk`` is the global instances per scan step — a multiple of the
+    device count D, defaulting to everything in one step.  ``total`` =
+    n_chunks · chunk ≥ N is what the instance axis pads to."""
+    if N < 1:
+        raise ValueError("need at least one instance")
+    if chunk_size is None:
+        chunk = math.ceil(N / D) * D
+    else:
+        if chunk_size < 1:
+            raise ValueError("chunk_size must be ≥ 1")
+        chunk = math.ceil(chunk_size / D) * D
+    n_chunks = math.ceil(N / chunk)
+    return n_chunks * chunk, n_chunks, chunk
+
+
+@functools.lru_cache(maxsize=256)
+def _sharded_program(fn, mesh: Mesh):
+    """The compiled mesh program for one (instance-map, mesh) pair.
+
+    ``fn`` must be a cached module-level object (``_plan_fn`` /
+    ``_sim_fn`` below return the same function for the same static
+    key), so repeated planning calls reuse the jitted program instead
+    of re-tracing — jit itself handles new *shapes* (chunk layouts) on
+    the same callable.
+
+    Layout: each batched leaf arrives as (n_chunks, chunk, …); axis 1
+    shards over the mesh (prefix spec, so the pytree structure never
+    enters the cache key) and the per-device body scans axis 0 — one
+    bounded (chunk/D)-instance solve per step, no collectives.
+    """
+    axis = mesh.axis_names[0]
+
+    def body(bat_local, sh):
+        def step(carry, sl):
+            return carry, fn(sl, sh)
+
+        _, ys = lax.scan(step, 0, bat_local)
+        return ys
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(P(None, axis), P()),
+                             out_specs=P(None, axis)))
+
+
+def _run_sharded(mesh: Mesh, fn, batched, shared, N: int,
+                 chunk_size: int | None):
+    """Drive ``fn`` over the instance axis: shard → scan chunks → vmap.
+
+    ``batched``: pytree whose leaves are (total, …) instance-major
+    arrays (already padded via ``_pad_rows``); ``shared``: replicated
+    pytree.  ``fn(slice, shared)`` maps a (rows, …) slice to a pytree
+    of (rows, …) outputs.  Returns outputs trimmed back to N rows.
+    """
+    D = mesh.devices.size
+    total, n_chunks, chunk = _chunk_layout(N, D, chunk_size)
+    resh = jax.tree_util.tree_map(
+        lambda l: l.reshape((n_chunks, chunk) + l.shape[1:]), batched)
+    out = _sharded_program(fn, mesh)(resh, shared)
+    return jax.tree_util.tree_map(
+        lambda l: l.reshape((total,) + l.shape[2:])[:N], out)
+
+
+@functools.lru_cache(maxsize=256)
+def _plan_fn(sp_key, coarse: int, descent_iters: int, cap_iters: int,
+             fast: bool):
+    """Cached instance-map for planning: one stable callable per static
+    configuration, so ``_sharded_program`` can key its jit cache on it."""
+
+    def fn(sl, shared):
+        x, w, b, mm, sp_b = sl
+
+        def one(x1, w1, b1, m1, sp_b1):
+            spv = _merge_leaves(sp_key, sp_b1, shared)
+            return _solve(spv, x1, w1, b1, m1,
+                          coarse, descent_iters, cap_iters, fast)
+
+        return jax.vmap(one)(x, w, b, mm, sp_b)
+
+    return fn
+
+
+@functools.lru_cache(maxsize=256)
+def _sim_fn(sp_key, pol_key, n_events: int):
+    """Cached instance-map for ensemble simulation (cf. ``_plan_fn``)."""
+
+    def fn(sl, shared):
+        x, w, arr, sp_b, pol_b = sl
+        sp_sh, pol_sh, rtol = shared
+
+        def one(x1, w1, a1, sp_b1, pol_b1):
+            spv = _merge_leaves(sp_key, sp_b1, sp_sh)
+            pv = _merge_leaves(pol_key, pol_b1, pol_sh)
+            T, finished, _, _, valid = _sim_core(
+                spv, pv, x1, w1, a1, rtol, n_events)
+            J = jnp.where(finished, jnp.sum(w1 * T), jnp.inf)
+            return T, J, finished, jnp.sum(valid)
+
+        return jax.vmap(one)(x, w, arr, sp_b, pol_b)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Sharded batched planning
+# ---------------------------------------------------------------------------
+
+def plan_sharded(
+    sp,
+    X,
+    W,
+    B=None,
+    active=None,
+    *,
+    mesh: Mesh | None = None,
+    chunk_size: int | None = None,
+    coarse: int = 32,
+    descent_iters: int = 40,
+    cap_iters: int = 64,
+    fast_path: bool | None = None,
+    validate: bool = False,
+) -> BatchedSmartFillSchedule:
+    """``smartfill_batched`` with the instance axis sharded over a mesh.
+
+    Same contract and padding convention as ``smartfill_batched`` (see
+    ``repro.core.batch``); per-instance speedup parameters — sp leaves
+    with leading dimension N — shard alongside their instances.  Extra
+    knobs:
+
+      mesh: 1-D device mesh (default: the active mesh context, else all
+        local devices).
+      chunk_size: global instances per scan step for K ≫ memory sweeps;
+        rounded up to a multiple of the device count.  None ⇒ one step.
+
+    Instance-by-instance the computation is identical to the
+    single-device path, so results match ``smartfill_batched`` exactly
+    (the differential guarantee tests/distributed/test_fleet.py pins).
+    """
+    Xm, Wm, active, m = _prepare(X, W, active)
+    N, M = Xm.shape
+    if B is None:
+        B = sp.B
+    Bv = jnp.broadcast_to(jnp.asarray(B, Xm.dtype), (N,))
+    if validate:
+        validate_padded_instances(Xm, Wm, m)
+    check_axes_unambiguous(sp, N, M, "sp")
+
+    mesh = _resolve_mesh(mesh)
+    D = mesh.devices.size
+    total, _, _ = _chunk_layout(N, D, chunk_size)
+    fast = _is_pure_power(sp) and fast_path is not False
+
+    split = _SplitLeaves(sp, N)
+    batched = (
+        _pad_rows(Xm, total, edge=False),
+        _pad_rows(Wm, total, edge=False),
+        _pad_rows(Bv, total, edge=True),        # a valid budget, masked off
+        _pad_rows(m, total, edge=False),        # m = 0 ⇒ inert instance
+        tuple(_pad_rows(l, total, edge=True) for l in split.batched),
+    )
+    fn = _plan_fn(split.key, coarse, descent_iters, cap_iters, fast)
+    theta, c, a, d, T, J, J_lin = _run_sharded(
+        mesh, fn, batched, split.shared, N, chunk_size)
+    return BatchedSmartFillSchedule(
+        theta=theta, c=c, a=a, durations=d, T=T,
+        J=J, J_linear=J_lin, active=active, m=m,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sharded ensemble simulation
+# ---------------------------------------------------------------------------
+
+def simulate_ensemble_sharded(
+    sp,
+    policies,
+    X,
+    W,
+    arrival=None,
+    B=None,
+    rtol: float = 1e-12,
+    n_events: int | None = None,
+    *,
+    mesh: Mesh | None = None,
+    chunk_size: int | None = None,
+) -> EnsembleResult:
+    """``simulate_ensemble`` with the workload axis sharded over a mesh.
+
+    Same contract as ``simulate_ensemble`` (see ``repro.core.simulator``)
+    — P policies × K workloads, per-workload sp/policy leaves batch by
+    the leading-dim-K convention and shard alongside their workloads.
+    Policies stay a Python-level loop (each policy is its own device
+    program here, where the single-device runner unrolls them into one);
+    workloads partition over ``mesh`` with chunked streaming as in
+    ``plan_sharded``.
+    """
+    X = jnp.asarray(X, dtype=jnp.result_type(float))
+    W = jnp.asarray(W, dtype=X.dtype)
+    if X.ndim != 2 or W.shape != X.shape:
+        raise ValueError("X and W must both be (K, M)")
+    K, M = X.shape
+    ARR = (jnp.zeros_like(X) if arrival is None
+           else jnp.asarray(arrival, X.dtype))
+    if ARR.shape != X.shape:
+        raise ValueError("arrival must be (K, M)")
+    policies = tuple(policies)
+    if not policies:
+        raise ValueError("need at least one policy")
+    names = tuple(getattr(p, "name", type(p).__name__) for p in policies)
+    if M == 0:
+        Pn = len(policies)
+        return EnsembleResult(
+            J=jnp.zeros((Pn, K), X.dtype), T=jnp.zeros((Pn, K, 0), X.dtype),
+            finished=jnp.ones((Pn, K), bool),
+            n_events=jnp.zeros((Pn, K), jnp.int32), policy_names=names)
+    check_axes_unambiguous(sp, K, M, "sp")
+    for p in policies:
+        if not getattr(p, "device_ready", False):
+            raise ValueError(
+                f"policy {p!r} is not device-ready; use sched/policies.py")
+        _check_policy_budget(p, B)
+        check_axes_unambiguous(p, K, M, f"policy {getattr(p, 'name', p)!r}")
+    n_events = int(n_events or n_events_for(M))
+    rtol = jnp.asarray(rtol, X.dtype)
+
+    mesh = _resolve_mesh(mesh)
+    D = mesh.devices.size
+    total, _, _ = _chunk_layout(K, D, chunk_size)
+    sp_split = _SplitLeaves(sp, K)
+    Xp = _pad_rows(X, total, edge=False)     # size-0 jobs: inert instance
+    Wp = _pad_rows(W, total, edge=False)
+    ARRp = _pad_rows(ARR, total, edge=False)
+    sp_bat = tuple(_pad_rows(l, total, edge=True) for l in sp_split.batched)
+
+    Js, Ts, fins, nev = [], [], [], []
+    for pol in policies:
+        pol_split = _SplitLeaves(pol, K)
+        batched = (Xp, Wp, ARRp, sp_bat,
+                   tuple(_pad_rows(l, total, edge=True)
+                         for l in pol_split.batched))
+        shared = (sp_split.shared, pol_split.shared, rtol)
+        fn = _sim_fn(sp_split.key, pol_split.key, n_events)
+        T, J, finished, ne = _run_sharded(mesh, fn, batched, shared, K,
+                                          chunk_size)
+        Ts.append(T)
+        Js.append(J)
+        fins.append(finished)
+        nev.append(ne)
+    return EnsembleResult(J=jnp.stack(Js), T=jnp.stack(Ts),
+                          finished=jnp.stack(fins), n_events=jnp.stack(nev),
+                          policy_names=names)

@@ -29,8 +29,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, get_config, list_archs
-from repro.distributed.sharding import (POLICIES, param_sharding,
-                                         state_sharding, with_logical_rules)
+from repro.distributed.sharding import (POLICIES, param_sharding, set_mesh,
+                                        state_sharding, with_logical_rules)
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
 from repro.models import init_decode_state, init_params
@@ -188,7 +188,7 @@ def run_cell(arch: str, shape_name: str, mesh, verbose=True,
             policy = "dp_tp"
 
     t0 = time.time()
-    jax.sharding.set_mesh(mesh)
+    set_mesh(mesh)
     with with_logical_rules(POLICIES[policy]):
         specs = input_specs(arch, shape_name, mesh, cfg=cfg)
         lowered = build_program(arch, shape_name, cfg=cfg,

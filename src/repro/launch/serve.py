@@ -15,6 +15,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.distributed.sharding import set_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params
 from repro.serve import ServeEngine
@@ -33,7 +34,7 @@ def main():
     cfg = get_config(args.arch, smoke=True)
     if cfg.moe:
         cfg = cfg.replace(moe_impl="dense")
-    jax.sharding.set_mesh(make_host_mesh())
+    set_mesh(make_host_mesh())
     params = init_params(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg=cfg, params=params,
                       max_len=args.prompt_len + args.gen,

@@ -17,7 +17,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data import SyntheticTokens, host_batch_iterator
-from repro.distributed.sharding import POLICIES, with_logical_rules
+from repro.distributed.sharding import (POLICIES, set_mesh,
+                                         with_logical_rules)
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params
 from repro.train import (AdamWConfig, CheckpointHook, HeartbeatMonitor,
@@ -41,7 +42,7 @@ def main():
 
     cfg = get_config(args.arch, smoke=args.smoke)
     mesh = make_host_mesh()
-    jax.sharding.set_mesh(mesh)
+    set_mesh(mesh)
 
     with with_logical_rules(POLICIES[args.policy]):
         params = init_params(jax.random.PRNGKey(0), cfg)

@@ -27,8 +27,8 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (smartfill, smartfill_allocations_batched,
-                        smartfill_batched)
+from repro.core import smartfill, smartfill_batched
+from repro.core.batch import current_allocations_from
 from repro.core.speedup import Speedup
 
 __all__ = ["Job", "ClusterScheduler", "integerize"]
@@ -107,6 +107,23 @@ class ClusterScheduler:
                 act[n, r] = True
         return orders, X, W, act
 
+    def _plan_batched(self, X, W, act):
+        """One batched SmartFill solve — sharded when a fleet mesh is up.
+
+        Inside a 1-D ``with Mesh(...)`` context the instance axis is
+        partitioned over the mesh via ``plan_sharded`` (identical
+        results, instance-parallel); otherwise the single-device vmap
+        path runs.  Multi-axis (model-parallel) mesh contexts are not
+        ours and fall through to the single-device path.
+        """
+        from repro.distributed.fleet import active_fleet_mesh, plan_sharded
+
+        mesh = active_fleet_mesh()
+        if mesh is not None:
+            return plan_sharded(self.sp, X, W, B=self.B, active=act,
+                                mesh=mesh)
+        return smartfill_batched(self.sp, X, W, B=self.B, active=act)
+
     def plan_fleets(self, fleets: list[list[Job]]):
         """SmartFill plans for many independent job sets in one device call.
 
@@ -114,12 +131,13 @@ class ClusterScheduler:
         are padded to the widest one (batched API prefix-mask
         convention).  Returns (orders, BatchedSmartFillSchedule) where
         orders[n][r] maps schedule row r back to fleets[n]'s job index.
+        Run inside a 1-D mesh context to shard the fleet axis across
+        devices (``repro.distributed.fleet``).
         """
         orders, X, W, act = self._pack_fleets(fleets)
         if X.shape[1] == 0:
             raise ValueError("plan_fleets: no active jobs in any fleet")
-        sched = smartfill_batched(self.sp, X, W, B=self.B, active=act)
-        return orders, sched
+        return orders, self._plan_batched(X, W, act)
 
     def current_allocations_fleets(self, fleets: list[list[Job]]):
         """Instantaneous optimal allocations for many fleets at once.
@@ -132,8 +150,7 @@ class ClusterScheduler:
         orders, X, W, act = self._pack_fleets(fleets)
         if X.shape[1] == 0:
             return [np.zeros(len(fleet)) for fleet in fleets]
-        th = np.asarray(smartfill_allocations_batched(
-            self.sp, X, W, B=self.B, active=act))
+        th = np.asarray(current_allocations_from(self._plan_batched(X, W, act)))
         out = []
         for n, (fleet, order) in enumerate(zip(fleets, orders)):
             alloc = np.zeros(len(fleet))

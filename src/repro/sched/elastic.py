@@ -29,7 +29,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.distributed.sharding import param_sharding
+from repro.distributed.sharding import param_sharding, set_mesh
 from repro.train import TrainState, checkpoint as ckpt
 
 __all__ = ["ElasticTrainer", "mesh_for_chips"]
@@ -86,7 +86,7 @@ class ElasticTrainer:
                          {"reason": "realloc", "old": old_chips,
                           "new": new_chips})
         new_mesh = mesh_for_chips(new_chips)
-        jax.sharding.set_mesh(new_mesh)
+        set_mesh(new_mesh)
         shardings = self._shardings(new_mesh, tree)
         restored, manifest = ckpt.restore(path, tree, shardings=shardings)
         state.params = restored["params"]

@@ -19,7 +19,10 @@ Two marginal-cost estimators (``estimator=``):
   * ``"simulate"`` — execute SmartFill on every mix through the
     device-resident scenario engine (one ``simulate_ensemble`` call);
     identical ΔJ by time consistency, and the place where execution-side
-    cost models (reallocation, preemption) can enter the score.
+    cost models (reallocation, preemption) can enter the score.  When a
+    1-D device mesh is active (or passed as ``mesh=``), the candidate
+    mixes shard across it via ``simulate_ensemble_sharded`` — deep
+    admission queues score instance-parallel over the fleet mesh.
 """
 from __future__ import annotations
 
@@ -61,16 +64,21 @@ class AdmissionController:
       cost_threshold: admit a candidate iff its marginal ΔJ is at most
         this (np.inf admits everything — the decision is then purely a
         ranking, via ``AdmissionDecision.marginal_cost``).
+      mesh: optional 1-D device mesh for the ``"simulate"`` estimator —
+        candidate mixes shard across it.  Defaults to the active mesh
+        context at evaluation time (single-device when none is active).
     """
 
     def __init__(self, sp: Speedup, B: float | None = None,
-                 cost_threshold: float = np.inf, estimator: str = "plan"):
+                 cost_threshold: float = np.inf, estimator: str = "plan",
+                 mesh=None):
         if estimator not in ("plan", "simulate"):
             raise ValueError("estimator must be 'plan' or 'simulate'")
         self.sp = sp
         self.B = float(sp.B if B is None else B)
         self.cost_threshold = float(cost_threshold)
         self.estimator = estimator
+        self.mesh = mesh
 
     def evaluate(self, running_sizes, running_weights,
                  cand_sizes, cand_weights) -> AdmissionDecision:
@@ -142,13 +150,22 @@ class AdmissionController:
         One ``simulate_ensemble`` call over the C+1 padded instances —
         an independent event-driven estimate of the same ΔJ the planner
         predicts (equal to ≤1e-6 by Prop. 7 / time consistency), and the
-        hook for cost models the planner cannot see.
+        hook for cost models the planner cannot see.  With a fleet mesh
+        (``mesh=`` or an active 1-D mesh context) the instances shard
+        across devices through ``simulate_ensemble_sharded`` instead.
         """
         from repro.core import simulate_ensemble
+        from repro.distributed.fleet import (active_fleet_mesh,
+                                             simulate_ensemble_sharded)
         from repro.sched.policies import SmartFillPolicy
 
-        res = simulate_ensemble(
-            self.sp, (SmartFillPolicy(self.sp, B=self.B),), X, W, B=self.B)
+        policies = (SmartFillPolicy(self.sp, B=self.B),)
+        mesh = self.mesh if self.mesh is not None else active_fleet_mesh()
+        if mesh is not None:
+            res = simulate_ensemble_sharded(self.sp, policies, X, W,
+                                            B=self.B, mesh=mesh)
+        else:
+            res = simulate_ensemble(self.sp, policies, X, W, B=self.B)
         return np.asarray(res.J[0])
 
     def _baseline_J(self, rs, rw) -> float:

@@ -1,0 +1,144 @@
+"""Property suite over every speedup family (paper §2 assumptions).
+
+For each family — power, shifted power, logarithmic, negative power,
+saturating, and a ``GenericSpeedup`` wrapper — random parameter draws
+must satisfy the paper's structural assumptions end to end:
+
+  * ``check_concave`` passes (s(0)=0, s strictly increasing, s'
+    strictly decreasing — the concavity the whole theory rests on);
+  * ``ds`` is monotone strictly decreasing across (0, B];
+  * ``ds_inv(ds(θ)) ≈ θ`` round-trips on interior grids (the water-
+    filling inversion the CAP solver is built from);
+  * budget-edge behavior: s(0) = 0 exactly, θ → 0⁺ stays ordered and
+    positive, the θ = B edge round-trips, and ``GenericSpeedup``'s
+    bisection clamps out-of-range derivative values to the [0, B]
+    domain ends.
+
+Hypothesis drives the sampling when installed (the `dev` extra; the
+sweep carries the repo's ``slow`` marker like every hypothesis sweep).
+A seeded random sweep of the same checks runs in tier-1 regardless, so
+the properties are exercised even where hypothesis is absent.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.speedup import (GenericSpeedup, log_speedup, neg_power,
+                                power, saturating, shifted_power)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+B = 10.0
+FAMILY_NAMES = ("power", "shifted", "log", "neg_power", "saturating",
+                "generic")
+
+
+def _make(family: str, a: float, p01: float, z: float, pneg: float,
+          psat: float):
+    """One speedup of ``family`` from shared parameter draws."""
+    if family == "power":
+        return power(a, p01, B)
+    if family == "shifted":
+        return shifted_power(a, z, p01, B)
+    if family == "log":
+        return log_speedup(a, max(p01, 0.1), B)
+    if family == "neg_power":
+        return neg_power(a, z, pneg, B)
+    if family == "saturating":
+        return saturating(a, B * (1.0 + z / 4.0), psat, B)  # z > B strictly
+    if family == "generic":
+        # a log family given only as callables: exercises the bisection
+        # ds_inv rather than the closed form
+        pl = max(p01, 0.1)
+        return GenericSpeedup(
+            s_fn=lambda th: a * jnp.log(pl * th + 1.0),
+            ds_fn=lambda th: a * pl / (pl * th + 1.0),
+            B=B)
+    raise ValueError(family)
+
+
+def _check_speedup(sp, family: str):
+    """The full property battery for one concrete speedup function."""
+    # -- concavity / monotonicity (the paper's standing assumptions) ----
+    assert sp.check_concave(), f"{family}: check_concave failed"
+
+    th = jnp.linspace(1e-6, B, 257)
+    dv = np.asarray(sp.ds(th))
+    assert np.all(np.isfinite(dv)) and np.all(dv > 0), \
+        f"{family}: s' must be finite positive on (0, B]"
+    assert np.all(np.diff(dv) < 0), \
+        f"{family}: s' must be strictly decreasing"
+
+    sv = np.asarray(sp.s(th))
+    assert np.all(np.diff(sv) > 0), f"{family}: s must be strictly increasing"
+
+    # -- ds_inv round trip (the water-filling inversion) ----------------
+    interior = jnp.linspace(0.05 * B, 0.95 * B, 33)
+    rt = np.asarray(sp.ds_inv(sp.ds(interior)))
+    tol = 1e-8 if not isinstance(sp, GenericSpeedup) else 1e-7
+    np.testing.assert_allclose(rt, np.asarray(interior), rtol=tol,
+                               atol=tol * B,
+                               err_msg=f"{family}: ds_inv∘ds ≠ id")
+
+    # -- budget edges ----------------------------------------------------
+    assert abs(float(sp.s(jnp.zeros(())))) < 1e-12, f"{family}: s(0) ≠ 0"
+    tiny = np.asarray(sp.s(jnp.asarray([1e-9, 1e-6, 1e-3])))
+    assert np.all(tiny > 0) and np.all(np.diff(tiny) > 0), \
+        f"{family}: s must stay ordered and positive as θ → 0⁺"
+
+    # θ = B edge round-trips; s'(0) dominates every interior value
+    edge = float(sp.ds_inv(sp.ds(jnp.asarray(B))))
+    np.testing.assert_allclose(edge, B, rtol=1e-7, atol=1e-6,
+                               err_msg=f"{family}: ds_inv(ds(B)) ≠ B")
+    d0 = float(sp.ds0())
+    assert d0 > float(sp.ds(jnp.asarray(0.5 * B))), \
+        f"{family}: s'(0) must dominate interior derivatives"
+
+    if isinstance(sp, GenericSpeedup):
+        # the bisection clamps out-of-range y to the domain ends
+        assert float(sp.ds_inv(jnp.asarray(2.0 * d0))) == 0.0
+        dB = float(sp.ds(jnp.asarray(B)))
+        assert float(sp.ds_inv(jnp.asarray(0.5 * dB))) == B
+    else:
+        # closed form: huge y (θ → 0⁺ side) lands at (or beyond) 0
+        assert float(sp.ds_inv(jnp.asarray(1e12))) <= 1e-6
+
+
+def _draws(rng):
+    return dict(
+        a=float(rng.uniform(0.5, 2.0)),
+        p01=float(rng.uniform(0.3, 0.9)),
+        z=float(rng.uniform(0.5, 6.0)),
+        pneg=float(rng.uniform(-2.0, -0.5)),
+        psat=float(rng.uniform(1.1, 3.0)),
+    )
+
+
+@pytest.mark.parametrize("family", FAMILY_NAMES)
+@pytest.mark.parametrize("seed", range(5))
+def test_speedup_properties_seeded(family, seed):
+    """Tier-1 sweep: the property battery on seeded random params."""
+    rng = np.random.default_rng(1000 * seed + hash(family) % 997)
+    _check_speedup(_make(family, **_draws(rng)), family)
+
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("family", FAMILY_NAMES)
+    @settings(max_examples=40, deadline=None)
+    @given(
+        a=st.floats(0.5, 2.0),
+        p01=st.floats(0.3, 0.9),
+        z=st.floats(0.5, 6.0),
+        pneg=st.floats(-2.0, -0.5),
+        psat=st.floats(1.1, 3.0),
+    )
+    def test_speedup_properties_hypothesis(family, a, p01, z, pneg, psat):
+        """Hypothesis sweep: same battery, adversarial parameter search."""
+        _check_speedup(_make(family, a, p01, z, pneg, psat), family)

@@ -1,0 +1,226 @@
+"""Multi-device differential tests: sharded == single-device.
+
+The fleet layer's contract is *parity*: ``plan_sharded`` must reproduce
+``smartfill_batched`` and ``simulate_ensemble_sharded`` must reproduce
+``simulate_ensemble`` instance by instance — sharding is a layout
+decision, never a numerical one.  CI's devices=8 job runs this module
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the
+mesh is a real 8-way partition; on a plain single-device run the same
+assertions hold over a 1-device mesh (the shard_map/scan machinery is
+exercised either way).
+
+Tolerances: the objective J must match to ≤1e-6 (relative) in both
+float64 and float32.  θ entries match to 1e-6 in float64; in float32
+the bracketed-descent μ* minimizer amplifies one-ulp differences
+between the differently-fused sharded/unsharded programs up to solver
+tolerance, so θ is compared at a √eps-scaled bound instead (the
+objective is flat at the optimum — θ wobble at that scale is exactly
+what J ≤ 1e-6 permits).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import (log_speedup, sample_workloads, shifted_power,
+                        simulate_ensemble, smartfill_batched)
+from repro.distributed import (active_fleet_mesh, fleet_mesh, plan_sharded,
+                               simulate_ensemble_sharded)
+from repro.sched.policies import EquiPolicy, HeSRPTPolicy, SmartFillPolicy
+
+B = 10.0
+K = 19          # deliberately not a multiple of any host device count
+M = 6
+
+_SPS = {
+    "regular": lambda: shifted_power(1.0, 4.0, 0.5, B),
+    "log": lambda: log_speedup(1.0, 1.0, B),
+}
+
+
+def _workloads(seed=0, k=K, m=M, **kw):
+    wl = sample_workloads(seed, K=k, M=m, B=B, m_range=(1, m), **kw)
+    X, W = wl.X.copy(), wl.W.copy()
+    X[-1] = 0.0          # one all-padding instance (m = 0) in every batch
+    W[-1] = 0.0
+    return X, W, wl
+
+
+def _theta_tol(dtype):
+    eps = jnp.finfo(dtype).eps
+    return 1e-6 if eps < 1e-10 else 64.0 * float(np.sqrt(eps))
+
+
+def _assert_plan_parity(ref, sh, dtype):
+    assert ref.theta.dtype == sh.theta.dtype == dtype
+    J_ref, J_sh = np.asarray(ref.J), np.asarray(sh.J)
+    np.testing.assert_allclose(J_sh, J_ref, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sh.theta), np.asarray(ref.theta),
+                               atol=_theta_tol(dtype))
+    np.testing.assert_allclose(np.asarray(sh.T), np.asarray(ref.T),
+                               rtol=1e-6, atol=_theta_tol(dtype))
+    np.testing.assert_array_equal(np.asarray(sh.m), np.asarray(ref.m))
+
+
+def _run_plan_parity(sp, X, W, dtype, **kw):
+    ref = smartfill_batched(sp, X, W, B=B)
+    sh = plan_sharded(sp, X, W, B=B, mesh=fleet_mesh(), **kw)
+    _assert_plan_parity(ref, sh, dtype)
+
+
+@pytest.mark.parametrize("family", sorted(_SPS))
+def test_plan_parity_f64(family):
+    X, W, _ = _workloads(0)
+    _run_plan_parity(_SPS[family](), X, W, jnp.float64)
+
+
+@pytest.mark.parametrize("family", sorted(_SPS))
+def test_plan_parity_f32(family):
+    X, W, _ = _workloads(1)
+    with jax.experimental.disable_x64():
+        _run_plan_parity(_SPS[family](), X, W, jnp.float32)
+
+
+def test_plan_parity_chunked():
+    """K≫memory driver: scanning bounded chunks changes nothing."""
+    X, W, _ = _workloads(2)
+    sp = _SPS["log"]()
+    ref = smartfill_batched(sp, X, W, B=B)
+    for chunk in (1, 4, 7, K):     # incl. chunk < devices and non-divisors
+        sh = plan_sharded(sp, X, W, B=B, mesh=fleet_mesh(), chunk_size=chunk)
+        _assert_plan_parity(ref, sh, jnp.float64)
+
+
+def test_plan_parity_batched_speedups():
+    """Per-instance RegularSpeedup leaves shard alongside their instance."""
+    X, W, wl = _workloads(3, family=("power", "shifted", "log", "neg_power"))
+    ref = smartfill_batched(wl.sp, X, W, B=B)
+    sh = plan_sharded(wl.sp, X, W, B=B, mesh=fleet_mesh(), chunk_size=8)
+    _assert_plan_parity(ref, sh, jnp.float64)
+
+
+def test_plan_parity_per_instance_budgets():
+    X, W, _ = _workloads(4)
+    Bv = np.linspace(6.0, 14.0, K)
+    sp = _SPS["regular"]()
+    ref = smartfill_batched(sp, X, W, B=Bv)
+    sh = plan_sharded(sp, X, W, B=Bv, mesh=fleet_mesh())
+    _assert_plan_parity(ref, sh, jnp.float64)
+
+
+def test_plan_padded_outputs_inert():
+    """Mesh-padding instances must never leak: padded-out rows of the
+    *returned* arrays are exactly the single-device zeros."""
+    X, W, _ = _workloads(5)
+    sp = _SPS["log"]()
+    sh = plan_sharded(sp, X, W, B=B, mesh=fleet_mesh())
+    assert sh.theta.shape[0] == K            # trimmed back to N
+    assert float(jnp.abs(sh.theta[-1]).max()) == 0.0   # m = 0 instance
+    assert float(sh.J[-1]) == 0.0
+
+
+def _ensemble_policies(sp):
+    return (SmartFillPolicy(sp, B=B), HeSRPTPolicy(0.5, B), EquiPolicy(B))
+
+
+def _assert_ensemble_parity(ref, sh):
+    np.testing.assert_array_equal(np.asarray(sh.finished),
+                                  np.asarray(ref.finished))
+    fin = np.asarray(ref.finished)
+    J_ref, J_sh = np.asarray(ref.J), np.asarray(sh.J)
+    np.testing.assert_allclose(np.where(fin, J_sh, 0.0),
+                               np.where(fin, J_ref, 0.0),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sh.T), np.asarray(ref.T),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sh.n_events),
+                                  np.asarray(ref.n_events))
+    assert sh.policy_names == ref.policy_names
+
+
+@pytest.mark.parametrize("dtype", ["f64", "f32"])
+def test_ensemble_parity(dtype):
+    X, W, wl = _workloads(6, arrival_rate=0.5)
+    sp = _SPS["regular"]()
+
+    def run():
+        ref = simulate_ensemble(sp, _ensemble_policies(sp), X, W,
+                                arrival=wl.arrival, B=B)
+        sh = simulate_ensemble_sharded(sp, _ensemble_policies(sp), X, W,
+                                       arrival=wl.arrival, B=B,
+                                       mesh=fleet_mesh(), chunk_size=8)
+        _assert_ensemble_parity(ref, sh)
+
+    if dtype == "f32":
+        with jax.experimental.disable_x64():
+            run()
+    else:
+        run()
+
+
+def test_ensemble_parity_batched_speedups():
+    """Per-workload speedup params + per-workload policy budgets shard."""
+    X, W, wl = _workloads(7, family=("power", "log"))
+    Bv = np.linspace(8.0, 12.0, K)
+    policies = (EquiPolicy(B=Bv), HeSRPTPolicy(0.5, B=Bv))
+    ref = simulate_ensemble(wl.sp, policies, X, W)
+    sh = simulate_ensemble_sharded(wl.sp, policies, X, W,
+                                   mesh=fleet_mesh())
+    _assert_ensemble_parity(ref, sh)
+
+
+def test_small_K_pads_up_to_device_count():
+    """K < device count: everything pads, results still exact."""
+    X, W, _ = _workloads(8, k=3)
+    sp = _SPS["log"]()
+    ref = smartfill_batched(sp, X, W, B=B)
+    sh = plan_sharded(sp, X, W, B=B, mesh=fleet_mesh())
+    _assert_plan_parity(ref, sh, jnp.float64)
+
+
+def test_mesh_context_dispatch():
+    """active_fleet_mesh: 1-D contexts are ours, multi-axis are not."""
+    assert active_fleet_mesh() is None
+    devs = np.asarray(jax.devices())
+    with Mesh(devs, ("fleet",)) as mesh:
+        got = active_fleet_mesh()
+        assert got is not None and tuple(got.axis_names) == ("fleet",)
+        assert got.devices.size == mesh.devices.size
+    with Mesh(devs.reshape(-1, 1), ("data", "model")):
+        assert active_fleet_mesh() is None
+    assert active_fleet_mesh() is None
+
+
+def test_cluster_plan_fleets_dispatches_to_mesh():
+    from repro.sched.cluster import ClusterScheduler, Job
+
+    sp = _SPS["log"]()
+    cs = ClusterScheduler(sp, B=B)
+    fleets = [[Job("a", 5.0, 0.2), Job("b", 3.0, 1 / 3.0)],
+              [Job("c", 7.0, 1 / 7.0), Job("d", 2.0, 0.5),
+               Job("e", 1.0, 1.0)]]
+    _, ref = cs.plan_fleets(fleets)
+    alloc_ref = cs.current_allocations_fleets(fleets)
+    with fleet_mesh():
+        _, sh = cs.plan_fleets(fleets)
+        alloc_sh = cs.current_allocations_fleets(fleets)
+    np.testing.assert_allclose(np.asarray(sh.J), np.asarray(ref.J),
+                               rtol=1e-6, atol=1e-6)
+    for a, b in zip(alloc_sh, alloc_ref):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_admission_simulate_estimator_sharded():
+    from repro.serve.admission import AdmissionController
+
+    sp = _SPS["log"]()
+    rs = np.array([8.0, 4.0])
+    cs_ = np.array([6.0, 2.0, 1.0])
+    ac = AdmissionController(sp, estimator="simulate")
+    ref = ac.evaluate(rs, 1.0 / rs, cs_, 1.0 / cs_)
+    with fleet_mesh():
+        sh = ac.evaluate(rs, 1.0 / rs, cs_, 1.0 / cs_)
+    np.testing.assert_allclose(sh.marginal_cost, ref.marginal_cost,
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(sh.admit, ref.admit)
