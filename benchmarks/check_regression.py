@@ -38,7 +38,7 @@ import shutil
 import sys
 
 _SECTIONS = ("calibration", "gwf", "smartfill_single", "smartfill_batched",
-             "simulator", "fleet")
+             "simulator", "hetero", "fleet")
 _DEFAULT_BASELINE = pathlib.Path(__file__).parent / "BENCH_baseline.json"
 
 

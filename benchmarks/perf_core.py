@@ -30,11 +30,13 @@ import numpy as np
 
 from repro.core import (log_speedup, power, sample_workloads, shifted_power,
                         simulate_ensemble, simulate_policy_device, smartfill,
-                        smartfill_batched)
+                        smartfill_batched, smartfill_hetero)
 from repro.core.gwf import (solve_cap, solve_cap_regular_reference)
 from repro.kernels.gwf_waterfill.ops import (generic_waterfill_op,
                                              gwf_waterfill_ref)
-from repro.sched.policies import EquiPolicy, HeSRPTPolicy, SmartFillPolicy
+from repro.sched.policies import (EquiPolicy, HeSRPTPolicy,
+                                  HeteroSmartFillPolicy, SmartFillPolicy,
+                                  WeightedMarginalRatePolicy)
 
 B = 10.0
 
@@ -205,6 +207,61 @@ def bench_simulator(K=256, M=16, reps=3):
     return rows
 
 
+HETERO_FAMILIES = ("power", "shifted", "log", "neg_power", "saturating")
+
+
+def bench_hetero(quick: bool = False, reps: int = 15):
+    """Heterogeneous (§7) planning + ensemble rows.
+
+    ``hetero_plan_M{32,256}``      — warm single-instance latency of the
+        per-job SmartFill solve (fixed heuristic order, mixed families
+        incl. the σ=−1 saturating row; every CAP probe is the per-job
+        λ-bisection, so these rows gate the §7 hot path the shared
+        closed form cannot cover);
+    ``hetero_sim_ensemble_*``      — the scenario engine driving the
+        re-planning hetero SmartFill and the retired weighted-marginal-
+        rate baseline over a per-job mixed-family ensemble, in simulated
+        events/sec.
+    """
+    rows = []
+    for M in (32, 256):
+        wl = sample_workloads(7, K=1, M=M, B=B, family=HETERO_FAMILIES,
+                              per_job=True)
+        sp1 = jax.tree_util.tree_map(lambda l: jnp.asarray(l)[0], wl.sp)
+        x, w = wl.X[0], wl.W[0]
+
+        def run():
+            return smartfill_hetero(sp1, x, w, B=B, exchange_passes=0)
+        out = run()                                 # compile + warm
+        r = reps if M <= 64 else max(3, reps // 5)  # M=256 is seconds/call
+        rows.append({"name": f"hetero_plan_M{M}", "M": M,
+                     "us_per_call": _time(run, reps=r, warmup=1),
+                     "J": out.J})
+
+    K, M = (32, 12) if quick else (64, 16)
+    wl = sample_workloads(8, K=K, M=M, B=B, family=HETERO_FAMILIES,
+                          per_job=True, m_range=(max(2, M // 2), M))
+    policies = (HeteroSmartFillPolicy(wl.sp, B=B),
+                WeightedMarginalRatePolicy(wl.sp, B=B))
+
+    def run_ens():
+        out = simulate_ensemble(wl.sp, policies, wl.X, wl.W, B=B)
+        jax.block_until_ready(out.J)
+        return out
+
+    out = run_ens()                                 # compile + warm
+    events = int(np.asarray(out.n_events).sum())
+    dt = _time(run_ens, reps=3, warmup=1) / 1e6
+    rows.append({
+        "name": f"hetero_sim_ensemble_P{len(policies)}_K{K}_M{M}",
+        "us_per_call": dt * 1e6,
+        "events_per_sec": events / dt,
+        "events": events,
+        "instances_per_sec": len(policies) * K / dt,
+    })
+    return rows
+
+
 FLEET_DEVICE_COUNTS = (1, 2, 4, 8)
 
 
@@ -312,6 +369,7 @@ def collect(quick: bool = False):
     single += bench_smartfill(ms=batched_ms)        # same-M baselines
     batched = bench_smartfill_batched(n_instances=n, ms=batched_ms)
     simulator = bench_simulator(K=64 if quick else 256, M=16)
+    hetero = bench_hetero(quick=quick)
     fleet = bench_fleet(quick=quick)
     summary = {}
     for r in batched:
@@ -332,6 +390,19 @@ def collect(quick: bool = False):
     summary["sim_ensemble_events_per_sec"] = sim_ens["events_per_sec"]
     summary["sim_ensemble_amortization_x"] = (
         sim_ens["events_per_sec"] / sim_single["events_per_sec"])
+    het_by_name = {r["name"]: r for r in hetero}
+    # §7 overhead: per-job λ-bisection CAP vs the shared closed form at
+    # the same M (hetero pays bisection per probe; this ratio is the
+    # price of heterogeneity the README quotes)
+    base50 = next((r for r in single
+                   if r["family"] == "regular" and r["M"] == 50), None)
+    h32 = het_by_name.get("hetero_plan_M32")
+    if base50 and h32:
+        summary["hetero_plan_M32_vs_regular_M50_x"] = (
+            h32["us_per_call"] / base50["us_per_call"])
+    for r in hetero:
+        if "events_per_sec" in r:
+            summary["hetero_ensemble_events_per_sec"] = r["events_per_sec"]
     # weak-scaling efficiency: throughput relative to D=1 (1.0 = ideal;
     # on an oversubscribed CPU host the curve flattens at the physical
     # core count — the rows pin the mechanism, not the silicon)
@@ -348,6 +419,7 @@ def collect(quick: bool = False):
         "smartfill_single": single,
         "smartfill_batched": batched,
         "simulator": simulator,
+        "hetero": hetero,
         "fleet": fleet,
         "summary": summary,
         "config": {"B": B, "n_instances": n, "x64": jax.config.jax_enable_x64,
@@ -364,7 +436,7 @@ def bench_rows(quick: bool = False):
     report = collect(quick=quick)
     return (report["gwf"] + report["smartfill_single"]
             + report["smartfill_batched"] + report["simulator"]
-            + report["fleet"])
+            + report["hetero"] + report["fleet"])
 
 
 def main():
@@ -384,7 +456,7 @@ def main():
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     for sec in ("smartfill_single", "smartfill_batched", "simulator",
-                "fleet"):
+                "hetero", "fleet"):
         for r in report[sec]:
             extra = (f"  {r['instances_per_sec']:.0f} inst/s"
                      if "instances_per_sec" in r else "")

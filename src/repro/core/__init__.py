@@ -4,32 +4,44 @@ from .speedup import (  # noqa: F401
     GenericSpeedup,
     RegularSpeedup,
     Speedup,
+    StackedSpeedup,
+    broadcast_speedup,
+    collapse_homogeneous,
     from_roofline,
+    is_per_job,
     log_speedup,
     neg_power,
     power,
     saturating,
     shifted_power,
+    stack_speedups,
+    take_job,
 )
 from .gwf import (  # noqa: F401
     solve_cap,
     solve_cap_batched,
     solve_cap_generic,
+    solve_cap_hetero,
     solve_cap_regular,
     solve_cap_regular_reference,
 )
 from .smartfill import (  # noqa: F401
+    HeteroSmartFillSchedule,
     SmartFillSchedule,
     completion_times,
+    normalized_order,
     objective,
     smartfill,
     smartfill_allocations,
+    smartfill_hetero,
+    smartfill_hetero_reference,
     smartfill_reference,
 )
 from .batch import (  # noqa: F401
     BatchedSmartFillSchedule,
     smartfill_allocations_batched,
     smartfill_batched,
+    smartfill_hetero_batched,
 )
 from .hesrpt import fit_power, hesrpt_allocations, hesrpt_policy  # noqa: F401
 from .cdr import cdr_violation, estimate_constants  # noqa: F401

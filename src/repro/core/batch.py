@@ -20,6 +20,18 @@ Padding / masking convention (matches ``solve_cap``'s ``active`` mask):
   * ``B`` may be a scalar (shared server) or an (N,) vector (one budget
     per instance).
 
+Speedup batching (one convention, two axes):
+
+  * leaves with leading dimension N are per-instance (vmapped along
+    their instance — e.g. the (K,) family parameters from
+    ``core/workloads.py``);
+  * leaves with a dimension *beyond* that are per-job (paper §7):
+    ``(N, M)`` leaves give every job of every instance its own function
+    — inside the vmap each lane sees ``(M,)`` job-indexed leaves and
+    the solver takes the heterogeneous λ-bisection path;
+  * ``smartfill_hetero_batched`` adds the per-instance completion-order
+    search on top (rows must otherwise already be in completion order).
+
 Padded outputs are exact zeros: theta rows/cols, c, a, durations and T
 of padded slots are 0, and J only sums active jobs.
 """
@@ -31,9 +43,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .smartfill import (SmartFillSchedule, _is_pure_power, _solve,
-                        _validate_instance)
-from .speedup import Speedup
+from .smartfill import (SmartFillSchedule, _fast_ok, _solve,
+                        _validate_instance, normalized_order)
+from .speedup import Speedup, collapse_homogeneous
 
 __all__ = [
     "BatchedSmartFillSchedule",
@@ -41,6 +53,7 @@ __all__ = [
     "check_axes_unambiguous",
     "current_allocations_from",
     "smartfill_batched",
+    "smartfill_hetero_batched",
     "smartfill_allocations_batched",
     "validate_padded_instances",
 ]
@@ -191,11 +204,16 @@ def smartfill_batched(
     if validate:
         validate_padded_instances(Xm, Wm, m)
 
-    fast = _is_pure_power(sp) and fast_path is not False
+    # constant job-indexed leaves collapse to the shared fast paths;
+    # the closed-form μ* additionally requires no per-job leaves inside
+    # the vmap (a leading N axis of per-instance scalars is fine)
+    sp = collapse_homogeneous(sp)
+    fast = _fast_ok(sp, N) and fast_path is not False
     # Per-instance speedup parameters: any pytree leaf of sp with leading
     # dimension N (e.g. the (K,)-leaved RegularSpeedup batches from
     # core/workloads.py) is vmapped alongside its instance, exactly as in
-    # simulate_ensemble.  Scalar leaves stay shared.
+    # simulate_ensemble; (N, M) leaves are per-instance *per-job* (§7).
+    # Scalar leaves stay shared.
     check_axes_unambiguous(sp, N, Xm.shape[1], "sp")
     sp_axes = batch_axes(sp, N)
     theta, c, a, d, T, J, J_lin = jax.vmap(
@@ -208,6 +226,83 @@ def smartfill_batched(
         theta=theta, c=c, a=a, durations=d, T=T,
         J=J, J_linear=J_lin, active=active, m=m,
     )
+
+
+def smartfill_hetero_batched(
+    sp: Speedup,
+    X,
+    W,
+    B=None,
+    active=None,
+    **kwargs,
+):
+    """Heterogeneous batched planning: per-instance order search + solve.
+
+    The fleet front door for per-job speedups (paper §7): for each
+    padded instance the completion order is chosen by
+    SJF-by-normalized-size under each job's own s_i (the
+    ``normalized_order`` heuristic — ties by weight), rows and per-job
+    ``(N, M)`` speedup leaves are permuted accordingly, and the whole
+    batch is solved in one ``smartfill_batched`` call.
+
+    Unlike ``smartfill_batched`` the rows of X/W need **not** arrive
+    sorted — the order is part of the decision.  Padding stays a prefix:
+    only the active prefix of each row is permuted.  Inputs must be
+    concrete (the order is computed host-side); adjacent-exchange
+    refinement is the single-instance planner's job
+    (``smartfill_hetero``), not the fleet path's.
+
+    Returns ``(orders, BatchedSmartFillSchedule)`` where ``orders[n][r]``
+    is the original column of instance n occupying schedule row r.
+    """
+    Xm, Wm, active, m = _prepare(X, W, active)
+    N, M = Xm.shape
+    if B is None:
+        B = sp.B
+    sp = collapse_homogeneous(sp)
+    check_axes_unambiguous(sp, N, M, "sp")
+
+    Xh = np.asarray(Xm)
+    Wh = np.asarray(Wm)
+    ms = np.asarray(m)
+    Bv = np.broadcast_to(np.asarray(B, dtype=np.float64), (N,))
+
+    leaves, treedef = jax.tree_util.tree_flatten(sp)
+    arrs = [np.asarray(l) for l in leaves]
+
+    def instance_speedup(n, mk):
+        """Instance n's speedup with job leaves cut to its live prefix."""
+        cut = []
+        for a in arrs:
+            v = a[n] if (a.ndim >= 1 and a.shape[0] == N) else a
+            if getattr(v, "ndim", 0) >= 1:
+                v = v[:mk]          # job-indexed: prefix of live jobs
+            cut.append(v)
+        return jax.tree_util.tree_unflatten(treedef, cut)
+
+    orders = np.tile(np.arange(M), (N, 1))
+    for n in range(N):
+        mk = int(ms[n])
+        if mk == 0:
+            continue
+        orders[n, :mk] = normalized_order(
+            instance_speedup(n, mk), Xh[n, :mk], Wh[n, :mk], float(Bv[n]))
+
+    gather = jnp.asarray(orders)
+    Xp = jnp.take_along_axis(Xm, gather, axis=1)
+    Wp = jnp.take_along_axis(Wm, gather, axis=1)
+
+    def permute_leaf(l):
+        arr = jnp.asarray(l)
+        if arr.ndim >= 2 and arr.shape[0] == N and arr.shape[1] == M:
+            return jnp.take_along_axis(arr, gather, axis=1)
+        if arr.ndim == 1 and arr.shape[0] == M:
+            return arr[gather]      # shared per-job → per-instance copies
+        return l
+
+    sp_p = jax.tree_util.tree_map(permute_leaf, sp)
+    sched = smartfill_batched(sp_p, Xp, Wp, B=B, active=active, **kwargs)
+    return orders, sched
 
 
 def smartfill_allocations_batched(

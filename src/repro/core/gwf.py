@@ -40,10 +40,25 @@ Two solver paths:
     once the λ-bracket is relatively tight, and ``return_bracket`` so
     callers (SmartFill's scan) can carry the bracket across solves.
 
-Both paths accept an ``active`` mask so they can live inside fixed-shape
+``solve_cap_hetero``
+    The per-job generalization (paper §7): every job carries its own
+    concave ``s_i`` via job-indexed speedup leaves (``core/speedup.py``).
+    The λ-bisection is unchanged — θ_i(λ) = clip(s_i'⁻¹(c_i λ), 0, b) —
+    with the safe bracket taken per job: λ ∈ [min_i s_i'(b)/c_i,
+    max_i s_i'(0⁺)/c_i].  For regular-family members ``ds_inv_i`` is
+    closed form, so every β probe is O(M); there is no rectangle-bottle
+    closed form across heterogeneous (A_i, γ_i) — the bottles live on
+    incompatible auxiliary curves — hence bisection is *the* hetero
+    path, with the prefix-sum O(k log k) solver kept as the homogeneous
+    fast case.  (``solve_cap_generic`` computes its bracket per job too,
+    which for a shared speedup reduces bit-for-bit to the old scalar
+    bracket — division by max/min commutes with min/max of quotients.)
+
+All paths accept an ``active`` mask so they can live inside fixed-shape
 ``lax`` loops (SmartFill pads every CAP instance to M jobs).
 ``solve_cap_batched`` is the N-instance front door with size-aware
-dispatch onto the fused Pallas waterfill kernel on TPU.
+dispatch onto the fused Pallas waterfill kernels on TPU (including the
+per-job-parameter ``hetero_waterfill`` variant).
 
 All functions are pure and dtype-polymorphic; run under
 ``jax.config.update("jax_enable_x64", True)`` for reference precision.
@@ -53,13 +68,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .speedup import RegularSpeedup, Speedup
+from .speedup import RegularSpeedup, Speedup, StackedSpeedup, is_per_job
 
 __all__ = [
     "solve_cap",
     "solve_cap_regular",
     "solve_cap_regular_reference",
     "solve_cap_generic",
+    "solve_cap_hetero",
     "solve_cap_batched",
     "waterfill_prepare",
     "waterfill_solve",
@@ -246,16 +262,22 @@ def solve_cap_generic(sp: Speedup, b, c, active=None, iters: int = 96,
     b = jnp.asarray(b, dtype=c.dtype)
     b_safe = jnp.maximum(b, jnp.asarray(1e-300, c.dtype))
 
-    c_hi = jnp.max(_masked(c, active, -jnp.inf))
-    c_lo = jnp.min(_masked(c, active, jnp.inf))
-
-    ds_b = sp.ds(b_safe)
-    ds0 = sp.ds0()
+    # Per-job safe bracket (paper (10b)/(10c), §7 form): each job may
+    # carry its own s_i via job-indexed speedup leaves, so the bracket
+    # ends are reduced over jobs — λ_lo = min_i s_i'(b)/c_i makes the
+    # binding job fill the whole budget (β ≥ b) and λ_hi = max_i
+    # s_i'(0⁺)/c_i parks every job below ε (β ≤ k·ε < b).  For a shared
+    # speedup this reduces bit-for-bit to ds(b)/max c and ds(0⁺)/min c.
+    shape = c.shape
+    ds_b = jnp.broadcast_to(sp.ds(b_safe), shape)
+    ds0 = jnp.broadcast_to(sp.ds0(), shape)
     eps = b_safe / (8.0 * k)
-    ds_top = jnp.where(jnp.isfinite(ds0), ds0, sp.ds(eps))
+    ds_top = jnp.where(jnp.isfinite(ds0), ds0,
+                       jnp.broadcast_to(sp.ds(eps), shape))
 
-    lam_lo = ds_b / c_hi                      # β(lam_lo) ≥ b
-    lam_hi = ds_top / c_lo * (1.0 + 1e-9)     # β(lam_hi) ≤ k·ε < b (or 0)
+    lam_lo = jnp.min(_masked(ds_b / c, active, jnp.inf))     # β(lam_lo) ≥ b
+    lam_hi = (jnp.max(_masked(ds_top / c, active, -jnp.inf))
+              * (1.0 + 1e-9))                 # β(lam_hi) ≤ k·ε < b (or 0)
     lam_hi = jnp.maximum(lam_hi, lam_lo * (1.0 + 1e-9))
 
     def theta_of(lam):
@@ -316,9 +338,30 @@ def solve_cap_generic(sp: Speedup, b, c, active=None, iters: int = 96,
     return theta
 
 
+def solve_cap_hetero(sp: Speedup, b, c, active=None, iters: int = 96,
+                     **kwargs):
+    """CAP with per-job speedup functions (paper §7) — O(M) per probe.
+
+    ``sp`` carries job-indexed leaves (an ``(M,)``-leaved
+    ``RegularSpeedup`` or a ``StackedSpeedup``); the solve is a
+    λ-bisection over the per-job closed-form ``ds_inv_i(c_i λ)``.  This
+    is ``solve_cap_generic`` — which is per-job aware throughout — under
+    its §7 name; it exists so call sites can say what they mean and so
+    the warm-bracket kwargs are documented for the hetero path too.
+    """
+    return solve_cap_generic(sp, b, c, active, iters=iters, **kwargs)
+
+
 def solve_cap(sp: Speedup, b, c, active=None, iters: int = 96):
-    """Dispatch: closed form for RegularSpeedup, bisection otherwise."""
-    if isinstance(sp, RegularSpeedup):
+    """Dispatch: closed form for a shared RegularSpeedup; λ-bisection for
+    per-job (heterogeneous) or non-regular speedups.
+
+    The rectangle-bottle closed form requires one shared auxiliary curve
+    g(h) = A(σh)^γ — job-indexed (A_i, γ_i) leaves have none, so any
+    per-job speedup routes to the bisection (where regular-family
+    members still enjoy a closed-form ``ds_inv_i`` per probe).
+    """
+    if isinstance(sp, RegularSpeedup) and not is_per_job(sp):
         return solve_cap_regular(sp, b, c, active)
     return solve_cap_generic(sp, b, c, active, iters=iters)
 
@@ -330,17 +373,23 @@ def solve_cap_batched(sp: Speedup, b, c, active=None, iters: int = 64,
     The batched front door for controllers that water-fill many tenants
     per tick.  Dispatch (``impl="auto"``):
 
-      * RegularSpeedup on TPU with k ≥ the kernel threshold → the fused
-        Pallas *generic waterfill* kernel (blocked θ(λ) + reduction per
-        bisection step; sort-free, which is what the TPU wants —
-        ``kernels/gwf_waterfill``);
-      * RegularSpeedup elsewhere → ``vmap`` of the O(k log k) closed
-        form;
+      * shared RegularSpeedup on TPU with k ≥ the kernel threshold → the
+        fused Pallas *generic waterfill* kernel (blocked θ(λ) +
+        reduction per bisection step; sort-free, which is what the TPU
+        wants — ``kernels/gwf_waterfill``);
+      * shared RegularSpeedup elsewhere → ``vmap`` of the O(k log k)
+        closed form;
+      * per-job regular-family speedups (job-indexed RegularSpeedup
+        leaves or a StackedSpeedup) on TPU at kernel size → the fused
+        *hetero waterfill* kernel (per-job parameter blocks in VMEM);
+        elsewhere → ``vmap`` of the per-job λ-bisection;
       * any other speedup → ``vmap`` of the λ-bisection.
 
-    ``impl`` ∈ {"auto", "closed", "bisect", "pallas"} forces a path.
+    ``impl`` ∈ {"auto", "closed", "bisect", "pallas"} forces a path
+    ("pallas" resolves to the hetero kernel when ``sp`` is per-job).
     Scalar speedup parameters are shared across instances; leaves with a
-    leading N dimension are vmapped per instance.
+    leading N dimension are vmapped per instance; ``(N, k)`` leaves are
+    per-instance *and* per-job.
     """
     c = jnp.asarray(c)
     if c.ndim != 2:
@@ -349,18 +398,52 @@ def solve_cap_batched(sp: Speedup, b, c, active=None, iters: int = 64,
     if active is None:
         active = jnp.ones((N, k), dtype=bool)
     b_v = jnp.broadcast_to(jnp.asarray(b, c.dtype), (N,))
-    regular = isinstance(sp, RegularSpeedup)
+    from .batch import check_axes_unambiguous
+    from .speedup import inner_per_job
+
+    # With N == k a 1-D speedup leaf is per-instance or per-job with no
+    # way to tell — every impl path must refuse, not just the kernel's
+    # own broadcast (the vmapped paths would silently pick per-instance).
+    check_axes_unambiguous(sp, N, k, "sp")
+    per_job = inner_per_job(sp, N)
+    regular = isinstance(sp, RegularSpeedup) and not per_job
+    stackable = isinstance(sp, (RegularSpeedup, StackedSpeedup))
     if impl == "auto":
         from repro.kernels.gwf_waterfill.ops import use_pallas_for
-        if regular and use_pallas_for(k):
+        if stackable and per_job and use_pallas_for(k):
+            impl = "pallas"
+        elif regular and use_pallas_for(k):
             impl = "pallas"
         else:
             impl = "closed" if regular else "bisect"
     if impl == "pallas":
-        if not regular:
-            raise ValueError("impl='pallas' needs a RegularSpeedup")
-        from repro.kernels.gwf_waterfill.ops import generic_waterfill_op
+        if not stackable:
+            raise ValueError("impl='pallas' needs a (possibly per-job) "
+                             "regular-family speedup")
         cm = jnp.where(active, c, 0.0)
+        if per_job:
+            from repro.kernels.gwf_waterfill.ops import hetero_waterfill_op
+
+            def bc(l):
+                # (N,) per-instance leaves broadcast down the job axis;
+                # (k,) shared-per-job leaves broadcast down the instance
+                # axis; (N, k) pass through.
+                l = jnp.asarray(l, c.dtype)
+                if l.ndim == 1 and l.shape[0] == N:
+                    if N == k:
+                        raise ValueError(
+                            "1-D speedup leaf of length N == k is "
+                            "ambiguous (per-instance vs per-job); "
+                            "reshape to (N, 1) or (1, k)")
+                    l = l[:, None]
+                return jnp.broadcast_to(l, (N, k))
+
+            sigma = (sp.sigma if isinstance(sp, StackedSpeedup)
+                     else float(sp.sigma))
+            return hetero_waterfill_op(
+                cm, bc(sp.A), bc(sp.w), bc(sp.gamma), bc(sigma),
+                b_v, iters=iters)
+        from repro.kernels.gwf_waterfill.ops import generic_waterfill_op
         return generic_waterfill_op(
             cm, jnp.broadcast_to(jnp.asarray(sp.A, c.dtype), (N,)),
             jnp.broadcast_to(jnp.asarray(sp.w, c.dtype), (N,)),
@@ -397,26 +480,36 @@ def cap_residual(sp: Speedup, b, c, theta, active=None, tol: float = 1e-6):
 
     budget = jnp.abs(jnp.sum(thm) - b)
 
-    # (9b) ordering among active jobs (c sorted non-increasing)
-    order = jnp.max(jnp.where(active[:-1] & active[1:],
-                              thm[:-1] - thm[1:], -jnp.inf))
-    order = jnp.maximum(order, 0.0)
+    # (9b) ordering among active jobs (c sorted non-increasing).  A
+    # shared-speedup property only: with per-job s_i, a job with a
+    # steeper derivative can take less bandwidth at a larger c, so θ
+    # ordering does not follow from c ordering and the check is skipped.
+    if is_per_job(sp):
+        order = jnp.zeros(())
+    else:
+        order = jnp.max(jnp.where(active[:-1] & active[1:],
+                                  thm[:-1] - thm[1:], -jnp.inf))
+        order = jnp.maximum(order, 0.0)
 
     iu = jnp.arange(k)
     upper = iu[:, None] < iu[None, :]           # pairs i < j only
     ds = sp.ds(thm)
-    ds0 = sp.ds0()
-    # (9c): s'(θ_j)·c_i − s'(θ_i)·c_j = 0 for active pairs with θ_i, θ_j > 0
+    ds0 = jnp.broadcast_to(sp.ds0(), (k,))      # per-job under §7 leaves
+    # (9c): s_j'(θ_j)·c_i − s_i'(θ_i)·c_j = 0 for active pairs with
+    # θ_i, θ_j > 0 (per-job derivatives when sp carries (M,) leaves)
     pos = active & (thm > tol)
     num = ds[None, :] * c[:, None] - ds[:, None] * c[None, :]
     scale = jnp.maximum(ds[None, :] * c[:, None], 1e-30)
     ratio_viol = jnp.where(upper & pos[:, None] & pos[None, :],
                            jnp.abs(num) / scale, 0.0)
-    # (9d): for i < j with θ_j > θ_i = 0: s'(θ_j)/s'(0) ≥ c_j/c_i
+    # (9d): for i < j with θ_j > θ_i = 0: s_j'(θ_j)/s_i'(0) ≥ c_j/c_i —
+    # the parking bound is against the *parked* job's own marginal rate
+    # at zero (λ ≥ s_i'(0)/c_i ⟺ c_i/c_j · s_j'(θ_j) ≥ s_i'(0)); with a
+    # shared speedup s_i'(0) = s_j'(0) and the two readings coincide.
     zero = active & (thm <= tol)
-    ineq = (c[None, :] / c[:, None]) - (ds[None, :] / ds0)
+    ineq = (c[None, :] / c[:, None]) - (ds[None, :] / ds0[:, None])
     ineq_viol = jnp.where(upper & zero[:, None] & pos[None, :]
-                          & jnp.isfinite(ds0),
+                          & jnp.isfinite(ds0)[:, None],
                           jnp.maximum(ineq, 0.0), 0.0)
     return {
         "budget": budget,

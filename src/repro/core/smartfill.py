@@ -62,6 +62,23 @@ transfer is the final schedule read-back in the ``smartfill()`` wrapper.
 (including the original grid + grid-zoom minimizer) as the equivalence
 oracle for tests.
 
+Heterogeneous per-job speedups (paper §7)
+-----------------------------------------
+Every job may carry its own concave s_i via *job-indexed speedup leaves*
+(``core/speedup.py``): the solver core detects per-job leaves statically
+(leaf shape survives tracing) and switches the CAP to the per-job
+λ-bisection (``solve_cap_hetero``) while every diagonal term — F's
+denominator s_{k+1}(μ), the CDR update s'_{k+1}(μ)/s'_k(θ_k), the a₁
+seed — indexes job k's own function through ``take_job`` (the identity
+for shared speedups, so the homogeneous paths are bit-for-bit
+unchanged; constant broadcast leaves are collapsed back to scalars for
+the same reason).  Thm 10 keeps the CDR structure; the completion
+*order* is open — ``smartfill_hetero`` searches it
+(SJF-by-normalized-size + adjacent-exchange descent, with
+``J == J_linear`` as the realized-order certificate) and
+``smartfill_hetero_reference`` brute-forces it on small instances as
+the test oracle.
+
 Precision: run under ``jax.config.update("jax_enable_x64", True)`` for
 reference accuracy.  In float32 the scalar minimizer loses ~1e-3
 relative J on near-linear speedups (power p ≳ 0.9), where F's minimum
@@ -79,14 +96,19 @@ from jax import lax
 
 from .gwf import (solve_cap, solve_cap_generic, waterfill_prepare,
                   waterfill_solve)
-from .speedup import RegularSpeedup, Speedup
+from .speedup import (RegularSpeedup, Speedup, collapse_homogeneous,
+                      is_per_job, rowwise, take_job)
 
 __all__ = [
     "SmartFillSchedule",
+    "HeteroSmartFillSchedule",
     "smartfill",
+    "smartfill_hetero",
     "smartfill_reference",
+    "smartfill_hetero_reference",
     "smartfill_allocations",
     "completion_times",
+    "normalized_order",
     "objective",
 ]
 
@@ -133,6 +155,20 @@ def _is_pure_power(sp: Speedup) -> bool:
     return bool(np.all(w == 0.0) and np.all((-1.0 < g) & (g < 0.0)))
 
 
+def _fast_ok(sp: Speedup, n_instances: int | None = None) -> bool:
+    """True iff the closed-form μ* path is valid for ``sp`` as solved.
+
+    The heSRPT closed form needs **one** exponent p per solved instance:
+    pure power, and no job-indexed leaves.  A leading ``n_instances``
+    axis (per-instance parameters, vmapped away by the batched planners)
+    is fine — each lane then sees its own scalar p; any dimension beyond
+    that is per-job heterogeneity and takes the descent minimizer.
+    """
+    from .speedup import inner_per_job
+
+    return _is_pure_power(sp) and not inner_per_job(sp, n_instances)
+
+
 # Golden-section constants: φ⁻¹ and φ⁻² (= 1 − φ⁻¹).
 _INVPHI = 0.6180339887498949
 _INVPHI2 = 0.3819660112501051
@@ -164,15 +200,19 @@ def _f_grid(sp, mus, c, a, k, W, B):
     """Vectorized F(μ) over a grid. c/a are padded to M; first k entries live.
 
     ``k`` is a traced scalar so one compilation serves every SmartFill
-    iteration (and every run with the same M / grid size).
+    iteration (and every run with the same M / grid size).  With per-job
+    speedup leaves the numerator prices each job under its own s_i and
+    the denominator uses job k's own s_k (``take_job`` is the identity
+    for a shared speedup, so the homogeneous path is unchanged).
     """
     M = c.shape[0]
     active = jnp.arange(M) < k
+    sp_k = take_job(sp, k)
 
     def F(mu):
         th = solve_cap(sp, B - mu, c, active)
         served = jnp.where(active, a * sp.s(th), 0.0)
-        return (W - jnp.sum(served)) / sp.s(mu)
+        return (W - jnp.sum(served)) / sp_k.s(mu)
 
     return jax.vmap(F)(mus)
 
@@ -191,24 +231,39 @@ def _argmin_bracket(mus, vals, n):
     return mus[i], vals[i], lo, hi, jnp.any(finite)
 
 
+def _uses_closed_cap(sp: Speedup) -> bool:
+    """Static: can this iteration's CAP use the prefix-sum closed form?
+
+    Only a *shared* RegularSpeedup has the common auxiliary curve the
+    rectangle-bottle factorization needs; per-job leaves (paper §7) and
+    non-regular speedups solve the CAP by λ-bisection (with warm-bracket
+    carry across SmartFill iterations).  Leaf shape is static, so this
+    decides the trace, not the data.
+    """
+    return isinstance(sp, RegularSpeedup) and not is_per_job(sp)
+
+
 def _make_f(sp, c, a, k, W, B, warm, cap_iters):
     """Build (F, cap) for one SmartFill iteration.
 
     ``F(μ)`` is the single-point objective for the descent loop;
     ``cap(μ)`` returns ``(θ, λ-bracket)`` — the final CAP solve at the
-    chosen μ*.  On the regular path the CAP's water-filling curve is
-    *factorized once* here (``waterfill_prepare`` — the sort and prefix
-    sums depend only on c, not on the budget), and both F and cap
+    chosen μ*.  On the shared-regular path the CAP's water-filling curve
+    is *factorized once* here (``waterfill_prepare`` — the sort and
+    prefix sums depend only on c, not on the budget), and both F and cap
     invert it in O(k), so the per-iteration sort is paid exactly once.
-    On the generic path each F evaluation is a warm-started, adaptively
-    terminated λ-bisection (the warm bracket is this SmartFill
-    iteration's, widened once here) and cap runs the full-precision
-    bisection, returning the bracket to carry forward.
+    On the generic/heterogeneous path each F evaluation is a
+    warm-started, adaptively terminated λ-bisection (the warm bracket is
+    this SmartFill iteration's, widened once here) and cap runs the
+    full-precision bisection, returning the bracket to carry forward.
+    F's denominator is job k's own ``s_k(μ)`` — ``take_job`` is the
+    identity for a shared speedup.
     """
     M = c.shape[0]
     active = jnp.arange(M) < k
+    sp_k = take_job(sp, k)
 
-    if isinstance(sp, RegularSpeedup):
+    if _uses_closed_cap(sp):
         u = jnp.where(active, sp.bottle_width(c), 0.0)
         h0 = sp.bottle_bottom(c)
         prep = waterfill_prepare(u, h0, active)
@@ -216,7 +271,7 @@ def _make_f(sp, c, a, k, W, B, warm, cap_iters):
         def F(mu):
             th = waterfill_solve(prep, u, h0, B - mu, active)
             served = jnp.where(active, a * sp.s(th), 0.0)
-            return (W - jnp.sum(served)) / sp.s(mu)
+            return (W - jnp.sum(served)) / sp_k.s(mu)
 
         def cap(mu):
             return waterfill_solve(prep, u, h0, B - mu, active), warm
@@ -227,7 +282,7 @@ def _make_f(sp, c, a, k, W, B, warm, cap_iters):
             th = solve_cap_generic(sp, B - mu, c, active, iters=cap_iters,
                                    bracket=bracket, rel_tol=_CAP_REL_TOL)
             served = jnp.where(active, a * sp.s(th), 0.0)
-            return (W - jnp.sum(served)) / sp.s(mu)
+            return (W - jnp.sum(served)) / sp_k.s(mu)
 
         def cap(mu):
             return solve_cap_generic(sp, B - mu, c, active, iters=96,
@@ -248,7 +303,12 @@ def _minimize_f(F, B, coarse, descent_iters):
     B = jnp.asarray(B)
     dtype = B.dtype
     lo = _mu_floor(B, dtype)
-    g1 = jnp.geomspace(lo, B, coarse // 2, dtype=dtype)
+    # The log half excludes its B endpoint: both halves ending exactly at
+    # B would leave two coincident top grid points, and an argmin landing
+    # on the second collapses the golden bracket to [B−ulp, B] — hiding
+    # any interior minimum of the bracketing cell (seen on §7
+    # mixed-family F whose minimum sits just under B).
+    g1 = jnp.geomspace(lo, B, coarse // 2 + 1, dtype=dtype)[:-1]
     g2 = jnp.linspace(B / (coarse // 2), B, coarse // 2, dtype=dtype)
     mus = jnp.sort(jnp.concatenate([g1, g2]))
     vals = jax.vmap(F)(mus)
@@ -311,11 +371,12 @@ def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast):
     idx = jnp.arange(M)
     zero = jnp.zeros((), dtype)
     live0 = m > 0
+    closed_cap = _uses_closed_cap(sp)       # static per-job/generic dispatch
     Wc = jnp.cumsum(w)                      # Wc[k] = Σ w[:k+1] (padded w = 0)
 
     c0 = jnp.zeros((M,), dtype).at[0].set(jnp.where(live0, 1.0, 0.0))
     a0 = jnp.zeros((M,), dtype).at[0].set(
-        jnp.where(live0, w[0] / sp.s(B), zero))
+        jnp.where(live0, w[0] / take_job(sp, 0).s(B), zero))
     col0 = jnp.where((idx == 0) & live0, B, zero)
     # generic-path λ-bracket warm start, carried across iterations; the
     # full-range init is rejected by the first solve's validation and
@@ -343,19 +404,23 @@ def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast):
         else:
             mu, _ = _minimize_f(F, B, coarse, descent_iters)
         th_rest, warm2 = cap(mu)                        # (M,) padded
-        if not isinstance(sp, RegularSpeedup):
+        if not closed_cap:
             # only a live iteration may move the carried warm bracket
             warm = (jnp.where(live, warm2[0], warm[0]),
                     jnp.where(live, warm2[1], warm[1]))
-        # (29): a_{k+1} = F(μ*), evaluated on the one CAP solve above
+        # (29): a_{k+1} = F(μ*), evaluated on the one CAP solve above.
+        # Per-job speedups (§7): each job is priced under its own s_i —
+        # the (M,)-leaved sp.s is elementwise in the job axis — and the
+        # new job's denominator/derivative use its own s_k.
         served = jnp.where(active, a * sp.s(th_rest), zero)
-        a_next = (W - jnp.sum(served)) / sp.s(mu)
+        a_next = (W - jnp.sum(served)) / take_job(sp, k).s(mu)
         col = jnp.where(active, th_rest, zero)
         col = jnp.where(idx == k, mu, col)
-        # (28): c_{k+1} = c_k · s'(μ) / s'(θ_k^{k+1}).  θ_k may be parked
-        # (=0) — then s'(0) < ∞ is guaranteed for any parking speedup.
-        ds_prev = sp.ds(th_rest[k - 1])
-        c_next = c[k - 1] * sp.ds(mu) / ds_prev
+        # (28): c_{k+1} = c_k · s_{k}'(μ) / s_{k−1}'(θ_{k−1}^{k+1}) —
+        # job-own derivatives under §7.  θ_{k−1} may be parked (=0);
+        # s_{k−1}'(0) < ∞ is guaranteed for any parking speedup.
+        ds_prev = take_job(sp, k - 1).ds(th_rest[k - 1])
+        c_next = c[k - 1] * take_job(sp, k).ds(mu) / ds_prev
         c = c.at[k].set(jnp.where(live, jnp.maximum(c_next, 1e-300), zero))
         a = a.at[k].set(jnp.where(live, a_next, zero))
         col = jnp.where(live, col, zero)
@@ -378,10 +443,12 @@ def completion_times(sp: Speedup, x, theta, active=None):
     down to phase 0.  With ``active`` (a prefix mask of live jobs),
     padded rows/columns are replaced by the identity so d = T = 0 there —
     this is what lets the solver run on padded batched instances.
+    Per-job speedup leaves apply along *rows* of Θ (row i = job i), via
+    the (M, 1) ``rowwise`` reshape.
     """
     x = jnp.asarray(x)
     M = x.shape[0]
-    rate = sp.s(theta)  # (M, M)
+    rate = (rowwise(sp) if is_per_job(sp) else sp).s(theta)  # (M, M)
     # x = R d with R upper-triangular (R[j, m] = s(Θ[j, m]), m ≥ j); the
     # diagonal is positive because each job runs in its own phase.
     R = jnp.triu(rate)
@@ -423,8 +490,10 @@ def smartfill(
     """Run SmartFill (Algorithm 2) — single jitted device program.
 
     Args:
-      sp: speedup function (RegularSpeedup → closed-form CAP; otherwise
-        the generic bisection path).
+      sp: speedup function (shared RegularSpeedup → closed-form CAP;
+        per-job leaves (§7) or non-regular → the λ-bisection path).  A
+        per-job speedup must be indexed in the *given* job order — use
+        ``smartfill_hetero`` to also search the completion order.
       x: (M,) job sizes, non-increasing.
       w: (M,) weights, non-decreasing.
       B: server bandwidth; defaults to sp.B.
@@ -432,7 +501,7 @@ def smartfill(
       descent_iters: golden-section iterations inside the bracket.
       cap_iters: λ-bisection budget per generic-path F evaluation.
       fast_path: None (default) auto-enables the closed-form μ* path for
-        pure-power speedups; False forces the bracketed-descent
+        shared pure-power speedups; False forces the bracketed-descent
         minimizer (used by equivalence tests).
 
     Returns a SmartFillSchedule.
@@ -444,7 +513,10 @@ def smartfill(
     if validate:
         _validate_instance(x, w)
 
-    fast = _is_pure_power(sp) and fast_path is not False
+    # constant job-indexed leaves describe a homogeneous instance: route
+    # them through the shared fast paths bit-for-bit
+    sp = collapse_homogeneous(sp)
+    fast = _fast_ok(sp) and fast_path is not False
     theta, c, a, d, T, J, J_lin = _solve(
         sp, x, w, B, M, coarse, descent_iters, cap_iters, fast)
     return SmartFillSchedule(
@@ -479,7 +551,9 @@ _f_grid_jit = jax.jit(_f_grid)
 def _minimize_f_ref(sp, c, a, k, W, B, coarse=512, zoom_rounds=4, zoom_pts=64):
     dtype = c.dtype
     lo = _mu_floor(jnp.asarray(B, dtype), dtype)
-    g1 = jnp.geomspace(lo, B, coarse // 2, dtype=dtype)
+    # same de-duplicated top grid point as _minimize_f (a coincident pair
+    # at B collapses the zoom bracket to [B−ulp, B])
+    g1 = jnp.geomspace(lo, B, coarse // 2 + 1, dtype=dtype)[:-1]
     g2 = jnp.linspace(B / (coarse // 2), B, coarse // 2, dtype=dtype)
     mus = jnp.sort(jnp.concatenate([g1, g2]))
     vals = _f_grid_jit(sp, mus, c, a, k, W, B)
@@ -507,7 +581,11 @@ def smartfill_reference(
     """Original host-loop SmartFill (one host sync per zoom round).
 
     Slow but independently simple; used by tests to pin down the
-    device-resident solver and the batched API.
+    device-resident solver and the batched API.  Accepts per-job speedup
+    leaves (§7) in the given job order — the diagonal terms use job k's
+    own s_k/s_k' via ``take_job`` (the identity for a shared speedup),
+    which is what makes this the fixed-order oracle behind
+    ``smartfill_hetero_reference``.
     """
     x = jnp.asarray(x, dtype=jnp.result_type(float))
     w = jnp.asarray(w, dtype=x.dtype)
@@ -517,7 +595,8 @@ def smartfill_reference(
         _validate_instance(x, w)
 
     c = jnp.zeros((M,), x.dtype).at[0].set(1.0)
-    a = jnp.zeros((M,), x.dtype).at[0].set(w[0] / sp.s(jnp.asarray(B, x.dtype)))
+    a = jnp.zeros((M,), x.dtype).at[0].set(
+        w[0] / take_job(sp, 0).s(jnp.asarray(B, x.dtype)))
     theta = jnp.zeros((M, M), x.dtype).at[0, 0].set(B)
 
     for k in range(1, M):
@@ -527,8 +606,8 @@ def smartfill_reference(
         th_rest = solve_cap(sp, B - mu, c, active)  # (M,) padded
         theta = theta.at[:, k].set(jnp.where(active, th_rest, 0.0))
         theta = theta.at[k, k].set(mu)
-        ds_prev = sp.ds(th_rest[k - 1])
-        c_next = c[k - 1] * sp.ds(mu) / ds_prev
+        ds_prev = take_job(sp, k - 1).ds(th_rest[k - 1])
+        c_next = c[k - 1] * take_job(sp, k).ds(mu) / ds_prev
         c = c.at[k].set(jnp.maximum(c_next, 1e-300))
         a = a.at[k].set(a_next)
 
@@ -538,4 +617,207 @@ def smartfill_reference(
     return SmartFillSchedule(
         theta=theta, c=c, a=a, durations=d, T=T,
         J=float(J), J_linear=float(J_lin),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-job speedups (paper §7): SmartFill + completion-order
+# search.  Thm 10 keeps the CDR Rule alive under per-job s_i; the optimal
+# completion *order* is open — we plan with SJF-by-normalized-size and
+# refine with adjacent exchanges, and the host reference oracle can brute
+# force the order on small instances to pin the heuristic down in tests.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HeteroSmartFillSchedule(SmartFillSchedule):
+    """A SmartFillSchedule whose rows are a *searched* completion order.
+
+    ``order[r]`` is the original job index occupying schedule row r
+    (rows follow the SmartFill convention: row 0 completes last, row
+    M−1 first).  theta/c/a/durations/T are all in row order; map back
+    with ``T[np.argsort(order)]`` etc.
+    """
+
+    order: np.ndarray
+
+
+def normalized_order(sp: Speedup, x, w, B: float | None = None) -> np.ndarray:
+    """SJF-by-normalized-size completion order for per-job speedups.
+
+    Jobs are ranked by solo full-server completion time x_i / s_i(B) —
+    descending, ties by weight ascending — so the job that would finish
+    first alone completes first (row M−1).  For a shared speedup this
+    reduces to the paper's size order.  Host-side (concrete inputs).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    w = np.asarray(w, dtype=np.float64)
+    M = x.shape[0]
+    B = float(sp.B if B is None else B)
+    rate = np.broadcast_to(
+        np.asarray(sp.s(jnp.full((M,), B, jnp.result_type(float)))), (M,))
+    t_solo = x / np.maximum(rate, 1e-300)
+    return np.lexsort((w, -t_solo))
+
+
+def _permute_speedup(sp, perm):
+    """Reorder job-indexed leaves; shared (scalar) leaves untouched."""
+    return jax.tree_util.tree_map(
+        lambda l: l[jnp.asarray(perm)] if getattr(l, "ndim", 0) >= 1 else l,
+        sp)
+
+
+def _exchange_descent(run, order, passes):
+    """Adjacent-exchange descent on the completion order.
+
+    ``run(perm) → (result, J)``; a swap is kept iff it improves J beyond
+    a 1e-10 relative margin.  One shared procedure for the device
+    planner and the host reference — the differential suite compares
+    their *searches*, so they must be the same search.
+    """
+    best, best_J = run(order)
+    for _ in range(max(int(passes), 0)):
+        improved = False
+        for i in range(len(order) - 1):
+            cand = order.copy()
+            cand[i], cand[i + 1] = cand[i + 1], cand[i]
+            out, J = run(cand)
+            if np.isfinite(J) and J < best_J * (1.0 - 1e-10):
+                order, best, best_J = cand, out, J
+                improved = True
+        if not improved:
+            break
+    return order, best, best_J
+
+
+def smartfill_hetero(
+    sp: Speedup,
+    x,
+    w,
+    B: float | None = None,
+    coarse: int = 32,
+    descent_iters: int = 40,
+    cap_iters: int = 64,
+    exchange_passes: int = 2,
+    fast_path: bool | None = None,
+) -> HeteroSmartFillSchedule:
+    """SmartFill with per-job speedup functions (paper §7), device-resident.
+
+    Args:
+      sp: per-job speedup — an ``(M,)``-leaved ``RegularSpeedup``, a
+        ``StackedSpeedup`` (mixing σ=±1 families), or a shared speedup
+        (then this reduces to ``smartfill`` on sorted inputs).
+      x, w: (M,) job sizes / weights in **any** order — the completion
+        order is part of the decision here, so unlike ``smartfill`` no
+        pre-sorting is required (or meaningful).
+      exchange_passes: adjacent-exchange refinement rounds over the
+        SJF-by-normalized-size initial order.  Each pass tries all M−1
+        adjacent swaps (one extra ``_solve`` each, same compiled
+        program) and keeps improvements; 0 disables the search and
+        plans the heuristic order directly.  The §7 optimal order is
+        open — the exchange check certifies a local optimum, and
+        ``smartfill_hetero_reference(search="brute")`` pins it globally
+        on small instances.
+
+    Returns a HeteroSmartFillSchedule; ``.order`` maps schedule rows
+    back to the caller's job indices.
+
+    Feasibility: an order the recursion cannot realize shows up as
+    negative raw phase durations, which back-substitution clamps to 0 —
+    inflating J strictly above the value-function claim J_linear =
+    Σ a_i x_i.  The search objective is that executed J, so infeasible
+    orders are naturally dispreferred, and ``J == J_linear`` (to fp) is
+    the certificate that the returned order is realized exactly
+    (Prop. 9 carried into §7); the differential suite pins that the
+    exchange passes repair every heuristic-order infeasibility it
+    samples.
+    """
+    x = jnp.asarray(x, dtype=jnp.result_type(float))
+    w = jnp.asarray(w, dtype=x.dtype)
+    M = int(x.shape[0])
+    B = float(sp.B if B is None else B)
+    for leaf in jax.tree_util.tree_leaves(sp):
+        if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] != M:
+            raise ValueError(
+                f"per-job speedup leaf has {leaf.shape[0]} entries for "
+                f"{M} jobs")
+    sp = collapse_homogeneous(sp)
+    fast = _fast_ok(sp) and fast_path is not False
+
+    def run(perm):
+        xp = x[jnp.asarray(perm)]
+        wp = w[jnp.asarray(perm)]
+        out = _solve(_permute_speedup(sp, perm), xp, wp, B, M,
+                     coarse, descent_iters, cap_iters, fast)
+        return out, float(out[5])
+
+    order, best, _ = _exchange_descent(
+        run, normalized_order(sp, x, w, B), exchange_passes)
+
+    theta, c, a, d, T, J, J_lin = best
+    return HeteroSmartFillSchedule(
+        theta=theta, c=c, a=a, durations=d, T=T,
+        J=float(J), J_linear=float(J_lin), order=np.asarray(order),
+    )
+
+
+def smartfill_hetero_reference(
+    sp: Speedup,
+    x,
+    w,
+    B: float | None = None,
+    search: str = "auto",
+    max_brute: int = 5,
+    coarse: int = 512,
+    zoom_rounds: int = 4,
+    exchange_passes: int = 2,
+) -> HeteroSmartFillSchedule:
+    """Host-loop oracle for heterogeneous SmartFill.
+
+    Runs the (per-job-generalized) original host recursion
+    ``smartfill_reference`` over candidate completion orders and keeps
+    the best J:
+
+      * ``search="brute"`` (or "auto" with M ≤ ``max_brute``) tries
+        **every** permutation — the order ground truth on small
+        instances;
+      * otherwise the same SJF-by-normalized-size + adjacent-exchange
+        descent as the device planner, but driven by the independent
+        host solver.
+
+    The differential tests pin ``smartfill_hetero`` against this on
+    mixed-family instances (tests/core/test_hetero.py).
+    """
+    import itertools
+
+    x = np.asarray(x, dtype=np.float64)
+    w = np.asarray(w, dtype=np.float64)
+    M = x.shape[0]
+    B = float(sp.B if B is None else B)
+    sp = collapse_homogeneous(sp)
+
+    def run(perm):
+        perm = np.asarray(perm)
+        sched = smartfill_reference(
+            _permute_speedup(sp, perm), x[perm], w[perm], B=B,
+            coarse=coarse, zoom_rounds=zoom_rounds, validate=False)
+        return sched, float(sched.J)
+
+    if search not in ("auto", "brute", "exchange"):
+        raise ValueError("search must be 'auto', 'brute' or 'exchange'")
+    brute = search == "brute" or (search == "auto" and M <= max_brute)
+    if brute:
+        best, best_J, order = None, np.inf, None
+        for perm in itertools.permutations(range(M)):
+            sched, J = run(perm)
+            if np.isfinite(J) and J < best_J:
+                best, best_J, order = sched, J, np.asarray(perm)
+    else:
+        order, best, _ = _exchange_descent(
+            run, normalized_order(sp, x, w, B), exchange_passes)
+
+    return HeteroSmartFillSchedule(
+        theta=best.theta, c=best.c, a=best.a, durations=best.durations,
+        T=best.T, J=best.J, J_linear=best.J_linear,
+        order=np.asarray(order),
     )

@@ -1,20 +1,28 @@
 """Seeded random workload ensembles for the scenario engine.
 
 ``sample_workloads`` draws K padded scheduling instances — sizes,
-weights, arrival times and (optionally) per-instance speedup-function
-parameters — the randomized evaluation setup of the paper's §6 and of
-Berg et al. / the multi-class extension (arXiv 2404.00346), shaped for
-``simulate_ensemble`` and ``smartfill_batched``:
+weights, arrival times and (optionally) per-instance or per-job
+speedup-function parameters — the randomized evaluation setup of the
+paper's §6/§7 and of Berg et al. / the multi-class extension (arXiv
+2404.00346), shaped for ``simulate_ensemble`` and ``smartfill_batched``:
 
   * X, W, arrival: (K, M) numpy arrays; real jobs occupy the prefix
     0..m_k−1 of each row (sizes non-increasing), padding is exact zeros;
   * weights follow the prefix sorted non-decreasing, so every instance
-    is *agreeable* and SmartFill's J is the optimum;
-  * ``sp`` is None (caller supplies a shared server model) or a
-    ``RegularSpeedup`` whose leaves are (K,) arrays — one speedup per
-    instance, vmapped alongside the workload by ``simulate_ensemble``
-    and usable directly with ``smartfill_batched`` (σ = +1 families can
-    mix within one batch: power, shifted power, log, negative power).
+    is *agreeable* and SmartFill's J is the optimum (per-job speedups
+    re-rank by normalized size at plan time instead);
+  * ``sp`` is None (caller supplies a shared server model), or one
+    speedup object whose leaves batch by the planner conventions:
+
+      - per-instance (``per_job=False``): leaves are (K,) arrays — one
+        family draw per instance.  σ=+1 draws stay a ``RegularSpeedup``
+        exactly as before; once ``"saturating"`` (σ=−1) joins the mix a
+        ``StackedSpeedup`` carries the per-instance σ leaf.
+      - per-job (``per_job=True``): leaves are (K, M) arrays — every job
+        of every instance draws its own family (paper §7).  Padded job
+        slots m_k..M−1 replicate the last live draw (the fleet layer's
+        edge-replication convention), so padded rows always hold valid
+        family parameters and can never NaN a masked solve.
 
 Everything is driven by one integer seed → ``np.random.default_rng``;
 generation is host-side (it is setup, not the hot loop).
@@ -25,23 +33,23 @@ import dataclasses
 
 import numpy as np
 
-from .speedup import RegularSpeedup
+from .speedup import RegularSpeedup, StackedSpeedup
 
 __all__ = ["WorkloadBatch", "sample_workloads", "FAMILIES"]
 
-FAMILIES = ("power", "shifted", "log", "neg_power")
+FAMILIES = ("power", "shifted", "log", "neg_power", "saturating")
 
 
 @dataclasses.dataclass(frozen=True)
 class WorkloadBatch:
-    """K padded instances + optional per-instance speedup parameters."""
+    """K padded instances + optional per-instance/per-job speedup params."""
 
     X: np.ndarray            # (K, M) sizes, prefix sorted non-increasing
     W: np.ndarray            # (K, M) weights, prefix sorted non-decreasing
     arrival: np.ndarray      # (K, M) release times (0 ⇒ present at start)
     m: np.ndarray            # (K,) live-job counts
     B: float
-    sp: RegularSpeedup | None   # leaves (K,) when family-sampled
+    sp: RegularSpeedup | StackedSpeedup | None  # leaves (K,) or (K, M)
 
     def __len__(self) -> int:
         return int(self.X.shape[0])
@@ -52,25 +60,29 @@ class WorkloadBatch:
         return np.arange(self.X.shape[1])[None, :] < self.m[:, None]
 
 
-def _sample_family_params(rng, K: int, family):
-    """(A, w, gamma) arrays, σ = +1, for K instances of ``family``.
+def _sample_family_params(rng, n: int, family, B: float):
+    """(A, w, gamma, sigma) arrays for ``n`` draws of ``family``.
 
-    ``family`` may be one name or a sequence to mix uniformly.
+    ``family`` may be one name or a sequence to mix uniformly; σ is −1
+    for saturating draws and +1 otherwise.
     """
     fams = (family,) if isinstance(family, str) else tuple(family)
     for f in fams:
         if f not in FAMILIES:
             raise ValueError(f"unknown speedup family {f!r}; use {FAMILIES}")
-    pick = rng.integers(0, len(fams), K)
-    A = np.empty(K)
-    w = np.empty(K)
-    gamma = np.empty(K)
-    a = rng.uniform(0.5, 2.0, K)
-    p01 = rng.uniform(0.3, 0.9, K)          # exponents for 0<p<1 families
-    z = rng.uniform(0.5, 6.0, K)
-    pl = rng.uniform(0.3, 2.0, K)           # log slope
-    pn = rng.uniform(-2.0, -0.5, K)         # negative-power exponents
-    for k in range(K):
+    pick = rng.integers(0, len(fams), n)
+    A = np.empty(n)
+    w = np.empty(n)
+    gamma = np.empty(n)
+    sigma = np.ones(n)
+    a = rng.uniform(0.5, 2.0, n)
+    p01 = rng.uniform(0.3, 0.9, n)          # exponents for 0<p<1 families
+    z = rng.uniform(0.5, 6.0, n)
+    pl = rng.uniform(0.3, 2.0, n)           # log slope
+    pn = rng.uniform(-2.0, -0.5, n)         # negative-power exponents
+    ps = rng.uniform(1.2, 2.5, n)           # saturating exponents (p > 1)
+    zs = rng.uniform(1.2 * B, 3.0 * B, n)   # saturating shifts (z > B)
+    for k in range(n):
         f = fams[pick[k]]
         if f == "power":                    # s = aθ^p
             A[k], w[k], gamma[k] = a[k] * p01[k], 0.0, p01[k] - 1.0
@@ -78,9 +90,19 @@ def _sample_family_params(rng, K: int, family):
             A[k], w[k], gamma[k] = a[k] * p01[k], z[k], p01[k] - 1.0
         elif f == "log":                    # s = a ln(pθ+1)
             A[k], w[k], gamma[k] = a[k], 1.0 / pl[k], -1.0
-        else:                               # neg_power: s = az^p − a(θ+z)^p
+        elif f == "neg_power":              # s = az^p − a(θ+z)^p
             A[k], w[k], gamma[k] = -a[k] * pn[k], z[k], pn[k] - 1.0
-    return A, w, gamma
+        else:                               # saturating: s = az^p − a(z−θ)^p
+            A[k], w[k], gamma[k] = a[k] * ps[k], zs[k], ps[k] - 1.0
+            sigma[k] = -1.0
+    return A, w, gamma, sigma
+
+
+def _family_speedup(A, w, gamma, sigma, B: float):
+    """RegularSpeedup when σ is uniformly +1 (back-compat), else stacked."""
+    if np.all(sigma == 1.0):
+        return RegularSpeedup(A=A, w=w, gamma=gamma, sigma=+1, B=B)
+    return StackedSpeedup(A=A, w=w, gamma=gamma, sigma=sigma, B=B)
 
 
 def sample_workloads(
@@ -90,6 +112,7 @@ def sample_workloads(
     *,
     B: float = 10.0,
     family=None,
+    per_job: bool = False,
     size_range: tuple = (0.5, 20.0),
     weights: str = "slowdown",
     m_range: tuple | None = None,
@@ -101,9 +124,13 @@ def sample_workloads(
       seed, K, M: rng seed, instance count, padded width.
       B: server bandwidth recorded on the batch (and on ``sp``).
       family: None → ``sp`` is None (shared server model supplied by the
-        caller); a name from ``FAMILIES`` or a sequence of names → one
-        σ=+1 ``RegularSpeedup`` with (K,) parameter leaves, mixing
-        families uniformly when several are given.
+        caller); a name from ``FAMILIES`` or a sequence of names → drawn
+        speedup parameters, mixing families uniformly when several are
+        given.  The ``"saturating"`` σ=−1 family may mix with the σ=+1
+        rows — the batch then carries a ``StackedSpeedup``.
+      per_job: False → one draw per instance ((K,) leaves); True → one
+        draw per *job* ((K, M) leaves, paper §7), padded job slots
+        edge-replicating the last live draw.
       size_range: uniform job-size support.
       weights: 'slowdown' → w = 1/x (always agreeable); 'random' →
         independent U(0.1, 5) weights sorted to keep the instance
@@ -140,7 +167,19 @@ def sample_workloads(
             times[0] = 0.0                         # start non-empty
             ARR[k, :mk] = rng.permutation(times)
     sp = None
-    if family is not None:
-        A, w, gamma = _sample_family_params(rng, K, family)
-        sp = RegularSpeedup(A=A, w=w, gamma=gamma, sigma=+1, B=B)
+    if family is not None and not per_job:
+        A, w, gamma, sigma = _sample_family_params(rng, K, family, B)
+        sp = _family_speedup(A, w, gamma, sigma, B)
+    elif family is not None:
+        A, w, gamma, sigma = (np.empty((K, M)) for _ in range(4))
+        for k in range(K):
+            mk = int(m[k])
+            Ak, wk, gk, sk = _sample_family_params(rng, mk, family, B)
+            # edge-replicate the last live draw into padded slots: padded
+            # rows stay valid family parameters (fleet convention)
+            A[k] = np.concatenate([Ak, np.repeat(Ak[-1], M - mk)])
+            w[k] = np.concatenate([wk, np.repeat(wk[-1], M - mk)])
+            gamma[k] = np.concatenate([gk, np.repeat(gk[-1], M - mk)])
+            sigma[k] = np.concatenate([sk, np.repeat(sk[-1], M - mk)])
+        sp = _family_speedup(A, w, gamma, sigma, B)
     return WorkloadBatch(X=X, W=W, arrival=ARR, m=m, B=float(B), sp=sp)

@@ -57,7 +57,8 @@ from repro.core.batch import (BatchedSmartFillSchedule, _prepare,
                               validate_padded_instances)
 from repro.core.simulator import (EnsembleResult, _check_policy_budget,
                                   _sim_core, n_events_for)
-from repro.core.smartfill import _is_pure_power, _solve
+from repro.core.smartfill import _fast_ok, _solve
+from repro.core.speedup import collapse_homogeneous
 
 from .sharding import active_mesh
 
@@ -218,9 +219,14 @@ def _sharded_program(fn, mesh: Mesh):
         _, ys = lax.scan(step, 0, bat_local)
         return ys
 
+    # check_rep=False: the body is collective-free by construction (every
+    # instance is an independent solve), and the replication checker has
+    # no rule for lax.while_loop on this jax line — which the §7
+    # heterogeneous solver's adaptive λ-bisection exit uses.
     return jax.jit(shard_map(body, mesh=mesh,
                              in_specs=(P(None, axis), P()),
-                             out_specs=P(None, axis)))
+                             out_specs=P(None, axis),
+                             check_rep=False))
 
 
 def _run_sharded(mesh: Mesh, fn, batched, shared, N: int,
@@ -315,6 +321,10 @@ def plan_sharded(
     Instance-by-instance the computation is identical to the
     single-device path, so results match ``smartfill_batched`` exactly
     (the differential guarantee tests/distributed/test_fleet.py pins).
+    Heterogeneous fleets shard too: per-job ``(N, M)`` speedup leaves
+    (paper §7) split along their instance axis like any batched leaf,
+    and the edge-replicated padding keeps every padded row a valid
+    family member.
     """
     Xm, Wm, active, m = _prepare(X, W, active)
     N, M = Xm.shape
@@ -323,12 +333,13 @@ def plan_sharded(
     Bv = jnp.broadcast_to(jnp.asarray(B, Xm.dtype), (N,))
     if validate:
         validate_padded_instances(Xm, Wm, m)
+    sp = collapse_homogeneous(sp)
     check_axes_unambiguous(sp, N, M, "sp")
 
     mesh = _resolve_mesh(mesh)
     D = mesh.devices.size
     total, _, _ = _chunk_layout(N, D, chunk_size)
-    fast = _is_pure_power(sp) and fast_path is not False
+    fast = _fast_ok(sp, N) and fast_path is not False
 
     split = _SplitLeaves(sp, N)
     batched = (

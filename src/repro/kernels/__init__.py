@@ -11,5 +11,8 @@ gwf_waterfill   — the paper's GWF hot spot: fixed-iteration vectorized
                   bisection water-filling over VPU-tiled job arrays;
                   plus the fused instance-batched *generic waterfill*
                   (λ-bisection with in-kernel regular-family derivative
-                  inverse) behind a size-aware impl="auto" dispatch
+                  inverse) and its per-job-parameter §7 variant
+                  *hetero waterfill* (job-indexed A/w/γ/σ blocks in
+                  VMEM — mixed-family fleets in one kernel), behind a
+                  size-aware impl="auto" dispatch
 """

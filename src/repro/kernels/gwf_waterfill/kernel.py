@@ -24,6 +24,17 @@ embedded in a serving loop needs when managing thousands of jobs.
     regular speedups at scale: the closed form needs a sort, the
     bisection needs only maps and reductions.
 
+``hetero_waterfill`` (pressure bisection, per-job parameters)
+    The paper-§7 variant: A, w, γ and σ are *job-indexed* (N, K) arrays
+    living in VMEM alongside c, so every job inverts its own regular
+    family — mixed fleets (power + log + saturating in one instance)
+    water-fill in a single fused kernel.  The λ-bracket and the per-job
+    parking threshold s_i'(0) are computed in-kernel from the same
+    blocks (one extra VPU pass), leaving only the budget in SMEM.
+    Inactive lanes are c = 0 with *valid* family params (the fleet
+    layer's edge-replication convention) — every transcendental is
+    additionally guarded, so garbage lanes cannot NaN the reductions.
+
 64 iterations bracket the answer to ~2⁻⁶⁴ of the initial interval —
 beyond f32 resolution.
 """
@@ -177,4 +188,115 @@ def generic_waterfill(c, A, w, gamma, b, *, sigma: int = 1, iters: int = 64,
         out_shape=jax.ShapeDtypeStruct((N, rows, 8, 128), jnp.float32),
         interpret=interpret,
     )(cp, par)
+    return theta.reshape(N, Kp)[:, :K]
+
+
+_F32_BIG = 1e30      # f32-representable stand-in for an infinite s'(0)
+
+
+def _hetero_wf_kernel(c_ref, A_ref, w_ref, g_ref, s_ref, b_ref, theta_ref,
+                      *, iters):
+    c = c_ref[...]                      # (1, rows, 8, 128) — one instance
+    A = A_ref[...]
+    w = w_ref[...]
+    ginv = 1.0 / g_ref[...]             # γ ≠ 0 for every regular family
+    sg = s_ref[...]                     # σ ∈ {±1} per job, as float
+    b = b_ref[0]
+    active = c > 0.0
+
+    def po(base, e):
+        # base^e via exp/log — the VPU has no generic power; base is
+        # clamped positive so inactive/edge lanes stay finite.
+        return jnp.exp(e * jnp.log(jnp.maximum(base, 1e-30)))
+
+    # per-job bracket & parking threshold (mirrors ref.hetero_lam_bracket).
+    # All literals are pinned f32: under jax_enable_x64 a bare python
+    # float would promote the bisection carry to f64 mid-loop.
+    one = jnp.float32(1.0)
+    gam = g_ref[...]
+    ds_b = A * po(w + sg * b, gam)              # s_i'(b)
+    k_act = jnp.maximum(jnp.sum(jnp.where(active, one, 0).astype(c.dtype)),
+                        one)
+    eps = b / (jnp.float32(8.0) * k_act)
+    ds0 = jnp.where(w > 0, A * po(w, gam), jnp.float32(_F32_BIG))
+    ds_top = jnp.where(w > 0, ds0, A * po(w + sg * eps, gam))
+    lam_lo = jnp.min(jnp.where(active, ds_b / c, jnp.inf))
+    lam_hi = (jnp.max(jnp.where(active, ds_top / c, -jnp.inf))
+              * jnp.float32(1.0 + 1e-6))
+    lam_hi = jnp.maximum(lam_hi, lam_lo * jnp.float32(1.0 + 1e-6))
+    good = jnp.isfinite(lam_lo) & (lam_lo > 0) & jnp.isfinite(lam_hi)
+    lam_lo = jnp.where(good, lam_lo, one)
+    lam_hi = jnp.where(good, lam_hi, jnp.float32(2.0))
+
+    def theta_of(lam):
+        y = c * lam
+        base = jnp.where(active, jnp.maximum(y / A, 1e-30), 1.0)
+        th = sg * (po(base, ginv) - w)
+        th = jnp.clip(th, 0.0, b)
+        # park jobs whose own marginal value at zero is below the pressure
+        th = jnp.where(y >= ds0, 0.0, th)
+        return jnp.where(active, th, 0.0)
+
+    def body(i, carry):
+        lo, hi = carry
+        # bisect in log-space for relative precision across wide λ ranges
+        mid = jnp.exp(0.5 * (jnp.log(lo) + jnp.log(hi)))
+        below = jnp.sum(theta_of(mid)) > b       # β > b ⇒ λ* right of mid
+        lo = jnp.where(below, mid, lo)
+        hi = jnp.where(below, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lam_lo, lam_hi))
+    th = theta_of(jnp.exp(0.5 * (jnp.log(lo) + jnp.log(hi))))
+    # exact budget: rescale the fp residual onto the positive allocations
+    tot = jnp.sum(th)
+    th = jnp.where(tot > 0, th * (b / tot), th)
+    theta_ref[...] = jnp.minimum(th, b)
+
+
+def hetero_waterfill(c, A, w, gamma, sigma, b, *, iters: int = 64,
+                     interpret: bool = False):
+    """Fused per-job-parameter waterfill: (N, K) job-indexed families.
+
+    c, A, w, gamma, sigma: (N, K) arrays — job (n, i) inverts its own
+    ``s'(θ) = A (w + σθ)^γ``; b: (N,) budgets.  One grid step per
+    instance; each step runs the whole λ-bisection over six
+    VMEM-resident blocks.  Inactive slots are marked by c = 0 and must
+    carry valid family params (edge-replicated, never zeroed).  Kernel
+    math is float32; padding lanes use σ=+1, A=w=γ=1.
+    """
+    c = jnp.asarray(c)
+    if c.ndim != 2:
+        raise ValueError("c must be (N, K)")
+    N, K = c.shape
+    dt = c.dtype
+    shape = (N, K)
+    A = jnp.broadcast_to(jnp.asarray(A, dt), shape)
+    w = jnp.broadcast_to(jnp.asarray(w, dt), shape)
+    gamma = jnp.broadcast_to(jnp.asarray(gamma, dt), shape)
+    sigma = jnp.broadcast_to(jnp.asarray(sigma, dt), shape)
+    b = jnp.broadcast_to(jnp.asarray(b, dt), (N,))
+
+    Kp = -(-K // _TILE) * _TILE
+    rows = Kp // _TILE
+
+    def block(x, pad):
+        xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, Kp - K)),
+                     constant_values=pad)
+        return xp.reshape(N, rows, 8, 128)
+
+    blocks = [block(c, 0.0), block(A, 1.0), block(w, 1.0),
+              block(gamma, 1.0), block(sigma, 1.0)]
+    spec = pl.BlockSpec((1, rows, 8, 128), lambda n: (n, 0, 0, 0))
+
+    theta = pl.pallas_call(
+        functools.partial(_hetero_wf_kernel, iters=iters),
+        grid=(N,),
+        in_specs=[spec] * 5 + [
+            pl.BlockSpec((1,), lambda n: (n,), memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, rows, 8, 128), lambda n: (n, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, rows, 8, 128), jnp.float32),
+        interpret=interpret,
+    )(*blocks, b.astype(jnp.float32))
     return theta.reshape(N, Kp)[:, :K]

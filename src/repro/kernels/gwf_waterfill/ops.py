@@ -13,16 +13,19 @@ import functools
 
 import jax
 
-from .kernel import generic_waterfill, gwf_waterfill
-from .ref import generic_waterfill_ref, gwf_waterfill_ref
+from .kernel import generic_waterfill, gwf_waterfill, hetero_waterfill
+from .ref import (generic_waterfill_ref, gwf_waterfill_ref,
+                  hetero_waterfill_ref)
 
 __all__ = [
     "PALLAS_MIN_K",
     "use_pallas_for",
     "gwf_waterfill_op",
     "generic_waterfill_op",
+    "hetero_waterfill_op",
     "gwf_waterfill_ref",
     "generic_waterfill_ref",
+    "hetero_waterfill_ref",
 ]
 
 # Smallest per-instance job count at which the Pallas kernels beat the
@@ -59,3 +62,16 @@ def generic_waterfill_op(c, A, w, gamma, b, sigma=1, iters=64, impl="auto"):
                                      iters=iters)
     return generic_waterfill(c, A, w, gamma, b, sigma=sigma, iters=iters,
                              interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "impl"))
+def hetero_waterfill_op(c, A, w, gamma, sigma, b, iters=64, impl="auto"):
+    """Per-job-parameter waterfill (paper §7): (N, K) job-indexed
+    families, σ a ±1 array.  Same ``impl`` contract as the other ops;
+    the auto threshold is on K."""
+    if impl == "auto":
+        impl = "pallas" if use_pallas_for(c.shape[-1]) else "ref"
+    if impl == "ref":
+        return hetero_waterfill_ref(c, A, w, gamma, sigma, b, iters=iters)
+    return hetero_waterfill(c, A, w, gamma, sigma, b, iters=iters,
+                            interpret=(impl == "interpret"))

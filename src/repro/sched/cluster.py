@@ -16,9 +16,16 @@ theory abstracts away:
     at each arrival we re-plan on remaining sizes.  Between arrivals the
     plan is optimal (Prop. 7 allocations depend only on the active set);
     the arrival policy itself is a documented beyond-paper heuristic.
-  * heterogeneous speedups (paper §7) — CDR still holds (Thm 10) but
-    the completion order is open; we ship a weighted-marginal-rate GWF
-    heuristic (equalize wᵢ/xᵢ · sᵢ'(θᵢ) via bisection) as the policy.
+  * heterogeneous speedups (paper §7) — ``Job.speedup`` is honored end
+    to end: per-job functions are stacked into job-indexed speedup
+    leaves (``core.speedup.stack_speedups``), jobs are ranked by
+    normalized size (size / sᵢ(B)) and planned with the heterogeneous
+    SmartFill solver; CDR holds along the trajectory (Thm 10).  A job
+    whose speedup cannot be stacked with the fleet's (e.g. a
+    ``GenericSpeedup``) raises instead of silently falling back to the
+    scheduler-wide function.  The pre-§7 weighted-marginal-rate GWF
+    heuristic (equalize wᵢ/xᵢ · sᵢ'(θᵢ)) survives only as the named
+    baseline ``sched.policies.WeightedMarginalRatePolicy``.
 """
 from __future__ import annotations
 
@@ -27,9 +34,10 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import smartfill, smartfill_batched
+from repro.core import smartfill_batched
 from repro.core.batch import current_allocations_from
-from repro.core.speedup import Speedup
+from repro.core.speedup import (RegularSpeedup, Speedup, stack_speedup_rows,
+                                stack_speedups)
 
 __all__ = ["Job", "ClusterScheduler", "integerize"]
 
@@ -71,25 +79,69 @@ class ClusterScheduler:
         self.min_delta = min_delta
         self.integer_chips = integer_chips
 
-    # ---- planning -------------------------------------------------------
-    def plan(self, jobs: list[Job]):
-        """SmartFill plan for the active set (sorted internally)."""
-        order = sorted(range(len(jobs)),
-                       key=lambda i: (-jobs[i].size, jobs[i].weight))
-        x = np.array([jobs[i].size for i in order])
-        w = np.array([jobs[i].weight for i in order])
-        sched = smartfill(self.sp, x, w, B=self.B, validate=False)
-        return order, sched
+    # ---- per-job speedups (paper §7) ------------------------------------
+    def _job_speedup(self, job: Job) -> Speedup:
+        return self.sp if job.speedup is None else job.speedup
+
+    def _stackable(self, job: Job) -> RegularSpeedup:
+        """This job's speedup as a stackable (scalar RegularSpeedup) leaf.
+
+        Raises a clear error when a per-job function cannot join the
+        fleet's stack — no silent fallback to the scheduler-wide
+        function (the pre-§7 behavior this module used to paper over).
+        """
+        sp = self._job_speedup(job)
+        if not isinstance(sp, RegularSpeedup):
+            src = ("scheduler-wide speedup" if job.speedup is None
+                   else "speedup")
+            raise TypeError(
+                f"job {job.name!r}: {src} {type(sp).__name__} cannot be "
+                "stacked into a heterogeneous fleet — per-job planning "
+                "needs regular-family members (fit one with "
+                "core.hesrpt.fit_power, or give every job the same "
+                "scheduler-wide function)")
+        return sp
 
     @staticmethod
-    def _pack_fleets(fleets: list[list[Job]]):
+    def _is_hetero(fleets: list[list[Job]]) -> bool:
+        return any(j.speedup is not None for fleet in fleets for j in fleet)
+
+    def slot_speedup(self, jobs: list[Job]):
+        """Per-slot stacked speedup aligned with ``jobs`` (or the shared
+        function when no job carries its own)."""
+        if not any(j.speedup is not None for j in jobs):
+            return self.sp
+        return stack_speedups([self._stackable(j) for j in jobs], B=self.B)
+
+    # ---- planning -------------------------------------------------------
+    def plan(self, jobs: list[Job]):
+        """SmartFill plan for the active set (sorted internally).
+
+        Jobs carrying their own ``speedup`` are planned with the
+        heterogeneous solver (ranked by normalized size); a shared fleet
+        keeps the paper's size order.  Returns (order, SmartFillSchedule)
+        with ``order[r]`` the jobs-index occupying schedule row r.
+        """
+        orders, sched = self.plan_fleets([jobs])
+        return orders[0], sched.instance(0)
+
+    def _pack_fleets(self, fleets: list[list[Job]]):
         """Sort + pad fleets into the batched API's prefix-mask layout.
 
         Completed jobs (``done is not None``) are excluded, matching
         ``current_allocations``; ``orders[n]`` holds the original fleet
-        indices of the planned (active) jobs, sorted the SmartFill way.
+        indices of the planned (active) jobs, sorted the SmartFill way —
+        by *normalized* size (size / sᵢ(B), ties by weight) when any job
+        carries its own speedup, plain size order otherwise.  In the
+        heterogeneous case the packed per-job speedup parameters come
+        back as a ``StackedSpeedup`` with (N, M) leaves (padded slots
+        edge-replicate the last live job's parameters, the fleet
+        convention), else None.
         """
+        from repro.core import normalized_order
+
         N = len(fleets)
+        hetero = self._is_hetero(fleets)
         actives = [[i for i, j in enumerate(fleet) if j.done is None]
                    for fleet in fleets]
         M = max((len(a) for a in actives), default=0)
@@ -97,47 +149,73 @@ class ClusterScheduler:
         W = np.zeros((N, M))
         act = np.zeros((N, M), dtype=bool)
         orders = []
+        rows = []                       # per-fleet members in row order
         for n, (fleet, act_idx) in enumerate(zip(fleets, actives)):
-            order = sorted(act_idx,
-                           key=lambda i: (-fleet[i].size, fleet[i].weight))
+            if hetero:
+                # only jobs actually planned consult the scheduler-wide
+                # function as their default — a non-stackable shared
+                # function is fine as long as every job brings its own
+                members = {i: self._stackable(fleet[i]) for i in act_idx}
+                if act_idx:
+                    perm = normalized_order(
+                        stack_speedups([members[i] for i in act_idx],
+                                       B=self.B),
+                        np.array([fleet[i].size for i in act_idx]),
+                        np.array([fleet[i].weight for i in act_idx]),
+                        self.B)
+                    order = [act_idx[p] for p in perm]
+                else:
+                    order = []
+                rows.append([members[i] for i in order])
+            else:
+                order = sorted(act_idx,
+                               key=lambda i: (-fleet[i].size,
+                                              fleet[i].weight))
             orders.append(order)
             for r, oi in enumerate(order):
                 X[n, r] = fleet[oi].size
                 W[n, r] = fleet[oi].weight
                 act[n, r] = True
-        return orders, X, W, act
+        sp_b = stack_speedup_rows(rows, M, self.B) if hetero else None
+        return orders, X, W, act, sp_b
 
-    def _plan_batched(self, X, W, act):
+    def _plan_batched(self, X, W, act, sp=None):
         """One batched SmartFill solve — sharded when a fleet mesh is up.
 
         Inside a 1-D ``with Mesh(...)`` context the instance axis is
         partitioned over the mesh via ``plan_sharded`` (identical
         results, instance-parallel); otherwise the single-device vmap
         path runs.  Multi-axis (model-parallel) mesh contexts are not
-        ours and fall through to the single-device path.
+        ours and fall through to the single-device path.  ``sp``
+        overrides the scheduler-wide function (the heterogeneous packed
+        ``StackedSpeedup`` with (N, M) leaves).
         """
         from repro.distributed.fleet import active_fleet_mesh, plan_sharded
 
+        sp = self.sp if sp is None else sp
         mesh = active_fleet_mesh()
         if mesh is not None:
-            return plan_sharded(self.sp, X, W, B=self.B, active=act,
+            return plan_sharded(sp, X, W, B=self.B, active=act,
                                 mesh=mesh)
-        return smartfill_batched(self.sp, X, W, B=self.B, active=act)
+        return smartfill_batched(sp, X, W, B=self.B, active=act)
 
     def plan_fleets(self, fleets: list[list[Job]]):
         """SmartFill plans for many independent job sets in one device call.
 
         Each fleet is planned against this scheduler's budget B; fleets
         are padded to the widest one (batched API prefix-mask
-        convention).  Returns (orders, BatchedSmartFillSchedule) where
-        orders[n][r] maps schedule row r back to fleets[n]'s job index.
-        Run inside a 1-D mesh context to shard the fleet axis across
-        devices (``repro.distributed.fleet``).
+        convention).  Jobs carrying their own ``speedup`` make the whole
+        batch heterogeneous: per-job parameters ride along as (N, M)
+        speedup leaves and the solver takes the §7 path.  Returns
+        (orders, BatchedSmartFillSchedule) where orders[n][r] maps
+        schedule row r back to fleets[n]'s job index.  Run inside a 1-D
+        mesh context to shard the fleet axis across devices
+        (``repro.distributed.fleet``).
         """
-        orders, X, W, act = self._pack_fleets(fleets)
+        orders, X, W, act, sp_b = self._pack_fleets(fleets)
         if X.shape[1] == 0:
             raise ValueError("plan_fleets: no active jobs in any fleet")
-        return orders, self._plan_batched(X, W, act)
+        return orders, self._plan_batched(X, W, act, sp_b)
 
     def current_allocations_fleets(self, fleets: list[list[Job]]):
         """Instantaneous optimal allocations for many fleets at once.
@@ -147,10 +225,11 @@ class ClusterScheduler:
         list of per-fleet allocation vectors aligned with each fleet's
         own job order (integerized when ``integer_chips`` is set).
         """
-        orders, X, W, act = self._pack_fleets(fleets)
+        orders, X, W, act, sp_b = self._pack_fleets(fleets)
         if X.shape[1] == 0:
             return [np.zeros(len(fleet)) for fleet in fleets]
-        th = np.asarray(current_allocations_from(self._plan_batched(X, W, act)))
+        th = np.asarray(
+            current_allocations_from(self._plan_batched(X, W, act, sp_b)))
         out = []
         for n, (fleet, order) in enumerate(zip(fleets, orders)):
             alloc = np.zeros(len(fleet))
@@ -191,9 +270,14 @@ class ClusterScheduler:
         return self.simulate_host(jobs)
 
     def _simulate_device(self, jobs: list[Job]):
-        """Exact OPT execution on the scenario engine (no cost model)."""
+        """Exact OPT execution on the scenario engine (no cost model).
+
+        Per-job speedups ride in as job-indexed leaves aligned with the
+        job slots; the policy is then the re-planning heterogeneous
+        SmartFill (normalized-size ranking per event).
+        """
         from repro.core import simulate_policy_device
-        from .policies import SmartFillPolicy
+        from .policies import HeteroSmartFillPolicy, SmartFillPolicy
 
         n = len(jobs)
         if n == 0:
@@ -204,9 +288,11 @@ class ClusterScheduler:
         arr = np.array([j.arrival for j in jobs])
         if not (x > 0).any():
             return [], 0.0
+        sp = self.slot_speedup(jobs)
+        policy = (SmartFillPolicy(sp, B=self.B) if sp is self.sp
+                  else HeteroSmartFillPolicy(sp, B=self.B))
         res = simulate_policy_device(
-            self.sp, x, w, SmartFillPolicy(self.sp, B=self.B),
-            B=self.B, arrival=arr)
+            sp, x, w, policy, B=self.B, arrival=arr)
         if not np.isfinite(res.J):      # event budget exhausted — fall back
             return self.simulate_host(jobs)
         live = x > 0
@@ -218,7 +304,12 @@ class ClusterScheduler:
         return res.events, J
 
     def simulate_host(self, jobs: list[Job]):
-        """Host event loop with real-world costs (the pre-engine path)."""
+        """Host event loop with real-world costs (the pre-engine path).
+
+        Rates come from each job's own speedup when set (the per-slot
+        stacked function — ``s`` is elementwise in the job axis).
+        """
+        slot_sp = self.slot_speedup(jobs)
         jobs = [dataclasses.replace(j) for j in jobs]
         t = 0.0
         events = []
@@ -241,7 +332,7 @@ class ClusterScheduler:
             # reallocation penalty: resized jobs lose realloc_cost of service
             penalty = np.where(resized & (theta > 0), self.realloc_cost, 0.0)
             last_alloc = theta
-            rates = np.asarray(self.sp.s(jnp.asarray(theta, jnp.float64)),
+            rates = np.asarray(slot_sp.s(jnp.asarray(theta, jnp.float64)),
                                dtype=np.float64)
             for i, j in enumerate(jobs):
                 j.allocated = theta[i]

@@ -29,6 +29,21 @@ The zoo covers the paper's §6 comparison set:
     constants (default: proportional to weights) each event; the
     ablation showing the value of SmartFill's carried CDR constants.
 
+Heterogeneous fleets (paper §7) add two members:
+
+  * ``HeteroSmartFillPolicy`` — re-planning SmartFill for *per-job*
+    speedup functions: active jobs are re-ranked by normalized remaining
+    size (rem_i / s_i(B)) each event and solved with the job-indexed
+    solver core.  The speedup's job-indexed leaves are aligned with the
+    engine's job slots; (K, M) leaves batch per workload as usual.
+  * ``WeightedMarginalRatePolicy`` — the *retired* pre-§7 heterogeneity
+    heuristic, kept as a named baseline: equalize the weighted marginal
+    rate (w_i/rem_i)·s_i'(θ_i) across active jobs by water-filling with
+    static constants c_i ∝ rem_i/w_i under each job's own s_i.  It has
+    no value-function recursion and no completion-order structure —
+    exactly what hetero SmartFill adds — and the differential suite
+    pins that SmartFill's J beats it on most mixed-family instances.
+
 All policies tolerate padded jobs (``active`` False ⇒ θ = 0) and an
 empty active set (θ ≡ 0), which the engine's halt steps rely on.
 """
@@ -39,17 +54,19 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.gwf import solve_cap
+from repro.core.gwf import solve_cap, solve_cap_hetero
 from repro.core.smartfill import _is_pure_power, _solve
 from repro.core.speedup import Speedup
 
 __all__ = [
     "Policy",
     "SmartFillPolicy",
+    "HeteroSmartFillPolicy",
     "HeSRPTPolicy",
     "EquiPolicy",
     "SRPT1Policy",
     "GWFStaticPolicy",
+    "WeightedMarginalRatePolicy",
     "default_zoo",
 ]
 
@@ -188,14 +205,24 @@ class SmartFillPolicy(Policy):
                    fast=fast)
 
     def __call__(self, rem, w, active):
+        from repro.core.speedup import is_per_job
+
         M = rem.shape[0]
         order = _active_order(rem, w, active)
         xs = jnp.where(active, rem, 0.0)[order]
         ws = jnp.where(active, w, 0.0)[order]
         m = jnp.sum(active)
+        # ``fast`` was resolved at construction, where a 1-D leaf could
+        # be per-workload (K,) — scalar per lane once the ensemble
+        # runner vmaps, fast stays valid — or per-job (M,).  Here, past
+        # any vmap, leaf shape tells them apart statically: job-indexed
+        # leaves invalidate the shared-exponent closed form (use
+        # HeteroSmartFillPolicy for those — this guard just makes the
+        # mistake safe).
+        fast = bool(self.fast) and not is_per_job(self.sp)
         theta, *_ = _solve(self.sp, xs, ws, jnp.asarray(self.B, xs.dtype),
                            m, self.coarse, self.descent_iters,
-                           self.cap_iters, bool(self.fast))
+                           self.cap_iters, fast)
         col = jnp.take(theta, jnp.clip(m - 1, 0, M - 1), axis=1)
         col = jnp.where(jnp.arange(M) < m, col, 0.0)
         out = jnp.zeros_like(rem).at[order].set(col)
@@ -232,6 +259,91 @@ class GWFStaticPolicy(Policy):
             c = self.c
         c = jnp.clip(c, 1e-12, None)
         th = solve_cap(self.sp, jnp.asarray(self.B, rem.dtype), c, active)
+        return jnp.where(active, th, 0.0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class HeteroSmartFillPolicy(Policy):
+    """Re-planning SmartFill for per-job speedup functions (paper §7).
+
+    ``sp`` carries job-indexed leaves aligned with the engine's job
+    slots (slot i ↔ leaf entry i); at every event the active jobs are
+    ranked by *normalized* remaining size rem_i / s_i(B) — descending,
+    ties by weight — the per-job leaves are permuted alongside, and the
+    job-indexed solver core plans the current allocation (column m−1).
+    With a shared (scalar-leaf) speedup this is exactly
+    ``SmartFillPolicy``'s ranking and solve.  The closed-form μ* fast
+    path never applies (per-job exponents), so ``fast`` is pinned False.
+    """
+
+    sp: Speedup
+    B: float
+    coarse: int = 32
+    descent_iters: int = 40
+    cap_iters: int = 64
+    name = "heteroSF"
+
+    def tree_flatten(self):
+        return (self.sp, self.B), (self.coarse, self.descent_iters,
+                                   self.cap_iters)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        coarse, descent_iters, cap_iters = aux
+        return cls(sp=children[0], B=children[1], coarse=coarse,
+                   descent_iters=descent_iters, cap_iters=cap_iters)
+
+    def __call__(self, rem, w, active):
+        M = rem.shape[0]
+        rate = jnp.broadcast_to(
+            self.sp.s(jnp.full((M,), self.B, rem.dtype)), (M,))
+        key = jnp.where(active, -(rem / jnp.maximum(rate, 1e-300)), jnp.inf)
+        order = jnp.lexsort((w, key))
+        xs = jnp.where(active, rem, 0.0)[order]
+        ws = jnp.where(active, w, 0.0)[order]
+        sp_o = jax.tree_util.tree_map(
+            lambda l: l[order] if getattr(l, "ndim", 0) >= 1 else l, self.sp)
+        m = jnp.sum(active)
+        theta, *_ = _solve(sp_o, xs, ws, jnp.asarray(self.B, xs.dtype),
+                           m, self.coarse, self.descent_iters,
+                           self.cap_iters, False)
+        col = jnp.take(theta, jnp.clip(m - 1, 0, M - 1), axis=1)
+        col = jnp.where(jnp.arange(M) < m, col, 0.0)
+        out = jnp.zeros_like(rem).at[order].set(col)
+        return jnp.where(active, out, 0.0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class WeightedMarginalRatePolicy(Policy):
+    """Retired heterogeneity heuristic (named baseline, cf. §7).
+
+    Before the per-job solver existed, ``sched/cluster.py`` documented
+    heterogeneous fleets as "equalize w_i/x_i · s_i'(θ_i) via bisection".
+    That is a GWF with static constants c_i ∝ rem_i/w_i evaluated under
+    each job's own s_i — no carried CDR constants, no μ* recursion, no
+    order search.  Kept as the ablation baseline the hetero SmartFill
+    differential suite must beat.
+    """
+
+    sp: Speedup
+    B: float
+    name = "WMR"
+
+    def tree_flatten(self):
+        return (self.sp, self.B), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(sp=children[0], B=children[1])
+
+    def __call__(self, rem, w, active):
+        c = jnp.where(active, rem / jnp.maximum(w, _TINY), 1.0)
+        c = c / jnp.maximum(jnp.max(jnp.where(active, c, 0.0)), _TINY)
+        c = jnp.clip(c, 1e-12, None)
+        th = solve_cap_hetero(self.sp, jnp.asarray(self.B, rem.dtype), c,
+                              active)
         return jnp.where(active, th, 0.0)
 
 

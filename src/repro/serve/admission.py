@@ -23,6 +23,15 @@ Two marginal-cost estimators (``estimator=``):
     1-D device mesh is active (or passed as ``mesh=``), the candidate
     mixes shard across it via ``simulate_ensemble_sharded`` — deep
     admission queues score instance-parallel over the fleet mesh.
+
+Mixed-model admission (paper §7): running jobs and candidates may each
+carry their *own* regular speedup (``running_speedups`` /
+``cand_speedups`` — e.g. the ten roofline-calibrated shapes of
+``sched/speedup_models.py``).  Mixes are then ranked by normalized size
+(size / sᵢ(B)), the per-job parameters ride along as (C+1, M) stacked
+speedup leaves, and ΔJ comes from the heterogeneous SmartFill solver —
+scoring a llama-1B candidate against a dbrx-132b incumbent under each
+one's own scaling curve.
 """
 from __future__ import annotations
 
@@ -31,7 +40,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import smartfill_batched
-from repro.core.speedup import Speedup
+from repro.core.speedup import RegularSpeedup, Speedup
 
 __all__ = ["AdmissionDecision", "AdmissionController"]
 
@@ -81,50 +90,75 @@ class AdmissionController:
         self.mesh = mesh
 
     def evaluate(self, running_sizes, running_weights,
-                 cand_sizes, cand_weights) -> AdmissionDecision:
+                 cand_sizes, cand_weights,
+                 running_speedups=None,
+                 cand_speedups=None) -> AdmissionDecision:
         """Marginal planning cost of each candidate, one device call.
 
         running_*: (R,) the currently admitted jobs (any order).
         cand_*: (C,) the admission candidates.
+        running_speedups / cand_speedups: optional per-job regular
+          speedups (lists; a None entry means the controller's shared
+          function).  Providing either switches to mixed-model scoring:
+          mixes rank by normalized size and solve on the heterogeneous
+          SmartFill path.
 
-        Every running+candidate mix must be *agreeable*: sorted by size
-        descending, weights are non-decreasing (slowdown weights
-        w = 1/x always are).  Non-agreeable mixes raise ValueError —
-        SmartFill's J would not be the optimum there.
+        In the shared-function mode every running+candidate mix must be
+        *agreeable*: sorted by size descending, weights are
+        non-decreasing (slowdown weights w = 1/x always are).
+        Non-agreeable mixes raise ValueError — SmartFill's J would not
+        be the optimum there.  (Mixed-model mixes rank by normalized
+        size instead; agreeability is a shared-speedup notion.)
         """
         rs = np.asarray(running_sizes, dtype=np.float64)
         rw = np.asarray(running_weights, dtype=np.float64)
         cs = np.asarray(cand_sizes, dtype=np.float64)
         cw = np.asarray(cand_weights, dtype=np.float64)
         R, C = rs.shape[0], cs.shape[0]
+        hetero = running_speedups is not None or cand_speedups is not None
         if C == 0:
+            if hetero and R > 0:
+                # keep the baseline consistent with the J[0] a C > 0
+                # call reports for the identical running set
+                X, W, act, spH = self._hetero_instances(
+                    rs, rw, cs, cw, running_speedups, cand_speedups)
+                sched = smartfill_batched(spH, X, W, B=self.B, active=act)
+                baseline = float(np.asarray(sched.J)[0])
+            else:
+                baseline = self._baseline_J(rs, rw)
             return AdmissionDecision(
                 admit=np.zeros(0, dtype=bool),
                 marginal_cost=np.zeros(0),
-                baseline_J=self._baseline_J(rs, rw))
+                baseline_J=baseline)
 
-        M = R + 1
-        X = np.zeros((C + 1, M))
-        W = np.zeros((C + 1, M))
-        act = np.zeros((C + 1, M), dtype=bool)
-        X[0, :R], W[0, :R] = _sorted_instance(rs, rw)
-        act[0, :R] = True
-        for i in range(C):
-            xs = np.concatenate([rs, cs[i: i + 1]])
-            ws = np.concatenate([rw, cw[i: i + 1]])
-            X[1 + i], W[1 + i] = _sorted_instance(xs, ws)
-            act[1 + i] = True
-
-        # SmartFill's optimality (and hence ΔJ ranking) requires
-        # *agreeable* instances (after the size-descending sort, weights
-        # must be non-decreasing — e.g. slowdown weights w = 1/x).  A
-        # silent solve on a non-agreeable mix would rank candidates by a
-        # J that is not the optimal weighted completion time.
-        self._validate_agreeable(X, W, act)
-        if self.estimator == "simulate":
-            J = self._simulated_J(X, W)
+        if hetero:
+            X, W, act, sp = self._hetero_instances(
+                rs, rw, cs, cw, running_speedups, cand_speedups)
         else:
-            sched = smartfill_batched(self.sp, X, W, B=self.B, active=act)
+            sp = self.sp
+            M = R + 1
+            X = np.zeros((C + 1, M))
+            W = np.zeros((C + 1, M))
+            act = np.zeros((C + 1, M), dtype=bool)
+            X[0, :R], W[0, :R] = _sorted_instance(rs, rw)
+            act[0, :R] = True
+            for i in range(C):
+                xs = np.concatenate([rs, cs[i: i + 1]])
+                ws = np.concatenate([rw, cw[i: i + 1]])
+                X[1 + i], W[1 + i] = _sorted_instance(xs, ws)
+                act[1 + i] = True
+
+            # SmartFill's optimality (and hence ΔJ ranking) requires
+            # *agreeable* instances (after the size-descending sort,
+            # weights must be non-decreasing — e.g. slowdown weights
+            # w = 1/x).  A silent solve on a non-agreeable mix would
+            # rank candidates by a J that is not the optimal weighted
+            # completion time.
+            self._validate_agreeable(X, W, act)
+        if self.estimator == "simulate":
+            J = self._simulated_J(X, W, sp)
+        else:
+            sched = smartfill_batched(sp, X, W, B=self.B, active=act)
             J = np.asarray(sched.J)
         marginal = J[1:] - J[0]
         return AdmissionDecision(
@@ -132,6 +166,67 @@ class AdmissionController:
             marginal_cost=marginal,
             baseline_J=float(J[0]),
         )
+
+    def _hetero_instances(self, rs, rw, cs, cw, run_sps, cand_sps):
+        """Padded mixed-model instances + (C+1, M) stacked speedup leaves.
+
+        Instance 0 = running set; 1+i = running ∪ candidate i.  Each mix
+        is ranked by normalized size under each job's own s (ties by
+        weight); padded slots edge-replicate the last live job's family
+        parameters (``core.speedup.stack_speedup_rows``, the fleet
+        convention), so every padded row stays a valid family member.
+        The controller's shared function only enters as the default of
+        jobs whose list entry is None — an unstackable shared function
+        is fine when every job brings its own.
+        """
+        from repro.core import normalized_order
+        from repro.core.speedup import stack_speedup_rows, stack_speedups
+
+        R, C = rs.shape[0], cs.shape[0]
+        M = R + 1
+
+        def member(sp, what, i):
+            sp = self.sp if sp is None else sp
+            if not isinstance(sp, RegularSpeedup):
+                raise TypeError(
+                    f"{what} {i}: {type(sp).__name__} cannot join a "
+                    "mixed-model admission batch — per-job scoring needs "
+                    "regular-family speedups (fit one with "
+                    "core.hesrpt.fit_power)")
+            return sp
+
+        run_sps = list(run_sps) if run_sps is not None else [None] * R
+        cand_sps = list(cand_sps) if cand_sps is not None else [None] * C
+        if len(run_sps) != R or len(cand_sps) != C:
+            raise ValueError("speedup lists must match the job counts")
+        run_sps = [member(s, "running job", i)
+                   for i, s in enumerate(run_sps)]
+        cand_sps = [member(s, "candidate", i)
+                    for i, s in enumerate(cand_sps)]
+
+        X = np.zeros((C + 1, M))
+        W = np.zeros((C + 1, M))
+        act = np.zeros((C + 1, M), dtype=bool)
+        rows = []
+        for inst in range(C + 1):
+            if inst == 0:
+                xs, ws, sps = rs, rw, run_sps
+            else:
+                i = inst - 1
+                xs = np.concatenate([rs, cs[i: i + 1]])
+                ws = np.concatenate([rw, cw[i: i + 1]])
+                sps = run_sps + [cand_sps[i]]
+            k = xs.shape[0]
+            if k == 0:
+                rows.append([])
+                continue
+            order = normalized_order(
+                stack_speedups(sps, B=self.B), xs, ws, self.B)
+            X[inst, :k] = xs[order]
+            W[inst, :k] = ws[order]
+            act[inst, :k] = True
+            rows.append([sps[oi] for oi in order])
+        return X, W, act, stack_speedup_rows(rows, M, self.B)
 
     @staticmethod
     def _validate_agreeable(X, W, act):
@@ -144,7 +239,7 @@ class AdmissionController:
                 "admission instances must be agreeable (larger size ⇒ "
                 f"smaller-or-equal weight, e.g. w = 1/x): {e}") from e
 
-    def _simulated_J(self, X, W) -> np.ndarray:
+    def _simulated_J(self, X, W, sp=None) -> np.ndarray:
         """Score mixes by *executing* SmartFill on the scenario engine.
 
         One ``simulate_ensemble`` call over the C+1 padded instances —
@@ -153,19 +248,26 @@ class AdmissionController:
         hook for cost models the planner cannot see.  With a fleet mesh
         (``mesh=`` or an active 1-D mesh context) the instances shard
         across devices through ``simulate_ensemble_sharded`` instead.
+        Mixed-model batches (per-job (C+1, M) speedup leaves) execute
+        under the re-planning heterogeneous SmartFill policy.
         """
         from repro.core import simulate_ensemble
+        from repro.core.speedup import inner_per_job
         from repro.distributed.fleet import (active_fleet_mesh,
                                              simulate_ensemble_sharded)
-        from repro.sched.policies import SmartFillPolicy
+        from repro.sched.policies import (HeteroSmartFillPolicy,
+                                          SmartFillPolicy)
 
-        policies = (SmartFillPolicy(self.sp, B=self.B),)
+        sp = self.sp if sp is None else sp
+        pol_cls = (HeteroSmartFillPolicy
+                   if inner_per_job(sp, X.shape[0]) else SmartFillPolicy)
+        policies = (pol_cls(sp, B=self.B),)
         mesh = self.mesh if self.mesh is not None else active_fleet_mesh()
         if mesh is not None:
-            res = simulate_ensemble_sharded(self.sp, policies, X, W,
+            res = simulate_ensemble_sharded(sp, policies, X, W,
                                             B=self.B, mesh=mesh)
         else:
-            res = simulate_ensemble(self.sp, policies, X, W, B=self.B)
+            res = simulate_ensemble(sp, policies, X, W, B=self.B)
         return np.asarray(res.J[0])
 
     def _baseline_J(self, rs, rw) -> float:

@@ -20,25 +20,31 @@ from repro.core import (
     log_speedup,
     neg_power,
     power,
+    saturating,
     shifted_power,
     simulate_policy_device,
+    stack_speedups,
 )
-from repro.sched.policies import SmartFillPolicy
+from repro.sched.policies import HeteroSmartFillPolicy, SmartFillPolicy
 
 B = 10.0
 
 pytestmark = pytest.mark.slow
 
 
-def _trajectory_ratio_spread(sp, x, w, rtol_alloc=1e-7, **pol_kw):
-    """Max relative spread of s'(θ_j)/s'(θ_i) over the trajectory.
+def _trajectory_ratio_spread(sp, x, w, rtol_alloc=1e-7, policy=None,
+                             **pol_kw):
+    """Max relative spread of s_i'(θ_i)/s_j'(θ_j) over the trajectory.
 
     Ratios are collected per ordered job pair across all events where
     both jobs have θ > tol; the CDR rule says each pair's ratio is one
-    constant for the whole trajectory.
+    constant for the whole trajectory.  ``sp.ds`` is elementwise in the
+    job axis, so per-job (§7) speedups evaluate each job under its own
+    derivative.
     """
-    res = simulate_policy_device(sp, x, w,
-                                 SmartFillPolicy(sp, B=B, **pol_kw), B=B)
+    if policy is None:
+        policy = SmartFillPolicy(sp, B=B, **pol_kw)
+    res = simulate_policy_device(sp, x, w, policy, B=B)
     assert np.isfinite(res.J)
     M = len(x)
     tol = rtol_alloc * B
@@ -121,6 +127,69 @@ def test_cdr_constant_over_time_non_regular(m, seed, alpha, beta):
     spread, n_pairs = _trajectory_ratio_spread(
         sp, x, w, coarse=24, descent_iters=28)
     assert spread < 1e-4         # vacuous if this draw co-allocates no pair
+
+
+def _member(fam, a, p, z):
+    if fam == "power":
+        return power(a, p, B)
+    if fam == "shifted":
+        return shifted_power(a, z, p, B)
+    if fam == "log":
+        return log_speedup(a, p, B)
+    if fam == "neg_power":
+        return neg_power(a, z, -1.0 - p, B)
+    return saturating(a, 1.2 * B + z, 1.0 + p, B)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(3, 5),
+    seed=st.integers(0, 2**31 - 1),
+    fams=st.lists(
+        st.sampled_from(["power", "shifted", "log", "neg_power",
+                         "saturating"]),
+        min_size=5, max_size=5),
+    a=st.floats(0.5, 2.0),
+    p=st.floats(0.35, 0.85),
+    z=st.floats(0.5, 6.0),
+)
+def test_cdr_constant_over_time_heterogeneous(m, seed, fams, a, p, z):
+    """Thm 10: the CDR Rule survives per-job s_i — along a heterogeneous
+    trajectory every co-allocated pair keeps one derivative-ratio
+    constant, with each job evaluated under its *own* s_i'."""
+    rng = np.random.default_rng(seed)
+    members = []
+    for i in range(m):
+        ai = a * rng.uniform(0.8, 1.25)
+        pi = min(max(p * rng.uniform(0.8, 1.2), 0.31), 0.9)
+        zi = z * rng.uniform(0.8, 1.25)
+        members.append(_member(fams[i], ai, pi, zi))
+    sp = stack_speedups(members)
+    x, w = _instance(rng, m)
+    spread, n_pairs = _trajectory_ratio_spread(
+        sp, x, w, policy=HeteroSmartFillPolicy(sp, B=B))
+    # mixed parking families may co-allocate no pair twice — vacuous
+    # draws are acceptable here; the deterministic anchor below (and
+    # tests/core/test_hetero.py) guarantee non-vacuity
+    assert spread < 1e-4
+
+
+def test_cdr_hetero_trajectory_not_vacuous():
+    """Deterministic §7 anchor: a mixed power/log/neg-power fleet under
+    slowdown weights co-allocates pairs across events with per-job
+    constant derivative ratios."""
+    sp = stack_speedups([
+        power(1.0, 0.5, B),
+        log_speedup(1.0, 1.0, B),
+        neg_power(1.0, 2.0, -1.0, B),
+        power(1.5, 0.7, B),
+        log_speedup(0.8, 0.5, B),
+    ])
+    x = np.arange(5, 0, -1.0)
+    spread, n_pairs = _trajectory_ratio_spread(
+        sp, x, 1.0 / x, policy=HeteroSmartFillPolicy(sp, B=B))
+    assert n_pairs >= 2
+    assert spread < 1e-5
 
 
 def test_cdr_trajectory_not_vacuous():

@@ -1,0 +1,327 @@
+"""Differential suite for heterogeneous per-job speedups (paper §7).
+
+The contracts this file pins:
+
+  * the device hetero planner (``smartfill_hetero``) matches the host
+    reference oracle (``smartfill_hetero_reference``) on J to ≤1e-6 rel
+    over ≥64 seeded mixed-family instances (all five Table-1 families,
+    σ=±1 mixed within one instance);
+  * a homogeneous ``(M,)``-broadcast speedup takes the shared-function
+    path **bit-for-bit** (collapse_homogeneous routing);
+  * hetero SmartFill's J beats the retired weighted-marginal-rate
+    heuristic on a majority of instances and is never worse beyond
+    tolerance;
+  * the SJF-by-normalized-size + adjacent-exchange order search matches
+    the brute-force permutation oracle on small instances;
+  * the hetero CAP solution satisfies the §7 CDR conditions
+    (``cap_residual`` with per-job derivatives), and the CDR ratio is
+    constant along a simulated heterogeneous trajectory (Thm 10).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    GenericSpeedup,
+    StackedSpeedup,
+    broadcast_speedup,
+    sample_workloads,
+    simulate_ensemble,
+    simulate_policy_device,
+    smartfill,
+    smartfill_batched,
+    smartfill_hetero,
+    smartfill_hetero_batched,
+    smartfill_hetero_reference,
+    solve_cap,
+    stack_speedups,
+)
+from repro.core.gwf import cap_residual
+from repro.core.speedup import (
+    log_speedup,
+    neg_power,
+    power,
+    saturating,
+    shifted_power,
+)
+from repro.sched.policies import (
+    HeteroSmartFillPolicy,
+    SmartFillPolicy,
+    WeightedMarginalRatePolicy,
+)
+
+B = 10.0
+ALL_FAMILIES = ("power", "shifted", "log", "neg_power", "saturating")
+
+
+def _rand_member(rng):
+    f = rng.integers(0, 5)
+    a = rng.uniform(0.5, 2.0)
+    p = rng.uniform(0.3, 0.9)
+    z = rng.uniform(0.5, 6.0)
+    if f == 0:
+        return power(a, p, B)
+    if f == 1:
+        return shifted_power(a, z, p, B)
+    if f == 2:
+        return log_speedup(a, rng.uniform(0.3, 2.0), B)
+    if f == 3:
+        return neg_power(a, z, -rng.uniform(0.5, 2.0), B)
+    return saturating(a, rng.uniform(1.2 * B, 3.0 * B),
+                      rng.uniform(1.2, 2.5), B)
+
+
+def _instance(rng, m):
+    x = np.sort(rng.uniform(0.5, 20.0, m))[::-1].copy()
+    return x, 1.0 / x
+
+
+def _per_instance(sp, k):
+    return jax.tree_util.tree_map(lambda l: jnp.asarray(l)[k], sp)
+
+
+# ---------------------------------------------------------------------------
+# Device planner vs host reference oracle
+# ---------------------------------------------------------------------------
+
+def test_device_matches_host_oracle_64_mixed_instances():
+    """≥64 seeded mixed-family instances: device == host oracle ≤1e-6.
+
+    The device planner refines the completion order (adjacent
+    exchanges); the full-precision host reference recursion then solves
+    the *same* order, so the comparison isolates the §7 solver numerics
+    at a feasible order.  (The order search itself is pinned separately
+    against the brute-force oracle below; heuristic-order feasibility is
+    pinned in the WMR test.)
+    """
+    from repro.core import smartfill_reference
+    from repro.core.smartfill import _permute_speedup
+
+    rng = np.random.default_rng(0)
+    worst = 0.0
+    for _ in range(64):
+        m = int(rng.integers(3, 6))
+        st = stack_speedups([_rand_member(rng) for _ in range(m)])
+        x, w = _instance(rng, m)
+        dev = smartfill_hetero(st, x, w, B=B, exchange_passes=2)
+        # back-substitution clamps infeasible-order durations up, so the
+        # executed J can only sit above the value-function claim
+        assert dev.J >= dev.J_linear * (1 - 1e-9)
+        perm = dev.order
+        ref = smartfill_reference(_permute_speedup(st, perm), x[perm],
+                                  w[perm], B=B, validate=False)
+        rel = abs(dev.J - ref.J) / ref.J
+        worst = max(worst, rel)
+    assert worst < 1e-6, worst
+
+
+def test_exchange_search_matches_brute_force_small():
+    """M=3: heuristic + adjacent exchanges finds the brute-force order."""
+    rng = np.random.default_rng(7)
+    for _ in range(6):
+        st = stack_speedups([_rand_member(rng) for _ in range(3)])
+        x, w = _instance(rng, 3)
+        dev = smartfill_hetero(st, x, w, B=B, exchange_passes=3)
+        ref = smartfill_hetero_reference(st, x, w, B=B, search="brute",
+                                         coarse=256, zoom_rounds=3)
+        assert dev.J <= ref.J * (1 + 1e-6), (dev.J, ref.J)
+
+
+# ---------------------------------------------------------------------------
+# Homogeneous broadcast: bit-for-bit the shared path
+# ---------------------------------------------------------------------------
+
+def test_homogeneous_broadcast_bit_for_bit_single():
+    sp = shifted_power(1.0, 4.0, 0.5, B)
+    x = np.arange(6, 0, -1.0)
+    w = 1.0 / x
+    a = smartfill(sp, x, w, B=B)
+    b = smartfill(broadcast_speedup(sp, 6), x, w, B=B)
+    assert a.J == b.J
+    assert np.array_equal(np.asarray(a.theta), np.asarray(b.theta))
+    assert np.array_equal(np.asarray(a.c), np.asarray(b.c))
+
+
+def test_homogeneous_broadcast_bit_for_bit_pure_power_fast_path():
+    """The broadcast must also recover the closed-form μ* fast path."""
+    sp = power(1.0, 0.5, B)
+    x = np.arange(5, 0, -1.0)
+    w = 1.0 / x
+    a = smartfill(sp, x, w, B=B)
+    b = smartfill(broadcast_speedup(sp, 5), x, w, B=B)
+    assert a.J == b.J
+    assert np.array_equal(np.asarray(a.theta), np.asarray(b.theta))
+
+
+def test_homogeneous_broadcast_bit_for_bit_batched():
+    sp = log_speedup(1.0, 1.0, B)
+    wl = sample_workloads(3, K=8, M=5, B=B)
+    a = smartfill_batched(sp, wl.X, wl.W, B=B)
+    b = smartfill_batched(broadcast_speedup(sp, 5), wl.X, wl.W, B=B)
+    assert np.array_equal(np.asarray(a.J), np.asarray(b.J))
+    assert np.array_equal(np.asarray(a.theta), np.asarray(b.theta))
+
+
+def test_stacked_uniform_collapses_to_shared():
+    member = neg_power(1.0, 1.0, -1.0, B)
+    st = stack_speedups([member] * 4)
+    x = np.arange(4, 0, -1.0)
+    w = 1.0 / x
+    a = smartfill(member, x, w, B=B)
+    b = smartfill(st, x, w, B=B)
+    assert a.J == b.J
+    assert np.array_equal(np.asarray(a.theta), np.asarray(b.theta))
+
+
+# ---------------------------------------------------------------------------
+# Beats the retired weighted-marginal-rate heuristic
+# ---------------------------------------------------------------------------
+
+def test_hetero_smartfill_beats_wmr_on_64_instances():
+    """Planner J ≤ simulated WMR J on every instance, strictly better on
+    a majority (the acceptance contract for retiring the heuristic)."""
+    wl = sample_workloads(3, K=64, M=6, B=B, family=ALL_FAMILIES,
+                          per_job=True)
+    res = simulate_ensemble(wl.sp, (WeightedMarginalRatePolicy(wl.sp, B=B),),
+                            wl.X, wl.W, B=B)
+    assert bool(np.asarray(res.finished).all())
+    wmr = np.asarray(res.J)[0]
+    J = np.empty(64)
+    for k in range(64):
+        h = smartfill_hetero(_per_instance(wl.sp, k), wl.X[k], wl.W[k],
+                             B=B, exchange_passes=2)
+        J[k] = h.J
+        # feasibility certificate: the exchange search lands on an order
+        # whose value-function claim Σ a_i x_i is met exactly (Prop. 9
+        # under §7) — an infeasible order would leave J strictly above
+        assert abs(h.J - h.J_linear) / h.J < 1e-6
+    assert np.all(J <= wmr * (1 + 1e-6)), float(np.max(J / wmr))
+    assert np.mean(J < wmr * (1 - 1e-6)) > 0.5
+
+
+# ---------------------------------------------------------------------------
+# CAP + CDR structure under heterogeneity
+# ---------------------------------------------------------------------------
+
+def test_hetero_cap_satisfies_cdr_conditions():
+    rng = np.random.default_rng(1)
+    st = stack_speedups([_rand_member(rng) for _ in range(5)])
+    for _ in range(20):
+        c = np.sort(rng.uniform(0.05, 1.0, 5))[::-1].copy()
+        b = rng.uniform(0.5, 9.5)
+        th = solve_cap(st, b, jnp.asarray(c))
+        res = {k: float(v)
+               for k, v in cap_residual(st, b, jnp.asarray(c), th).items()}
+        assert res["budget"] < 1e-8 * max(1.0, b)
+        assert res["ratio"] < 1e-9
+        assert res["park"] < 1e-9
+
+
+def test_cdr_constant_along_hetero_trajectory():
+    """Thm 10 anchor: the per-job derivative ratio s_i'(θ_i)/s_j'(θ_j)
+    is one constant across all events where both jobs run."""
+    rng = np.random.default_rng(4)
+    m = 5
+    st = stack_speedups([_rand_member(rng) for _ in range(m)])
+    x, w = _instance(rng, m)
+    res = simulate_policy_device(st, x, w, HeteroSmartFillPolicy(st, B=B),
+                                 B=B)
+    assert np.isfinite(res.J)
+    tol = 1e-7 * B
+    ratios = {}
+    for _, th in res.events:
+        pos = np.flatnonzero(th > tol)
+        if pos.size < 2:
+            continue
+        ds = np.asarray(st.ds(jnp.asarray(th)))
+        for i in pos:
+            for j in pos:
+                if i < j:
+                    ratios.setdefault((i, j), []).append(ds[i] / ds[j])
+    checked = 0
+    for r in ratios.values():
+        if len(r) >= 2:
+            checked += 1
+            r = np.asarray(r)
+            assert (r.max() - r.min()) / r.max() < 1e-4
+    assert checked >= 1          # the property must not be vacuous
+
+
+# ---------------------------------------------------------------------------
+# Batched / plumbing
+# ---------------------------------------------------------------------------
+
+def test_hetero_batched_matches_single():
+    wl = sample_workloads(9, K=12, M=5, B=B, family=ALL_FAMILIES,
+                          per_job=True, m_range=(2, 5))
+    orders, sched = smartfill_hetero_batched(wl.sp, wl.X, wl.W, B=B,
+                                             active=wl.active)
+    for k in range(12):
+        mk = int(wl.m[k])
+        spk = _per_instance(wl.sp, k)
+        single = smartfill_hetero(
+            jax.tree_util.tree_map(lambda l: l[:mk], spk),
+            wl.X[k, :mk], wl.W[k, :mk], B=B, exchange_passes=0)
+        assert np.array_equal(orders[k][:mk], single.order)
+        rel = abs(float(sched.J[k]) - single.J) / max(single.J, 1e-12)
+        assert rel < 1e-6, (k, rel)
+    # padded slots stay exact zeros
+    th = np.asarray(sched.theta)
+    for k in range(12):
+        mk = int(wl.m[k])
+        assert np.all(th[k, mk:, :] == 0.0) and np.all(th[k, :, mk:] == 0.0)
+
+
+def test_hetero_policy_reduces_to_smartfill_policy_for_shared_sp():
+    sp = log_speedup(1.0, 1.0, B)
+    x = np.arange(5, 0, -1.0)
+    w = 1.0 / x
+    a = simulate_policy_device(sp, x, w, SmartFillPolicy(sp, B=B), B=B)
+    b = simulate_policy_device(sp, x, w, HeteroSmartFillPolicy(sp, B=B), B=B)
+    np.testing.assert_allclose(np.asarray(a.T), np.asarray(b.T), rtol=1e-9)
+    np.testing.assert_allclose(a.J, b.J, rtol=1e-9)
+
+
+def test_stack_speedups_rejects_generic_and_per_job():
+    gen = GenericSpeedup(s_fn=jnp.log1p, ds_fn=lambda t: 1.0 / (1.0 + t),
+                         B=B)
+    with pytest.raises(TypeError, match="cannot be stacked"):
+        stack_speedups([power(1.0, 0.5, B), gen])
+    with pytest.raises(ValueError, match="already job-indexed"):
+        stack_speedups([broadcast_speedup(power(1.0, 0.5, B), 3)])
+
+
+def test_workload_sampler_per_job_padding_is_valid():
+    """Padded job slots edge-replicate the last live draw (never zeros),
+    σ mixes ±1, and the draw is seed-reproducible."""
+    wl = sample_workloads(5, K=16, M=6, B=B, family=ALL_FAMILIES,
+                          per_job=True, m_range=(2, 5))
+    assert isinstance(wl.sp, StackedSpeedup)
+    A = np.asarray(wl.sp.A)
+    sg = np.asarray(wl.sp.sigma)
+    assert A.shape == (16, 6)
+    assert set(np.unique(sg)) <= {-1.0, 1.0}
+    assert np.any(sg == -1.0)           # saturating actually sampled
+    for k in range(16):
+        mk = int(wl.m[k])
+        for r in range(mk, 6):          # padding replicates last live job
+            assert A[k, r] == A[k, mk - 1]
+            assert sg[k, r] == sg[k, mk - 1]
+    wl2 = sample_workloads(5, K=16, M=6, B=B, family=ALL_FAMILIES,
+                           per_job=True, m_range=(2, 5))
+    assert np.array_equal(np.asarray(wl2.sp.gamma), np.asarray(wl.sp.gamma))
+    assert np.array_equal(wl2.X, wl.X)
+
+
+def test_saturating_per_instance_batch_is_stacked():
+    """σ=−1 in a per-instance mix forces the stacked representation;
+    σ=+1-only mixes keep the RegularSpeedup back-compat contract."""
+    wl = sample_workloads(6, K=8, M=4, B=B, family=ALL_FAMILIES)
+    assert isinstance(wl.sp, StackedSpeedup)
+    assert np.asarray(wl.sp.A).shape == (8,)
+    wl2 = sample_workloads(6, K=8, M=4, B=B,
+                           family=("power", "shifted", "log", "neg_power"))
+    from repro.core import RegularSpeedup
+    assert isinstance(wl2.sp, RegularSpeedup)

@@ -224,3 +224,35 @@ def test_admission_simulate_estimator_sharded():
     np.testing.assert_allclose(sh.marginal_cost, ref.marginal_cost,
                                rtol=1e-6, atol=1e-6)
     np.testing.assert_array_equal(sh.admit, ref.admit)
+
+
+def test_plan_parity_hetero_per_job_speedups():
+    """§7 fleets shard: per-job (N, M) speedup leaves split along the
+    instance axis, padded rows edge-replicate valid family params, and
+    the sharded result equals the single-device heterogeneous solve."""
+    X, W, wl = _workloads(
+        11, family=("power", "shifted", "log", "neg_power", "saturating"),
+        per_job=True)
+    ref = smartfill_batched(wl.sp, X, W, B=B)
+    sh = plan_sharded(wl.sp, X, W, B=B, mesh=fleet_mesh(), chunk_size=8)
+    _assert_plan_parity(ref, sh, jnp.float64)
+
+
+def test_ensemble_parity_hetero_policies():
+    """HeteroSmartFillPolicy + the retired WMR baseline shard with their
+    (K, M) per-job leaves through the ensemble runner."""
+    from repro.sched.policies import (HeteroSmartFillPolicy,
+                                      WeightedMarginalRatePolicy)
+
+    X, W, wl = _workloads(12, k=9, m=4,
+                          family=("power", "log", "saturating"),
+                          per_job=True)
+    pols = (HeteroSmartFillPolicy(wl.sp, B=B),
+            WeightedMarginalRatePolicy(wl.sp, B=B))
+    ref = simulate_ensemble(wl.sp, pols, X, W, B=B)
+    sh = simulate_ensemble_sharded(wl.sp, pols, X, W, B=B,
+                                   mesh=fleet_mesh())
+    np.testing.assert_allclose(np.asarray(sh.J), np.asarray(ref.J),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sh.finished),
+                                  np.asarray(ref.finished))

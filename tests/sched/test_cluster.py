@@ -162,3 +162,82 @@ def test_roofline_speedup_is_concave_and_regular():
     s64 = float(sp.s(jnp.float64(64.0)))
     s128 = float(sp.s(jnp.float64(128.0)))
     assert s64 < s128 < 2 * s64
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-job speedups (paper §7): Job.speedup is honored
+# ---------------------------------------------------------------------------
+
+def _hetero_jobs():
+    from repro.core import log_speedup as _log, saturating as _sat
+    x = np.array([800.0, 500.0, 200.0])
+    return [
+        Job(name="log", size=x[0], weight=1 / x[0],
+            speedup=_log(1.0, 1.0, B)),
+        Job(name="sat", size=x[1], weight=1 / x[1],
+            speedup=_sat(1.0, 1.5 * B, 2.0, B)),
+        Job(name="default", size=x[2], weight=1 / x[2]),
+    ]
+
+
+def test_job_speedup_is_honored_not_dropped():
+    """A fleet with per-job speedups must plan differently from the same
+    sizes under the scheduler-wide function alone — the pre-§7 code
+    silently ignored Job.speedup."""
+    sp = neg_power(1.0, 4.0, -1.0, B)
+    cs = ClusterScheduler(sp, B)
+    het = cs.current_allocations(_hetero_jobs())
+    shared = cs.current_allocations(
+        [Job(name=j.name, size=j.size, weight=j.weight)
+         for j in _hetero_jobs()])
+    assert abs(het.sum() - B) < 1e-6 and abs(shared.sum() - B) < 1e-6
+    assert not np.allclose(het, shared)
+
+
+def test_hetero_plan_matches_hetero_solver():
+    from repro.core import smartfill_hetero, stack_speedups
+
+    sp = neg_power(1.0, 4.0, -1.0, B)
+    cs = ClusterScheduler(sp, B)
+    jobs = _hetero_jobs()
+    order, sched = cs.plan(jobs)
+    st = stack_speedups([j.speedup if j.speedup is not None else sp
+                         for j in jobs], B=B)
+    x = np.array([j.size for j in jobs])
+    w = np.array([j.weight for j in jobs])
+    ref = smartfill_hetero(st, x, w, B=B, exchange_passes=0)
+    assert np.array_equal(np.asarray(order), ref.order)
+    assert abs(sched.J - ref.J) / ref.J < 1e-6
+
+
+def test_hetero_simulation_runs_both_paths():
+    sp = neg_power(1.0, 4.0, -1.0, B)
+    jobs = _hetero_jobs()
+    _, J_dev = ClusterScheduler(sp, B).simulate(
+        [Job(**vars(j)) for j in jobs])
+    _, J_host = ClusterScheduler(sp, B).simulate_host(
+        [Job(**vars(j)) for j in jobs])
+    assert np.isfinite(J_dev) and np.isfinite(J_host)
+    assert abs(J_dev - J_host) / J_host < 1e-5
+
+
+def test_unstackable_job_speedup_raises_not_falls_back():
+    import jax.numpy as jnp
+    from repro.core import GenericSpeedup
+
+    sp = neg_power(1.0, 4.0, -1.0, B)
+    cs = ClusterScheduler(sp, B)
+    gen = GenericSpeedup(s_fn=jnp.log1p, ds_fn=lambda t: 1.0 / (1.0 + t),
+                         B=B)
+    jobs = [Job(name="g", size=100.0, weight=0.01, speedup=gen),
+            Job(name="ok", size=50.0, weight=0.02)]
+    with pytest.raises(TypeError, match="cannot be stacked"):
+        cs.plan(jobs)
+    # ...and a generic *scheduler-wide* function cannot back a hetero
+    # fleet either (it would have to stack as the default)
+    cs_gen = ClusterScheduler(gen, B)
+    jobs2 = [Job(name="a", size=100.0, weight=0.01,
+                 speedup=neg_power(1.0, 4.0, -1.0, B)),
+             Job(name="b", size=50.0, weight=0.02)]
+    with pytest.raises(TypeError, match="scheduler-wide"):
+        cs_gen.plan(jobs2)

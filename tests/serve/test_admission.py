@@ -103,3 +103,69 @@ def test_empty_edge_cases(sp):
     dec = ac.evaluate(np.array([]), np.array([]), cands, 1.0 / cands)
     J_solo = smartfill(sp, cands, 1.0 / cands, B=B, validate=False).J
     assert abs(dec.marginal_cost[0] - J_solo) < 1e-6 * J_solo
+
+
+# ---------------------------------------------------------------------------
+# Mixed-model admission (paper §7)
+# ---------------------------------------------------------------------------
+
+def test_mixed_model_scoring_defaults_match_shared(sp):
+    """All-None speedup lists must reproduce the shared-function scores
+    (the hetero path with every job on the controller's function)."""
+    running = np.array([8.0, 5.0, 2.0])
+    cands = np.array([4.0, 1.0])
+    ac = AdmissionController(sp, B)
+    a = ac.evaluate(running, 1.0 / running, cands, 1.0 / cands)
+    b = ac.evaluate(running, 1.0 / running, cands, 1.0 / cands,
+                    running_speedups=[None] * 3,
+                    cand_speedups=[None] * 2)
+    np.testing.assert_allclose(b.marginal_cost, a.marginal_cost, rtol=1e-6)
+    assert abs(b.baseline_J - a.baseline_J) / a.baseline_J < 1e-6
+
+
+def test_mixed_model_scoring_discriminates_speedups(sp):
+    """Two candidates with identical size/weight but different scaling
+    curves must get different marginal costs — and the better-scaling
+    one must be cheaper."""
+    from repro.core import neg_power, power
+
+    running = np.array([8.0, 5.0])
+    cands = np.array([4.0, 4.0])
+    ac = AdmissionController(sp, B)
+    dec = ac.evaluate(
+        running, 1.0 / running, cands, 1.0 / cands,
+        running_speedups=None,
+        # candidate 0 scales ~√θ; candidate 1 saturates hard (θ/(θ+1))
+        cand_speedups=[power(1.0, 0.5, B), neg_power(1.0, 1.0, -1.0, B)])
+    assert np.isfinite(dec.marginal_cost).all()
+    assert dec.marginal_cost[0] != dec.marginal_cost[1]
+    assert dec.marginal_cost[0] < dec.marginal_cost[1]
+
+
+def test_mixed_model_simulated_estimator_agrees(sp):
+    from repro.core import neg_power, power
+
+    running = np.array([8.0, 5.0])
+    cands = np.array([4.0, 1.0])
+    kw = dict(running_speedups=[power(1.0, 0.6, B), None],
+              cand_speedups=[neg_power(1.0, 2.0, -1.0, B), None])
+    plan = AdmissionController(sp, B).evaluate(
+        running, 1.0 / running, cands, 1.0 / cands, **kw)
+    sim = AdmissionController(sp, B, estimator="simulate").evaluate(
+        running, 1.0 / running, cands, 1.0 / cands, **kw)
+    np.testing.assert_allclose(sim.marginal_cost, plan.marginal_cost,
+                               rtol=1e-4, atol=1e-7)
+
+
+def test_mixed_model_rejects_unstackable(sp):
+    import jax.numpy as jnp
+    from repro.core import GenericSpeedup
+
+    running = np.array([8.0])
+    cands = np.array([4.0])
+    gen = GenericSpeedup(s_fn=jnp.log1p, ds_fn=lambda t: 1.0 / (1.0 + t),
+                         B=B)
+    with pytest.raises(TypeError, match="mixed-model"):
+        AdmissionController(sp, B).evaluate(
+            running, np.array([1.0]), cands, np.array([0.5]),
+            cand_speedups=[gen])
