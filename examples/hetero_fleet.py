@@ -48,7 +48,11 @@ x = rng.uniform(2, 15, M) * 1e9                   # tokens of work remaining
 # w = 1/x — weights non-decreasing along the *normalized*-size order.
 # (Weights decoupled from the normalized sizes can make the instance
 # non-agreeable in normalized terms, where the adjacent-exchange order
-# search can stall at an unrealized order — see ROADMAP open items.)
+# search can stall at an unrealized order; pass exchange_window=2 to
+# smartfill_hetero to score all distance-≤2 swaps per step — the
+# batched scorer prices them in one vmapped solve, and
+# tests/core/test_hetero_fast.py pins an instance where the wider
+# window recovers ~16% J.  Beyond-window moves: see ROADMAP open items.)
 w = np.array([float(m.s(B_CHIPS)) for m in members]) / x
 
 print(f"{M} jobs on one {int(B_CHIPS)}-chip pod — per-job roofline speedups")

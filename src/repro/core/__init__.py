@@ -18,10 +18,17 @@ from .speedup import (  # noqa: F401
     take_job,
 )
 from .gwf import (  # noqa: F401
+    HeteroPrep,
+    hetero_approx,
+    hetero_breakpoints_init,
+    hetero_breakpoints_insert,
+    hetero_prepare,
+    hetero_solve,
     solve_cap,
     solve_cap_batched,
     solve_cap_generic,
     solve_cap_hetero,
+    solve_cap_hetero_sorted,
     solve_cap_regular,
     solve_cap_regular_reference,
 )

@@ -65,6 +65,8 @@ All functions are pure and dtype-polymorphic; run under
 """
 from __future__ import annotations
 
+import typing
+
 import jax
 import jax.numpy as jnp
 
@@ -76,10 +78,17 @@ __all__ = [
     "solve_cap_regular_reference",
     "solve_cap_generic",
     "solve_cap_hetero",
+    "solve_cap_hetero_sorted",
     "solve_cap_batched",
     "waterfill_prepare",
     "waterfill_solve",
     "waterfill_level",
+    "HeteroPrep",
+    "hetero_prepare",
+    "hetero_breakpoints_init",
+    "hetero_breakpoints_insert",
+    "hetero_solve",
+    "hetero_approx",
     "cap_residual",
 ]
 
@@ -352,6 +361,451 @@ def solve_cap_hetero(sp: Speedup, b, c, active=None, iters: int = 96,
     return solve_cap_generic(sp, b, c, active, iters=iters, **kwargs)
 
 
+class HeteroPrep(typing.NamedTuple):
+    """Budget-independent factorization of the per-job CAP (paper §7).
+
+    For regular-family jobs the uncapped per-job allocation curve is
+    closed form in the water pressure λ:
+
+        θ̃_i(λ) = max(P_i λ^{E_i} − Q_i, 0),
+        P_i = σ_i (c_i/A_i)^{E_i},  E_i = 1/γ_i,  Q_i = σ_i w_i,
+
+    and each job switches off exactly at its *activation breakpoint*
+    λ_act_i = s_i'(0)/c_i (∞ for the pure-power w = 0 family — the job
+    never parks).  ``pos`` holds the breakpoints sorted descending and
+    ``vals`` the uncapped fill curve β̃(λ) = Σ θ̃_i(λ) evaluated at
+    them (ascending, since β̃ is decreasing): one ``searchsorted``
+    then brackets λ* inside a single segment, replacing the blind
+    λ-bisection's full-range probes.  The per-budget cap at b is inert
+    at the crossing (Σθ̃ = b with θ̃ ≥ 0 forces every θ̃_i ≤ b —
+    the same argument as ``waterfill_prepare``), so β̃ and the capped
+    β share the root.
+
+    ``P``/``E``/``Q``/``act`` are in job order; ``A``/``w``/``gamma``/
+    ``sigma``/``c`` are kept for the budget-dependent safe bracket.
+    """
+
+    P: jnp.ndarray
+    E: jnp.ndarray
+    Q: jnp.ndarray
+    A: jnp.ndarray
+    w: jnp.ndarray
+    gamma: jnp.ndarray
+    sigma: jnp.ndarray
+    c: jnp.ndarray
+    act: jnp.ndarray
+    pos: jnp.ndarray
+    vals: jnp.ndarray
+
+
+def _hetero_leaves(sp: Speedup, c):
+    """Broadcast the regular-family leaves (A, w, γ, σ) to (M,)."""
+    if not isinstance(sp, (RegularSpeedup, StackedSpeedup)):
+        raise ValueError(
+            "sorted-bracket hetero CAP needs a (possibly per-job) "
+            "regular-family speedup (RegularSpeedup or StackedSpeedup)")
+    shape = c.shape
+    dt = c.dtype
+    A = jnp.broadcast_to(jnp.asarray(sp.A, dt), shape)
+    w = jnp.broadcast_to(jnp.asarray(sp.w, dt), shape)
+    gamma = jnp.broadcast_to(jnp.asarray(sp.gamma, dt), shape)
+    sigma = jnp.broadcast_to(jnp.asarray(sp.sigma, dt), shape)
+    return A, w, gamma, sigma
+
+
+def _hetero_coeffs(A, w, gamma, sigma, c, act):
+    """(P, E, Q) of the uncapped curve plus λ_act per job (0 inactive)."""
+    c_safe = jnp.where(act, c, 1.0)
+    E = 1.0 / gamma
+    P = sigma * (c_safe / A) ** E
+    Q = sigma * w
+    ds0 = jnp.where(w > 0, A * jnp.maximum(w, 1e-300) ** gamma, jnp.inf)
+    lam_act = jnp.where(act, ds0 / c_safe, 0.0)
+    return P, E, Q, lam_act
+
+
+def _beta_tilde(P, E, Q, act, lam):
+    """Uncapped fill curve β̃(λ) = Σ_act max(P λ^E − Q, 0)."""
+    term = P * lam ** E - Q
+    return jnp.sum(jnp.where(act, jnp.maximum(term, 0.0), 0.0))
+
+
+def hetero_breakpoints_init(M: int, dtype=jnp.float64):
+    """Empty per-job breakpoint store: λ = 0, β̃-value = +∞ sentinels.
+
+    Slot i belongs to job i (unsorted); ``hetero_breakpoints_insert``
+    activates one job at a time in O(M), which is what lets SmartFill's
+    scan maintain the exact sorted-breakpoint curve across iterations
+    instead of re-evaluating the O(M²) breakpoint matrix per iteration
+    (the c-constants of already-active jobs never change — only one new
+    c_k arrives per iteration).
+    """
+    dtype = jnp.zeros((), dtype).dtype
+    return (jnp.zeros((M,), dtype), jnp.full((M,), jnp.inf, dtype))
+
+
+def hetero_breakpoints_insert(sp: Speedup, c, k, bp_lam, bp_val, live=True):
+    """Activate job ``k`` (with its ratio constant ``c[k]``) in O(M).
+
+    Adds job k's uncapped term max(P_k λ^{E_k} − Q_k, 0) to the stored
+    β̃ value of every existing breakpoint (one shared exponent — a
+    single vectorized power) and evaluates the *current* curve once at
+    job k's own breakpoint λ_act_k (mixed exponents, one O(M) pass).
+    ``live=False`` is a masked no-op so the call can sit inside a
+    ``lax.scan`` step that also serves padded iterations.
+    """
+    c = jnp.asarray(c)
+    M = c.shape[0]
+    idx = jnp.arange(M)
+    prev = idx < k                      # jobs already in the store
+    A, w, gamma, sigma = _hetero_leaves(sp, c)
+    P, E, Q, lam_act = _hetero_coeffs(A, w, gamma, sigma, c, prev)
+
+    c_k = jnp.maximum(c[k], 1e-300)
+    E_k, A_k, w_k, s_k = E[k], A[k], w[k], sigma[k]
+    P_k = s_k * (c_k / A_k) ** E_k
+    Q_k = s_k * w_k
+    ds0_k = jnp.where(w_k > 0, A_k * jnp.maximum(w_k, 1e-300) ** gamma[k],
+                      jnp.inf)
+    lam_k = ds0_k / c_k
+
+    g = jnp.maximum(P_k * bp_lam ** E_k - Q_k, 0.0)
+    val_k = _beta_tilde(P, E, Q, prev, lam_k)
+    bp_lam2 = jnp.where(idx == k, lam_k, bp_lam)
+    bp_val2 = jnp.where(idx == k, val_k, bp_val + g)
+    live = jnp.asarray(live, bool)
+    return (jnp.where(live, bp_lam2, bp_lam),
+            jnp.where(live, bp_val2, bp_val))
+
+
+def hetero_prepare(sp: Speedup, c, active=None, breakpoints=None):
+    """Factorize the per-job CAP: sort the activation breakpoints once.
+
+    Mirrors ``waterfill_prepare``: everything budget-independent — the
+    term coefficients (P, E, Q), the breakpoints λ_act_i and the
+    uncapped curve values β̃(λ_act_j) — is computed here, so
+    ``hetero_solve`` prices any number of budgets against ONE sort.
+    Without ``breakpoints`` the curve values are evaluated directly
+    (an O(M²) vmapped pass — fine one-shot); SmartFill's scan passes
+    the incrementally maintained ``(bp_lam, bp_val)`` store instead,
+    keeping the per-iteration cost O(M log M).
+    """
+    c = jnp.asarray(c)
+    M = c.shape[0]
+    if active is None:
+        active = jnp.ones((M,), dtype=bool)
+    A, w, gamma, sigma = _hetero_leaves(sp, c)
+    P, E, Q, lam_act = _hetero_coeffs(A, w, gamma, sigma, c, active)
+    if breakpoints is None:
+        bp_lam = lam_act
+        bp_val = jnp.where(
+            active,
+            jax.vmap(lambda lam: _beta_tilde(P, E, Q, active, lam))(lam_act),
+            jnp.inf)
+    else:
+        bp_lam, bp_val = breakpoints
+    order = jnp.argsort(-bp_lam)
+    return HeteroPrep(P=P, E=E, Q=Q, A=A, w=w, gamma=gamma, sigma=sigma,
+                      c=c, act=active, pos=bp_lam[order],
+                      vals=bp_val[order])
+
+
+def hetero_solve(prep: HeteroPrep, b, iters: int = 48, lam_hint=None,
+                 return_lam: bool = False, rtol: float = 1e-13,
+                 unroll: int = 0):
+    """Invert the prepared per-job fill curve at budget ``b``.
+
+    ``searchsorted`` on the prepared curve values brackets λ* inside one
+    breakpoint segment; the bracket is intersected with the safe bounds
+    of ``solve_cap_generic`` (λ_lo = min_i s_i'(b)/c_i, λ_hi =
+    max_i s_i'(0⁺)/c_i) and both ends are *validated* with a β̃
+    evaluation — fp noise in the sorted values can cost two extra curve
+    evaluations but never a wrong segment.  A safeguarded Newton
+    iteration in t = log λ (the analytic dβ̃/dt = Σ P_i E_i λ^{E_i} is
+    one fused pass) then converges quadratically from a secant estimate
+    — or from ``lam_hint``, the warm start carried across SmartFill
+    iterations and order-exchange candidates — exiting early once the
+    step is below a few ULP.  A step that leaves the bracket falls back
+    to *false position* through the carried bracket-end values (not
+    midpoint bisection: at b → 0 the root sits within an ulp of the
+    activation kink where every job is parked and dβ̃/dt = 0, and false
+    position lands beside the kink in one step where bisection would
+    need ~50 halvings — the b ≈ 0 probes of SmartFill's μ-grid hit this
+    every iteration).  Typical cost: 4–8 O(M) passes against the blind
+    bisection's ~50.
+
+    ``lam_hint``: optional λ* guess; values ≤ 0 / outside the validated
+    bracket are ignored (0 is the "no hint" sentinel).
+
+    ``rtol``: relative budget-residual exit |β̃(λ) − b| ≤ rtol·b.  The
+    default resolves θ to fp noise; SmartFill's coarse μ-localization
+    grid passes a loose 1e-6 (cell placement only) to halve the Newton
+    iterations of those throwaway probes.
+
+    ``unroll`` > 0 replaces the while_loop with that many *unrolled*
+    safeguarded steps (no early exit, no loop-carried launch overhead).
+    Meant for warm-hinted descent probes, where 4 steps reach fp
+    precision from a neighbouring λ* and the fixed cost of a while_loop
+    launch would dominate the arithmetic; cold calls should keep the
+    adaptive loop.
+    """
+    P, E, Q, act = prep.P, prep.E, prep.Q, prep.act
+    c = prep.c
+    dt = c.dtype
+    M = c.shape[0]
+    b = jnp.asarray(b, dt)
+    b_safe = jnp.maximum(b, jnp.asarray(1e-300, dt))
+
+    # safe bracket — identical bounds to solve_cap_generic
+    c_safe = jnp.where(act, c, 1.0)
+    ds_b = prep.A * jnp.maximum(prep.w + prep.sigma * b_safe,
+                                1e-300) ** prep.gamma
+    eps = b_safe / (8.0 * M)
+    ds0 = jnp.where(prep.w > 0,
+                    prep.A * jnp.maximum(prep.w, 1e-300) ** prep.gamma,
+                    jnp.inf)
+    ds_top = jnp.where(prep.w > 0, ds0, prep.A * eps ** prep.gamma)
+    lam_lo_s = jnp.min(jnp.where(act, ds_b / c_safe, jnp.inf))
+    lam_hi_s = jnp.max(jnp.where(act, ds_top / c_safe, -jnp.inf)) * (1 + 1e-9)
+    good = (jnp.isfinite(lam_lo_s) & (lam_lo_s > 0) & jnp.isfinite(lam_hi_s)
+            & (lam_hi_s > 0))
+    lam_lo_s = jnp.where(good, lam_lo_s, 1.0)
+    lam_hi_s = jnp.where(good, lam_hi_s, 2.0)
+    lam_hi_s = jnp.maximum(lam_hi_s, lam_lo_s * (1 + 1e-9))
+
+    # segment bracket: vals[idx−1] ≤ b ≤ vals[idx] ⇒ λ* ∈ [pos[idx],
+    # pos[idx−1]] (pos descending, β̃ decreasing)
+    idx = jnp.clip(jnp.searchsorted(prep.vals, b_safe, side="left"), 1, M - 1)
+    lo = jnp.maximum(prep.pos[idx], lam_lo_s)
+    hi = jnp.minimum(prep.pos[idx - 1], lam_hi_s)
+    bad = ~(hi > lo)
+    lo = jnp.where(bad, lam_lo_s, lo)
+    hi = jnp.where(bad, lam_hi_s, hi)
+    if unroll > 0:
+        # lean probe: trust the stored segment-endpoint values for the
+        # false-position residuals instead of re-evaluating β̃ at the
+        # (possibly clamped) ends — four full curve passes saved.  When
+        # the segment was degenerate (``bad``) the residuals are marked
+        # non-finite, which disables the false-position branch and falls
+        # back to the log-midpoint; the Newton steps never read them.
+        okf = (~bad & jnp.isfinite(prep.vals[idx])
+               & jnp.isfinite(prep.vals[idx - 1]))
+        flo = jnp.where(okf, prep.vals[idx] - b_safe, jnp.inf)
+        fhi = jnp.where(okf, prep.vals[idx - 1] - b_safe, -jnp.inf)
+        hi = jnp.maximum(hi, lo * (1 + 1e-12))
+    else:
+        beta_lo_c = _beta_tilde(P, E, Q, act, lo)
+        beta_hi_c = _beta_tilde(P, E, Q, act, hi)
+        lo = jnp.where(beta_lo_c >= b_safe, lo, lam_lo_s)
+        hi = jnp.where(beta_hi_c <= b_safe, hi, lam_hi_s)
+        hi = jnp.maximum(hi, lo * (1 + 1e-12))
+        # bracket-end residuals at the *final* ends — the false-position
+        # fallback inside the loop steers by them, so they must belong to
+        # the ends actually used (the candidate evaluations above are
+        # stale whenever validation replaced an end with the safe bound)
+        flo = _beta_tilde(P, E, Q, act, lo) - b_safe
+        fhi = _beta_tilde(P, E, Q, act, hi) - b_safe
+
+    tlo = jnp.log(lo)
+    thi = jnp.log(hi)
+    # init: secant in (t, log β̃) — on any fixed active set β̃ is a sum
+    # of pure powers of λ, so log β̃ is near-linear in t = log λ and the
+    # log-secant is exact for a one-family segment; fall back to the
+    # plain secant (then the log-midpoint) when an end has β̃ = 0
+    blo_v = flo + b_safe
+    bhi_v = fhi + b_safe
+    lg_b = jnp.log(b_safe)
+    den_l = jnp.log(jnp.maximum(blo_v, 1e-300)) - jnp.log(
+        jnp.maximum(bhi_v, 1e-300))
+    frac_l = (jnp.log(jnp.maximum(blo_v, 1e-300)) - lg_b) / jnp.where(
+        den_l > 0, den_l, 1.0)
+    den0 = flo - fhi
+    frac = jnp.where((bhi_v > 0) & (den_l > 0), frac_l,
+                     jnp.where(den0 > 0,
+                               flo / jnp.where(den0 > 0, den0, 1.0), 0.5))
+    t_sec = tlo + frac * (thi - tlo)
+    t0 = jnp.where(jnp.isfinite(t_sec),
+                   jnp.clip(t_sec, tlo, thi), 0.5 * (tlo + thi))
+    if lam_hint is not None:
+        lam_hint = jnp.asarray(lam_hint, dt)
+        use = jnp.isfinite(lam_hint) & (lam_hint > lo) & (lam_hint < hi)
+        t0 = jnp.where(use, jnp.log(jnp.maximum(lam_hint, 1e-300)), t0)
+
+    tol = 4.0 * jnp.asarray(jnp.finfo(dt).eps, dt)
+    # residual exit: |β̃(λ) − b| ≤ rtol·b means the budget is met to
+    # rounding (the final exact rescale absorbs the residue).  This must
+    # gate the *step*, not just the loop: a converged iterate sits within
+    # an ulp of a bracket end, where the strict in-bracket tests reject
+    # every proposal and the midpoint fallback would fling the iterate
+    # back to the middle of the stale bracket (observed: 4 Newton steps
+    # to the root, then ~45 re-bisection steps).
+    rtol = jnp.asarray(rtol, dt) * b_safe
+
+    def cond(st):
+        return (st[0] < iters) & (st[7] > tol)
+
+    def body(st):
+        i, t, tlo, thi, flo, fhi, side, _ = st
+        u = P * jnp.exp(E * t)
+        th = u - Q
+        on = act & (th > 0)
+        beta = jnp.sum(jnp.where(on, th, 0.0))
+        phi = beta - b_safe
+        dphi = jnp.sum(jnp.where(on, u * E, 0.0))     # dβ̃/dt < 0
+        done = jnp.abs(phi) <= rtol
+        up = phi > 0                                   # λ* above t
+        tlo2 = jnp.where(up, t, tlo)
+        flo2 = jnp.where(up, phi, flo)
+        thi2 = jnp.where(up, thi, t)
+        fhi2 = jnp.where(up, fhi, phi)
+        # Illinois anti-stagnation: when the same end moves twice
+        # running, halve the stale opposite end's residual so the false
+        # position stops hugging it (β̃ spans orders of magnitude across
+        # a wide segment, which otherwise pins the secant to one end)
+        fhi2 = jnp.where(up & (side < 0), 0.5 * fhi2, fhi2)
+        flo2 = jnp.where((~up) & (side > 0), 0.5 * flo2, flo2)
+        side2 = jnp.where(up, -1, 1)
+        # Newton on log β̃(t): β̃ is a sum of pure powers of λ on the
+        # current active set, so log β̃ is near-linear in t and this
+        # step is exact for a one-family segment — plain Newton on β̃
+        # stalls in the flat tail where |φ/φ'| overshoots the bracket
+        tn = t - jnp.log(jnp.maximum(beta, 1e-300) / b_safe) * beta / dphi
+        den = flo2 - fhi2
+        tf = tlo2 + (flo2 / jnp.where(den > 0, den, 1.0)) * (thi2 - tlo2)
+        use_n = (beta > 0) & jnp.isfinite(tn) & (tn > tlo2) & (tn < thi2)
+        use_f = (den > 0) & jnp.isfinite(tf) & (tf > tlo2) & (tf < thi2)
+        t2 = jnp.where(use_n, tn,
+                       jnp.where(use_f, tf, 0.5 * (tlo2 + thi2)))
+        t2 = jnp.where(done, t, t2)
+        step = jnp.where(done, jnp.zeros((), dt), jnp.abs(t2 - t))
+        return i + 1, t2, tlo2, thi2, flo2, fhi2, side2, step
+
+    # a non-positive budget has the trivial answer θ = 0 (applied after
+    # the loop); start pre-converged instead of bisecting |φ| = b down
+    # to the width tolerance
+    st0 = (0, t0, tlo, thi, flo, fhi, 0,
+           jnp.where(b > 0, jnp.asarray(jnp.inf, dt),
+                     jnp.asarray(0.0, dt)))
+    if unroll > 0:
+        st = st0
+        for _ in range(unroll):
+            st = body(st)
+        t = st[1]
+    else:
+        _, t, _, _, _, _, _, _ = jax.lax.while_loop(cond, body, st0)
+
+    lam = jnp.exp(t)
+    theta = jnp.clip(jnp.where(act, P * jnp.exp(E * t) - Q, 0.0),
+                     0.0, b_safe)
+    tot = jnp.sum(theta)
+    theta = jnp.where(tot > 0, theta * (b_safe / tot), theta)
+    theta = jnp.minimum(theta, b_safe)
+    theta = jnp.where(b > 0, theta, jnp.zeros_like(theta))
+    if return_lam:
+        return theta, lam
+    return theta
+
+
+def hetero_approx(prep: HeteroPrep, b):
+    """One fused pass of the prepared fill curve — no Newton iteration.
+
+    ``searchsorted`` picks the breakpoint segment and a log-secant
+    through the *stored* segment-endpoint values places λ̂ — exact when
+    the segment's active set is a single regular family, a few percent
+    otherwise.  The clipped allocation at λ̂ is rescaled to meet the
+    budget exactly, so the result is always feasible (Σθ̂ = b).
+
+    ``b`` may be a scalar or a (G,) vector of budgets — the vector form
+    prices a whole localization grid in two fused (G, M) passes, with
+    the safe λ bounds computed once at the largest budget (valid, if
+    slightly wide, for every smaller one: every s_i' is monotone in its
+    argument, so shrinking b can only move the true bounds inward).
+
+    This is the localization probe of SmartFill's μ* minimizer: the
+    coarse grid only needs to place the bracketing cell, and pricing a
+    grid budget here costs one O(M) pass against the full solve's ~5
+    validated Newton passes.  Never use it where the CAP itself is the
+    answer — the parabolic descent and the final ``hetero_solve`` run
+    at full precision.
+    """
+    P, E, Q, act = prep.P, prep.E, prep.Q, prep.act
+    c = prep.c
+    dt = c.dtype
+    M = c.shape[0]
+    b = jnp.asarray(b, dt)
+    scalar = b.ndim == 0
+    bv = jnp.atleast_1d(b)
+    b_safe = jnp.maximum(bv, jnp.asarray(1e-300, dt))          # (G,)
+
+    # safe λ bounds (same construction as hetero_solve), shared across
+    # the batch by monotonicity: every s_i' is monotone in its argument,
+    # so the low bound evaluated at the *largest* budget and the high
+    # bound at the *smallest* enclose every lane's λ*(b) — two O(M)
+    # passes for the whole batch instead of per-lane (G, M) pow passes.
+    # (A single shared budget would not do: λ*(b) → ∞ as b → 0 for
+    # power families, and a high bound taken at max(b) cuts those
+    # small-b lanes off.)
+    b_hi_ref = jnp.max(b_safe)
+    b_lo_ref = jnp.min(b_safe)
+    c_safe = jnp.where(act, c, 1.0)
+    ds_b = prep.A * jnp.maximum(prep.w + prep.sigma * b_hi_ref,
+                                1e-300) ** prep.gamma
+    eps = b_lo_ref / (8.0 * M)
+    ds0 = jnp.where(prep.w > 0,
+                    prep.A * jnp.maximum(prep.w, 1e-300) ** prep.gamma,
+                    jnp.inf)
+    ds_top = jnp.where(prep.w > 0, ds0, prep.A * eps ** prep.gamma)
+    lam_lo_s = jnp.min(jnp.where(act, ds_b / c_safe, jnp.inf))
+    lam_hi_s = jnp.max(jnp.where(act, ds_top / c_safe, -jnp.inf)) * (1 + 1e-9)
+    good = (jnp.isfinite(lam_lo_s) & (lam_lo_s > 0) & jnp.isfinite(lam_hi_s)
+            & (lam_hi_s > 0))
+    lam_lo_s = jnp.where(good, lam_lo_s, 1.0)
+    lam_hi_s = jnp.where(good, lam_hi_s, 2.0)
+    lam_hi_s = jnp.maximum(lam_hi_s, lam_lo_s * (1 + 1e-9))
+
+    idx = jnp.clip(jnp.searchsorted(prep.vals, b_safe, side="left"),
+                   1, M - 1)                                   # (G,)
+    lo = jnp.clip(prep.pos[idx], lam_lo_s, lam_hi_s)
+    hi = jnp.clip(prep.pos[idx - 1], lam_lo_s, lam_hi_s)
+    hi = jnp.maximum(hi, lo * (1 + 1e-12))
+    vlo = prep.vals[idx]          # β̃ at the segment's low-λ end (≥ b)
+    vhi = prep.vals[idx - 1]      # β̃ at the high-λ end (≤ b)
+    ok = (jnp.isfinite(vlo) & jnp.isfinite(vhi) & (vlo > 0) & (vhi > 0)
+          & (vlo > vhi))
+    num = jnp.log(jnp.maximum(vlo, 1e-300)) - jnp.log(b_safe)
+    den = jnp.log(jnp.maximum(vlo, 1e-300)) - jnp.log(
+        jnp.maximum(vhi, 1e-300))
+    frac = jnp.where(ok, num / jnp.where(den > 0, den, 1.0), 0.5)
+    t = jnp.log(lo) + jnp.clip(frac, 0.0, 1.0) * (jnp.log(hi) - jnp.log(lo))
+
+    theta = jnp.clip(
+        jnp.where(act[None, :],
+                  P[None, :] * jnp.exp(E[None, :] * t[:, None]) - Q[None, :],
+                  0.0),
+        0.0, b_safe[:, None])                                  # (G, M)
+    tot = jnp.sum(theta, axis=-1, keepdims=True)
+    theta = jnp.where(tot > 0, theta * (b_safe[:, None] / tot), theta)
+    theta = jnp.minimum(theta, b_safe[:, None])
+    theta = jnp.where(bv[:, None] > 0, theta, jnp.zeros_like(theta))
+    return theta[0] if scalar else theta
+
+
+def solve_cap_hetero_sorted(sp: Speedup, b, c, active=None, iters: int = 48,
+                            return_lam: bool = False):
+    """One-shot sorted-bracket per-job CAP (prepare + solve).
+
+    The fast §7 path for regular-family per-job speedups; differential-
+    tested against the ``solve_cap_hetero`` λ-bisection oracle to
+    ≤ 1e-10 (f64).  Non-regular speedups must keep using
+    ``solve_cap_hetero``/``solve_cap_generic``.
+    """
+    c = jnp.asarray(c)
+    if active is None:
+        active = jnp.ones(c.shape, dtype=bool)
+    prep = hetero_prepare(sp, c, active)
+    return hetero_solve(prep, b, iters=iters, return_lam=return_lam)
+
+
 def solve_cap(sp: Speedup, b, c, active=None, iters: int = 96):
     """Dispatch: closed form for a shared RegularSpeedup; λ-bisection for
     per-job (heterogeneous) or non-regular speedups.
@@ -382,11 +836,13 @@ def solve_cap_batched(sp: Speedup, b, c, active=None, iters: int = 64,
       * per-job regular-family speedups (job-indexed RegularSpeedup
         leaves or a StackedSpeedup) on TPU at kernel size → the fused
         *hetero waterfill* kernel (per-job parameter blocks in VMEM);
-        elsewhere → ``vmap`` of the per-job λ-bisection;
+        elsewhere → ``vmap`` of the sorted-bracket solver
+        (``solve_cap_hetero_sorted``);
       * any other speedup → ``vmap`` of the λ-bisection.
 
-    ``impl`` ∈ {"auto", "closed", "bisect", "pallas"} forces a path
-    ("pallas" resolves to the hetero kernel when ``sp`` is per-job).
+    ``impl`` ∈ {"auto", "closed", "sorted", "bisect", "pallas"} forces a
+    path ("pallas" resolves to the hetero kernel when ``sp`` is per-job;
+    "bisect" remains the per-job differential oracle).
     Scalar speedup parameters are shared across instances; leaves with a
     leading N dimension are vmapped per instance; ``(N, k)`` leaves are
     per-instance *and* per-job.
@@ -414,8 +870,12 @@ def solve_cap_batched(sp: Speedup, b, c, active=None, iters: int = 64,
             impl = "pallas"
         elif regular and use_pallas_for(k):
             impl = "pallas"
+        elif regular:
+            impl = "closed"
+        elif stackable and per_job:
+            impl = "sorted"
         else:
-            impl = "closed" if regular else "bisect"
+            impl = "bisect"
     if impl == "pallas":
         if not stackable:
             raise ValueError("impl='pallas' needs a (possibly per-job) "
@@ -457,6 +917,13 @@ def solve_cap_batched(sp: Speedup, b, c, active=None, iters: int = 64,
             raise ValueError("impl='closed' needs a RegularSpeedup")
         return jax.vmap(solve_cap_regular, in_axes=(sp_axes, 0, 0, 0))(
             sp, b_v, c, active)
+    if impl == "sorted":
+        if not stackable:
+            raise ValueError("impl='sorted' needs a (possibly per-job) "
+                             "regular-family speedup")
+        return jax.vmap(
+            lambda spv, bv, cv, av: solve_cap_hetero_sorted(spv, bv, cv, av),
+            in_axes=(sp_axes, 0, 0, 0))(sp, b_v, c, active)
     if impl != "bisect":
         raise ValueError(f"unknown impl {impl!r}")
     return jax.vmap(

@@ -94,10 +94,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from .gwf import (solve_cap, solve_cap_generic, waterfill_prepare,
+from .gwf import (hetero_approx, hetero_breakpoints_init,
+                  hetero_breakpoints_insert, hetero_prepare, hetero_solve,
+                  solve_cap, solve_cap_generic, waterfill_prepare,
                   waterfill_solve)
-from .speedup import (RegularSpeedup, Speedup, collapse_homogeneous,
-                      is_per_job, rowwise, take_job)
+from .speedup import (RegularSpeedup, Speedup, StackedSpeedup,
+                      collapse_homogeneous, is_per_job, rowwise, take_job)
 
 __all__ = [
     "SmartFillSchedule",
@@ -180,6 +182,11 @@ _INVPHI2 = 0.3819660112501051
 _WARM_WIDEN = 256.0
 # Adaptive λ-bisection exit: stop once hi ≤ lo·(1 + rel_tol).
 _CAP_REL_TOL = 1e-13
+# Below this many jobs the μ-localization grid is priced with exact
+# (λ-threaded) CAP solves instead of the one-pass approximation: few
+# jobs means few β̃ breakpoints, and across a wide segment the
+# log-secant's bias can misplace the grid argmin by several cells.
+_APPROX_GRID_MIN_M = 33
 
 
 def _mu_floor(B, dtype):
@@ -243,25 +250,51 @@ def _uses_closed_cap(sp: Speedup) -> bool:
     return isinstance(sp, RegularSpeedup) and not is_per_job(sp)
 
 
-def _make_f(sp, c, a, k, W, B, warm, cap_iters):
-    """Build (F, cap) for one SmartFill iteration.
+def _uses_sorted_cap(sp: Speedup) -> bool:
+    """Static: can the per-job CAP use the sorted-breakpoint solver?
+
+    Any stackable regular family — a job-indexed ``RegularSpeedup`` or a
+    ``StackedSpeedup`` mix — has closed-form activation breakpoints
+    ``s_i'(0⁺)/c_i``, so λ* can be bracketed by ``searchsorted`` on the
+    sorted breakpoint curve and polished with safeguarded Newton instead
+    of blind bisection (``hetero_prepare``/``hetero_solve``).  Per-job
+    ``GenericSpeedup`` leaves stay on the λ-bisection path.
+    """
+    return isinstance(sp, (RegularSpeedup, StackedSpeedup)) and is_per_job(sp)
+
+
+def _make_f(sp, c, a, k, W, B, warm, cap_iters, bp=None, lam_hint=None,
+            precise=True):
+    """Build (F, cap, chain) for one SmartFill iteration.
+
+    ``chain`` is ``None`` except on the sorted per-job path, where it is
+    the pair ``(F_grid, F_chain)`` consumed by ``_minimize_f_hinted``:
+    a loose-tolerance probe for the localization grid and a λ-threading
+    probe for the golden-section descent (there ``cap`` also accepts the
+    descent's final λ* as a second argument).
 
     ``F(μ)`` is the single-point objective for the descent loop;
-    ``cap(μ)`` returns ``(θ, λ-bracket)`` — the final CAP solve at the
-    chosen μ*.  On the shared-regular path the CAP's water-filling curve
-    is *factorized once* here (``waterfill_prepare`` — the sort and
-    prefix sums depend only on c, not on the budget), and both F and cap
-    invert it in O(k), so the per-iteration sort is paid exactly once.
-    On the generic/heterogeneous path each F evaluation is a
-    warm-started, adaptively terminated λ-bisection (the warm bracket is
-    this SmartFill iteration's, widened once here) and cap runs the
-    full-precision bisection, returning the bracket to carry forward.
-    F's denominator is job k's own ``s_k(μ)`` — ``take_job`` is the
-    identity for a shared speedup.
+    ``cap(μ)`` returns ``(θ, λ-bracket, λ*)`` — the final CAP solve at
+    the chosen μ*.  On the shared-regular path the CAP's water-filling
+    curve is *factorized once* here (``waterfill_prepare`` — the sort
+    and prefix sums depend only on c, not on the budget), and both F and
+    cap invert it in O(k), so the per-iteration sort is paid exactly
+    once.  On the per-job regular path (§7) the same factorization runs
+    through ``hetero_prepare`` over the incrementally maintained
+    breakpoint store ``bp`` — one O(M log M) sort per iteration shared
+    by all ~74 budgets of the μ* descent — and each solve is a
+    ``searchsorted`` bracket + safeguarded Newton seeded by ``lam_hint``
+    (the previous iteration's λ*).  On the generic path each F
+    evaluation is a warm-started, adaptively terminated λ-bisection
+    (the warm bracket is this SmartFill iteration's, widened once here)
+    and cap runs the full-precision bisection, returning the bracket to
+    carry forward.  F's denominator is job k's own ``s_k(μ)`` —
+    ``take_job`` is the identity for a shared speedup.
     """
     M = c.shape[0]
     active = jnp.arange(M) < k
     sp_k = take_job(sp, k)
+    no_lam = jnp.zeros((), c.dtype)
 
     if _uses_closed_cap(sp):
         u = jnp.where(active, sp.bottle_width(c), 0.0)
@@ -274,7 +307,92 @@ def _make_f(sp, c, a, k, W, B, warm, cap_iters):
             return (W - jnp.sum(served)) / sp_k.s(mu)
 
         def cap(mu):
-            return waterfill_solve(prep, u, h0, B - mu, active), warm
+            return waterfill_solve(prep, u, h0, B - mu, active), warm, no_lam
+    elif bp is not None and _uses_sorted_cap(sp):
+        prep = hetero_prepare(sp, c, active, breakpoints=bp)
+
+        def _price(th, mu):
+            served = jnp.where(active, a * sp.s(th), 0.0)
+            return (W - jnp.sum(served)) / sp_k.s(mu)
+
+        def F(mu):
+            th = hetero_solve(prep, B - mu, iters=cap_iters,
+                              lam_hint=lam_hint)
+            return _price(th, mu)
+
+        small = c.shape[0] < _APPROX_GRID_MIN_M
+
+        def F_chain(mu, hint):
+            # bracket-selection probe: grid budgets arrive λ*-threaded
+            # but a cell apart, so 4 unrolled safeguarded steps reach fp
+            # precision without a while_loop launch per probe
+            th, lam = hetero_solve(prep, B - mu, iters=cap_iters,
+                                   lam_hint=hint, return_lam=True,
+                                   unroll=4)
+            return _price(th, mu), lam
+
+        def F_desc(mu, hint):
+            # descent probe: consecutive probes live inside one
+            # contracting grid cell, so the warm λ* is near-exact and 2
+            # steps square its error twice; small instances keep the
+            # 4-step margin (they are oracle-pinned to 1e-6)
+            th, lam = hetero_solve(prep, B - mu, iters=cap_iters,
+                                   lam_hint=hint, return_lam=True,
+                                   unroll=4 if (small and precise) else 2)
+            return _price(th, mu), lam
+
+        if small and precise:
+            # few jobs ⇒ few breakpoints ⇒ wide segments, where the
+            # one-pass log-secant approximation carries percent-level
+            # bias — enough to misplace the grid argmin several cells
+            # (seen on the m ≤ 6 oracle instances).  Price the grid
+            # exactly instead, λ*-threaded left to right (grid μ
+            # ascending ⇒ budget descending ⇒ λ* ascending, so every
+            # eval is warm); small M keeps each pass cheap.
+            def F_grid(mus, hint0):
+                def stepg(h, mu):
+                    v, h2 = F_chain(mu, h)
+                    return h2, v
+                _, vals = lax.scan(stepg, hint0, mus)
+                return vals
+        elif small:
+            # relaxed (policy-grade) small-M grid: the approximation's
+            # wide-segment bias is still too large here, but a *cold*
+            # 6-step unrolled Newton per budget is already fp-accurate
+            # (searchsorted gives the exact segment) and vmaps into one
+            # fused (G, M) pass — ~20× less serial depth than the
+            # λ-threaded exact scan the planner uses
+            def F_grid(mus, hint0):
+                th = jax.vmap(
+                    lambda mu: hetero_solve(prep, B - mu, iters=cap_iters,
+                                            unroll=6))(mus)       # (G, M)
+                served = jnp.sum(
+                    jnp.where(active[None, :], a[None, :] * sp.s(th), 0.0),
+                    axis=-1)
+                return (W - served) / sp_k.s(mus)
+        else:
+            def F_grid(mus, hint0):
+                # localization probe: cell placement tolerates the
+                # log-secant approximation's error at this breakpoint
+                # density, so price the whole grid in two fused (G, M)
+                # passes instead of running the Newton solve per point
+                th = hetero_approx(prep, B - mus)              # (G, M)
+                served = jnp.sum(
+                    jnp.where(active[None, :], a[None, :] * sp.s(th), 0.0),
+                    axis=-1)
+                return (W - served) / sp_k.s(mus)
+
+        def cap(mu, hint=None):
+            # the descent hands over its final λ* (usually evaluated at
+            # this very μ*), so 4 unrolled steps leave margin over the
+            # ~2 a warm Newton needs; the cold no-hint call keeps the
+            # adaptive loop
+            th, lam = hetero_solve(
+                prep, B - mu, iters=cap_iters,
+                lam_hint=lam_hint if hint is None else hint,
+                return_lam=True, unroll=0 if hint is None else 4)
+            return th, warm, lam
+        return F, cap, (F_grid, F_chain, F_desc)
     else:
         bracket = (warm[0] / _WARM_WIDEN, warm[1] * _WARM_WIDEN)
 
@@ -285,9 +403,10 @@ def _make_f(sp, c, a, k, W, B, warm, cap_iters):
             return (W - jnp.sum(served)) / sp_k.s(mu)
 
         def cap(mu):
-            return solve_cap_generic(sp, B - mu, c, active, iters=96,
-                                     bracket=bracket, return_bracket=True)
-    return F, cap
+            th, br = solve_cap_generic(sp, B - mu, c, active, iters=96,
+                                       bracket=bracket, return_bracket=True)
+            return th, br, no_lam
+    return F, cap, None
 
 
 def _minimize_f(F, B, coarse, descent_iters):
@@ -347,9 +466,121 @@ def _minimize_f(F, B, coarse, descent_iters):
     return jnp.where(bad, B, mu), jnp.where(bad, jnp.inf, val)
 
 
+def _minimize_f_hinted(F_grid, F_chain, F_desc, B, coarse, descent_iters,
+                       hint0, stol_rel=3e-7, window=5):
+    """``_minimize_f`` specialized to the sorted per-job CAP path.
+
+    Three per-eval/per-search accelerations the factorized solver makes
+    possible: the localization grid prices one-pass approximate CAPs
+    (``hetero_approx`` — cell placement only); the descent threads each
+    probe's λ* into the next probe's warm start; and the descent itself
+    is safeguarded successive-parabolic interpolation on the bracketing
+    triple rather than golden section — superlinear, so it meets the
+    golden-equivalent bracket tolerance in ~a third of the (serial,
+    ~40 μs) F evaluations, with a convergence exit instead of a fixed
+    trip count.  ``descent_iters`` remains the worst-case budget, and a
+    non-contracting parabolic proposal falls back to the golden step of
+    the larger sub-interval.  Returns ``(μ*, F(μ*), λ_last)``; the
+    caller seeds the final CAP solve with ``λ_last``.
+    """
+    B = jnp.asarray(B)
+    dtype = B.dtype
+    lo = _mu_floor(B, dtype)
+    g1 = jnp.geomspace(lo, B, coarse // 2 + 1, dtype=dtype)[:-1]
+    g2 = jnp.linspace(B / (coarse // 2), B, coarse // 2, dtype=dtype)
+    mus = jnp.sort(jnp.concatenate([g1, g2]))
+    vals = F_grid(mus, hint0)
+    finite = jnp.isfinite(vals)
+    ok = jnp.any(finite)
+    G = mus.shape[0]
+    j0 = jnp.argmin(jnp.where(finite, vals, jnp.inf))
+
+    # the approximate grid's percent-level bias can flip near-minimum
+    # comparisons a cell either way, and converging the descent inside
+    # the wrong cell costs ~1e-4 rel J at a cell edge — so re-price a
+    # 5-point neighbourhood of the approximate argmin *exactly* (λ*
+    # threaded through the chain) and re-select the bracketing triple
+    # from those values
+    ws = window if G >= window else G           # static window size
+    half = ws // 2
+    jc = jnp.clip(j0, half, G - ws + half)
+    pts = lax.dynamic_slice(mus, (jc - half,), (ws,))
+    fl, lam = [], hint0
+    for t in range(ws):
+        ft, lam = F_chain(pts[t], lam)
+        fl.append(ft)
+    inf = jnp.asarray(jnp.inf, dtype)
+    fs = jnp.stack(fl)
+    fs = jnp.where(jnp.isfinite(fs), fs, inf)
+    kk = jnp.clip(jnp.argmin(fs), 1, ws - 2)
+    xa, xm, xb = pts[kk - 1], pts[kk], pts[kk + 1]
+    fa, fm, fb = fs[kk - 1], fs[kk], fs[kk + 1]
+    span0 = xb - xa
+    tol = jnp.asarray(4e-9, dtype) * span0    # ≈ φ^-40, the old default
+    # vertex-stability exit: F'(μ*) = 0, so at a smooth minimum a μ*
+    # located to stol_rel·span leaves J within O((stol_rel·span)²·F'') —
+    # negligible; at a segment-change *kink* the J error is linear in
+    # the exit tolerance, which is why the caller passes a tight
+    # stol_rel for small instances (oracle-pinned to 1e-6) and a
+    # relaxed one for large ones (certified by J == J_linear only)
+    stol = jnp.asarray(stol_rel, dtype) * span0
+
+    def cond(st):
+        i, xa, _, xb = st[0], st[1], st[2], st[3]
+        return (i < descent_iters) & (xb - xa > tol) & (~st[8])
+
+    def body(st):
+        i, xa, xm, xb, fa, fm, fb, lam, _ = st
+        # parabolic vertex through the triple
+        d1 = (xm - xa) * (fm - fb)
+        d2 = (xm - xb) * (fm - fa)
+        den = 2.0 * (d1 - d2)
+        u_p = xm - ((xm - xa) * d1 - (xm - xb) * d2) / jnp.where(
+            den != 0.0, den, 1.0)
+        ok_p = (den != 0.0) & jnp.isfinite(u_p) & (u_p > xa) & (u_p < xb)
+        # a vertex that stopped moving IS convergence (for a quadratic
+        # the vertex is exact at any bracket width — waiting for the
+        # width tolerance would golden-step ~40 more times for nothing)
+        done = ok_p & (jnp.abs(u_p - xm) < stol)
+        # fallback: golden step into the larger sub-interval
+        left_big = (xm - xa) >= (xb - xm)
+        g = jnp.where(left_big, xm - _INVPHI2 * (xm - xa),
+                      xm + _INVPHI2 * (xb - xm))
+        u = jnp.where(ok_p & (jnp.abs(u_p - xm) >= stol), u_p, g)
+        fu, lam = F_desc(u, lam)
+        fu = jnp.where(jnp.isnan(fu), inf, fu)
+        # bracket update keeping an interior minimum
+        ul = u < xm                                    # u in (xa, xm)
+        better = fu <= fm
+        xa2 = jnp.where(ul, jnp.where(better, xa, u),
+                        jnp.where(better, xm, xa))
+        xb2 = jnp.where(ul, jnp.where(better, xm, xb),
+                        jnp.where(better, xb, u))
+        xm2 = jnp.where(better, u, xm)
+        fa2 = jnp.where(ul, jnp.where(better, fa, fu),
+                        jnp.where(better, fm, fa))
+        fb2 = jnp.where(ul, jnp.where(better, fm, fb),
+                        jnp.where(better, fb, fu))
+        fm2 = jnp.where(better, fu, fm)
+        return i + 1, xa2, xm2, xb2, fa2, fm2, fb2, lam, done
+
+    st0 = (0, xa, xm, xb, fa, fm, fb, lam,
+           jnp.zeros((), dtype=bool))
+    _, xa, xm, xb, fa, fm, fb, lam, _ = lax.while_loop(cond, body, st0)
+
+    cand_mu = jnp.stack([xa, xm, xb])
+    cand_f = jnp.stack([fa, fm, fb])
+    i = jnp.argmin(jnp.where(jnp.isfinite(cand_f), cand_f, jnp.inf))
+    mu, val = cand_mu[i], cand_f[i]
+    bad = ~(ok & jnp.isfinite(val))
+    return (jnp.where(bad, B, mu), jnp.where(bad, jnp.inf, val), lam)
+
+
 @partial(jax.jit,
-         static_argnames=("coarse", "descent_iters", "cap_iters", "fast"))
-def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast):
+         static_argnames=("coarse", "descent_iters", "cap_iters", "fast",
+                          "precise", "with_times"))
+def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast,
+           lam0=None, precise=True, with_times=True):
     """Fixed-shape SmartFill core: lax.scan over iterations k = 1..M−1.
 
     Args:
@@ -362,8 +593,25 @@ def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast):
       cap_iters: static λ-bisection budget per generic CAP solve (upper
         bound — the adaptive exit usually stops earlier).
       fast: static — closed-form μ* for the pure-power family.
+      lam0: optional (M,) per-iteration λ* hints (a previous run's
+        ``lam`` output — e.g. the pre-swap order during the exchange
+        search, whose λ* barely moves under one swap).  Only consulted
+        on the sorted per-job CAP path; a hint outside the solver's
+        validated bracket is ignored, so stale hints cannot corrupt the
+        solve.
+      precise: static — False relaxes the small-instance μ* precision
+        knobs to the large-instance (certificate-grade) settings and
+        swaps the λ-threaded exact localization grid for one fused
+        vmapped pass.  For per-event policy re-planning, where the
+        allocations feed a simulator rather than an oracle-pinned J.
+      with_times: static — False skips the back-substituted durations/
+        T/J (returned as zeros); per-event policies only consume the
+        allocation column.
 
-    Returns (theta, c, a, durations, T, J, J_linear) as device arrays.
+    Returns (theta, c, a, durations, T, J, J_linear, lam) as device
+    arrays, where lam[k] is iteration k's CAP dual λ* on the sorted
+    per-job path (0 on the closed-form and bisection paths — diagnostic
+    and warm-start payload only).
     """
     M = x.shape[0]
     dtype = x.dtype
@@ -372,6 +620,7 @@ def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast):
     zero = jnp.zeros((), dtype)
     live0 = m > 0
     closed_cap = _uses_closed_cap(sp)       # static per-job/generic dispatch
+    sorted_cap = _uses_sorted_cap(sp)
     Wc = jnp.cumsum(w)                      # Wc[k] = Σ w[:k+1] (padded w = 0)
 
     c0 = jnp.zeros((M,), dtype).at[0].set(jnp.where(live0, 1.0, 0.0))
@@ -384,13 +633,28 @@ def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast):
     fi = jnp.finfo(dtype)
     warm0 = (jnp.asarray(fi.tiny, dtype) / jnp.asarray(fi.eps, dtype),
              jnp.asarray(fi.max, dtype) / 4.0)
+    if sorted_cap:
+        # per-job activation-breakpoint store (λ_i, β̃(λ_i)), maintained
+        # incrementally: SmartFill only ever *appends* one CDR constant
+        # c_k per iteration, so each update is O(M) instead of the
+        # O(M²) one-shot prepare
+        bp0 = hetero_breakpoints_init(M, dtype)
+        bp0 = hetero_breakpoints_insert(sp, c0, 0, *bp0, live=live0)
+    else:
+        bp0 = None
 
     def step(carry, k):
-        c, a, warm = carry
+        if sorted_cap:
+            c, a, warm, bp = carry
+        else:
+            c, a, warm = carry
+            bp = None
         live = k < m
         W = Wc[k]
         active = idx < k
-        F, cap = _make_f(sp, c, a, k, W, B, warm, cap_iters)
+        hint = None if lam0 is None else lam0[k]
+        F, cap, chain = _make_f(sp, c, a, k, W, B, warm, cap_iters,
+                                bp=bp, lam_hint=hint, precise=precise)
         if fast:
             # heSRPT closed form for s = aθ^p (p = γ+1, m = 1/(1−p) = −1/γ).
             # Clamped to the minimizer's domain [_mu_floor(B), B]: a
@@ -401,9 +665,29 @@ def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast):
             Wk1 = Wc[k - 1] ** mexp
             mu = B * (Wk - Wk1) / jnp.maximum(Wk, 1e-300)
             mu = jnp.clip(mu, _mu_floor(B, dtype), B)
+        elif chain is not None:
+            hint0 = jnp.zeros((), dtype) if hint is None else hint
+            # small instances are oracle-pinned to 1e-6 rel J: keep the
+            # full 32-point grid and a tight descent exit there (both
+            # are cheap at that size); large instances are certified by
+            # J == J_linear, where the relaxed exit buys ~2× fewer evals
+            small_m = precise and M < _APPROX_GRID_MIN_M
+            stol_rel = 3e-7 if small_m else 1e-4
+            coarse_eff = max(coarse, 32) if small_m else coarse
+            # the small-M grid is exact, so its ±2-cell re-pricing
+            # window guards only descent-entry quality; at large M the
+            # breakpoints are dense enough that the approximate argmin
+            # is reliable to ±1 cell
+            window = 5 if small_m else 3
+            mu, _, lam_mz = _minimize_f_hinted(
+                chain[0], chain[1], chain[2], B, coarse_eff, descent_iters,
+                hint0, stol_rel=stol_rel, window=window)
         else:
             mu, _ = _minimize_f(F, B, coarse, descent_iters)
-        th_rest, warm2 = cap(mu)                        # (M,) padded
+        if chain is not None and not fast:
+            th_rest, warm2, lam_k = cap(mu, lam_mz)     # (M,) padded
+        else:
+            th_rest, warm2, lam_k = cap(mu)             # (M,) padded
         if not closed_cap:
             # only a live iteration may move the carried warm bracket
             warm = (jnp.where(live, warm2[0], warm[0]),
@@ -424,16 +708,27 @@ def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast):
         c = c.at[k].set(jnp.where(live, jnp.maximum(c_next, 1e-300), zero))
         a = a.at[k].set(jnp.where(live, a_next, zero))
         col = jnp.where(live, col, zero)
-        return (c, a, warm), col
+        lam_k = jnp.where(live, lam_k, zero)
+        if sorted_cap:
+            bp = hetero_breakpoints_insert(sp, c, k, *bp, live=live)
+            return (c, a, warm, bp), (col, lam_k)
+        return (c, a, warm), (col, lam_k)
 
-    (c, a, _), cols = lax.scan(step, (c0, a0, warm0), jnp.arange(1, M))
+    carry0 = (c0, a0, warm0, bp0) if sorted_cap else (c0, a0, warm0)
+    carry, (cols, lams) = lax.scan(step, carry0, jnp.arange(1, M))
+    c, a = carry[0], carry[1]
     theta = jnp.concatenate([col0[:, None], cols.T], axis=1)
+    lam = jnp.concatenate([jnp.zeros((1,), dtype), lams])
 
     active_jobs = idx < m
-    d, T = completion_times(sp, x, theta, active=active_jobs)
-    J = jnp.sum(jnp.where(active_jobs, w * T, zero))
+    if with_times:
+        d, T = completion_times(sp, x, theta, active=active_jobs)
+        J = jnp.sum(jnp.where(active_jobs, w * T, zero))
+    else:
+        d = T = jnp.zeros((M,), dtype)
+        J = zero
     J_lin = jnp.sum(a * x)
-    return theta, c, a, d, T, J, J_lin
+    return theta, c, a, d, T, J, J_lin, lam
 
 
 def completion_times(sp: Speedup, x, theta, active=None):
@@ -517,7 +812,7 @@ def smartfill(
     # them through the shared fast paths bit-for-bit
     sp = collapse_homogeneous(sp)
     fast = _fast_ok(sp) and fast_path is not False
-    theta, c, a, d, T, J, J_lin = _solve(
+    theta, c, a, d, T, J, J_lin, _ = _solve(
         sp, x, w, B, M, coarse, descent_iters, cap_iters, fast)
     return SmartFillSchedule(
         theta=theta, c=c, a=a, durations=d, T=T,
@@ -667,27 +962,102 @@ def _permute_speedup(sp, perm):
         sp)
 
 
-def _exchange_descent(run, order, passes):
-    """Adjacent-exchange descent on the completion order.
+def _exchange_candidates(order, window):
+    """All single-swap neighbours of ``order`` within pair distance ≤ window.
 
-    ``run(perm) → (result, J)``; a swap is kept iff it improves J beyond
-    a 1e-10 relative margin.  One shared procedure for the device
-    planner and the host reference — the differential suite compares
-    their *searches*, so they must be the same search.
+    Returns an (n_cand, M) index array — ``window=1`` gives the M−1
+    adjacent swaps; larger windows add the non-adjacent pairs the
+    adjacent-only search cannot reach in one step (non-agreeable
+    instances stall on those — see ``examples/hetero_fleet.py``).  The
+    candidate count depends only on (M, window), so the batched scorer
+    compiles exactly once.
     """
-    best, best_J = run(order)
-    for _ in range(max(int(passes), 0)):
-        improved = False
-        for i in range(len(order) - 1):
+    order = np.asarray(order)
+    n = int(order.shape[0])
+    cands = []
+    for i in range(n - 1):
+        for j in range(i + 1, min(i + int(window), n - 1) + 1):
             cand = order.copy()
-            cand[i], cand[i + 1] = cand[i + 1], cand[i]
-            out, J = run(cand)
-            if np.isfinite(J) and J < best_J * (1.0 - 1e-10):
-                order, best, best_J = cand, out, J
-                improved = True
-        if not improved:
+            cand[i], cand[j] = cand[j], cand[i]
+            cands.append(cand)
+    if not cands:
+        return np.zeros((0, n), dtype=order.dtype)
+    return np.stack(cands)
+
+
+def _exchange_descent(run, order, passes, window=1):
+    """Steepest-descent exchange search on the completion order.
+
+    ``run(perm) → (result, J)``.  Each step scores *every* swap within
+    ``window`` and takes the single best one iff it improves J beyond a
+    1e-10 relative margin; the step budget is ``passes·(M−1)`` (the same
+    number of accepted swaps the historical first-improvement passes
+    allowed).  One shared procedure for the device planner and the host
+    reference — the differential suite compares their *searches*
+    against the batched scorer, so selection must be argmin-first in
+    both (``np.argmin``/``jnp.argmin`` both break ties at the first
+    occurrence).
+    """
+    order = np.asarray(order)
+    best, best_J = run(order)
+    steps = max(int(passes), 0) * max(int(order.shape[0]) - 1, 1)
+    for _ in range(steps):
+        cands = _exchange_candidates(order, window)
+        if cands.shape[0] == 0:
+            break
+        outs = []
+        Js = np.empty(cands.shape[0])
+        for t in range(cands.shape[0]):
+            out, J = run(cands[t])
+            outs.append(out)
+            Js[t] = J if np.isfinite(J) else np.inf
+        j = int(np.argmin(Js))
+        if Js[j] < best_J * (1.0 - 1e-10):
+            order, best, best_J = cands[j], outs[j], float(Js[j])
+        else:
             break
     return order, best, best_J
+
+
+def _exchange_descent_batched(run_one, score, order, passes, window):
+    """Device-batched steepest-descent exchange search.
+
+    Same search as ``_exchange_descent`` but each step scores all
+    candidates in ONE vmapped solve — ``score(perms, lam0) → (J, lam)``
+    over an (n_cand, M) permutation array — and reduces with a device
+    ``argmin``, so a step costs a single fused host sync (winning index
+    + accept flag in one transfer) instead of n_cand full round-trips,
+    and no per-candidate J is ever materialized on host: the incumbent
+    J stays a device scalar until the search returns.  λ* hints from
+    the incumbent order warm-start every candidate (one swap barely
+    moves λ*).  The final order is re-solved un-hinted through
+    ``run_one`` so the returned schedule is bitwise identical to the
+    sequential search's.
+    """
+    order = np.asarray(order)
+    out = run_one(order)
+    best_J = out[5]                     # device scalar — never synced alone
+    lam0 = out[7]
+    steps = max(int(passes), 0) * max(int(order.shape[0]) - 1, 1)
+    moved = False
+    for _ in range(steps):
+        cands = _exchange_candidates(order, window)
+        if cands.shape[0] == 0:
+            break
+        Js, lams = score(jnp.asarray(cands), lam0)
+        Js = jnp.where(jnp.isfinite(Js), Js, jnp.inf)
+        j_dev = jnp.argmin(Js)
+        J_cand = Js[j_dev]
+        accept = jnp.isfinite(J_cand) & (J_cand < best_J * (1.0 - 1e-10))
+        j, acc = jax.device_get((j_dev, accept))    # the step's one sync
+        if acc:
+            order, best_J, lam0, moved = (cands[int(j)], J_cand,
+                                          lams[j_dev], True)
+        else:
+            break
+    if moved:
+        out = run_one(order)
+    return order, out, float(out[5])
 
 
 def smartfill_hetero(
@@ -695,10 +1065,12 @@ def smartfill_hetero(
     x,
     w,
     B: float | None = None,
-    coarse: int = 32,
+    coarse: int = 24,
     descent_iters: int = 40,
     cap_iters: int = 64,
     exchange_passes: int = 2,
+    exchange_window: int = 1,
+    batched_exchange: bool = True,
     fast_path: bool | None = None,
 ) -> HeteroSmartFillSchedule:
     """SmartFill with per-job speedup functions (paper §7), device-resident.
@@ -710,14 +1082,23 @@ def smartfill_hetero(
       x, w: (M,) job sizes / weights in **any** order — the completion
         order is part of the decision here, so unlike ``smartfill`` no
         pre-sorting is required (or meaningful).
-      exchange_passes: adjacent-exchange refinement rounds over the
-        SJF-by-normalized-size initial order.  Each pass tries all M−1
-        adjacent swaps (one extra ``_solve`` each, same compiled
-        program) and keeps improvements; 0 disables the search and
-        plans the heuristic order directly.  The §7 optimal order is
-        open — the exchange check certifies a local optimum, and
-        ``smartfill_hetero_reference(search="brute")`` pins it globally
-        on small instances.
+      exchange_passes: exchange-search step budget over the
+        SJF-by-normalized-size initial order, as a multiple of M−1
+        steepest-descent steps.  Each step scores every swap within
+        ``exchange_window`` and takes the single best improvement;
+        0 disables the search and plans the heuristic order directly.
+        The §7 optimal order is open — the exchange check certifies a
+        local optimum, and ``smartfill_hetero_reference(search="brute")``
+        pins it globally on small instances.
+      exchange_window: maximum pair distance of a candidate swap.  1
+        (default) is the classical adjacent exchange; k > 1 also scores
+        the ~k·M non-adjacent pairs within distance k in the *same*
+        vmapped call, which escapes the stalls adjacent-only search
+        hits on non-agreeable instances.
+      batched_exchange: score all candidates of a step in one vmapped
+        ``_solve`` (device argmin, λ* warm-started from the incumbent
+        order, two host syncs per step).  False falls back to the
+        sequential per-candidate loop — the differential reference.
 
     Returns a HeteroSmartFillSchedule; ``.order`` maps schedule rows
     back to the caller's job indices.
@@ -744,17 +1125,37 @@ def smartfill_hetero(
     sp = collapse_homogeneous(sp)
     fast = _fast_ok(sp) and fast_path is not False
 
-    def run(perm):
-        xp = x[jnp.asarray(perm)]
-        wp = w[jnp.asarray(perm)]
-        out = _solve(_permute_speedup(sp, perm), xp, wp, B, M,
-                     coarse, descent_iters, cap_iters, fast)
-        return out, float(out[5])
+    def run_one(perm):
+        p = jnp.asarray(perm)
+        return _solve(_permute_speedup(sp, p), x[p], w[p], B, M,
+                      coarse, descent_iters, cap_iters, fast)
 
-    order, best, _ = _exchange_descent(
-        run, normalized_order(sp, x, w, B), exchange_passes)
+    init = normalized_order(sp, x, w, B)
+    if batched_exchange and exchange_passes > 0 and M > 1:
+        sp_axes = jax.tree_util.tree_map(
+            lambda l: 0 if getattr(l, "ndim", 0) >= 1 else None, sp)
 
-    theta, c, a, d, T, J, J_lin = best
+        def score(perms, lam0):
+            spn = jax.tree_util.tree_map(
+                lambda l: l[perms] if getattr(l, "ndim", 0) >= 1 else l, sp)
+            out = jax.vmap(
+                lambda spv, xv, wv: _solve(spv, xv, wv, B, M, coarse,
+                                           descent_iters, cap_iters, fast,
+                                           lam0),
+                in_axes=(sp_axes, 0, 0))(spn, x[perms], w[perms])
+            return out[5], out[7]
+
+        order, best, _ = _exchange_descent_batched(
+            run_one, score, init, exchange_passes, exchange_window)
+    else:
+        def run(perm):
+            out = run_one(perm)
+            return out, float(out[5])
+
+        order, best, _ = _exchange_descent(
+            run, init, exchange_passes, exchange_window)
+
+    theta, c, a, d, T, J, J_lin, _ = best
     return HeteroSmartFillSchedule(
         theta=theta, c=c, a=a, durations=d, T=T,
         J=float(J), J_linear=float(J_lin), order=np.asarray(order),
@@ -771,6 +1172,7 @@ def smartfill_hetero_reference(
     coarse: int = 512,
     zoom_rounds: int = 4,
     exchange_passes: int = 2,
+    exchange_window: int = 1,
 ) -> HeteroSmartFillSchedule:
     """Host-loop oracle for heterogeneous SmartFill.
 
@@ -814,7 +1216,8 @@ def smartfill_hetero_reference(
                 best, best_J, order = sched, J, np.asarray(perm)
     else:
         order, best, _ = _exchange_descent(
-            run, normalized_order(sp, x, w, B), exchange_passes)
+            run, normalized_order(sp, x, w, B), exchange_passes,
+            exchange_window)
 
     return HeteroSmartFillSchedule(
         theta=best.theta, c=best.c, a=best.a, durations=best.durations,

@@ -222,7 +222,8 @@ def _sharded_program(fn, mesh: Mesh):
     # check_rep=False: the body is collective-free by construction (every
     # instance is an independent solve), and the replication checker has
     # no rule for lax.while_loop on this jax line — which the §7
-    # heterogeneous solver's adaptive λ-bisection exit uses.
+    # heterogeneous solvers' adaptive exits use (the λ-bisection and the
+    # sorted-bracket Newton polish alike).
     return jax.jit(shard_map(body, mesh=mesh,
                              in_specs=(P(None, axis), P()),
                              out_specs=P(None, axis),
@@ -350,7 +351,7 @@ def plan_sharded(
         tuple(_pad_rows(l, total, edge=True) for l in split.batched),
     )
     fn = _plan_fn(split.key, coarse, descent_iters, cap_iters, fast)
-    theta, c, a, d, T, J, J_lin = _run_sharded(
+    theta, c, a, d, T, J, J_lin, _ = _run_sharded(
         mesh, fn, batched, split.shared, N, chunk_size)
     return BatchedSmartFillSchedule(
         theta=theta, c=c, a=a, durations=d, T=T,

@@ -67,11 +67,43 @@ def generic_waterfill_op(c, A, w, gamma, b, sigma=1, iters=64, impl="auto"):
 @functools.partial(jax.jit, static_argnames=("iters", "impl"))
 def hetero_waterfill_op(c, A, w, gamma, sigma, b, iters=64, impl="auto"):
     """Per-job-parameter waterfill (paper §7): (N, K) job-indexed
-    families, σ a ±1 array.  Same ``impl`` contract as the other ops;
-    the auto threshold is on K."""
+    families, σ a ±1 array.  Same ``impl`` contract as the other ops
+    plus ``'sorted'`` — the breakpoint-sorted bracket solver
+    (``core.gwf.solve_cap_hetero_sorted``) vmapped over instances, the
+    fast off-TPU batched alternative to the bisection reference
+    (``solve_cap_batched`` routes per-job batches there directly;
+    ``'auto'`` here stays ref off-TPU so the kernel's differential
+    oracle is what a bare call exercises)."""
     if impl == "auto":
         impl = "pallas" if use_pallas_for(c.shape[-1]) else "ref"
     if impl == "ref":
         return hetero_waterfill_ref(c, A, w, gamma, sigma, b, iters=iters)
+    if impl == "sorted":
+        return _hetero_sorted(c, A, w, gamma, sigma, b, iters=iters)
     return hetero_waterfill(c, A, w, gamma, sigma, b, iters=iters,
                             interpret=(impl == "interpret"))
+
+
+def _hetero_sorted(c, A, w, gamma, sigma, b, iters=48):
+    """Sorted-bracket per-job solve on the kernel's raw-array calling
+    convention (inactive slots marked by c = 0, like the reference)."""
+    import jax.numpy as jnp
+
+    from repro.core.gwf import solve_cap_hetero_sorted
+    from repro.core.speedup import StackedSpeedup
+
+    c = jnp.asarray(c)
+    dt = c.dtype
+    shape = c.shape
+    A = jnp.broadcast_to(jnp.asarray(A, dt), shape)
+    w = jnp.broadcast_to(jnp.asarray(w, dt), shape)
+    gamma = jnp.broadcast_to(jnp.asarray(gamma, dt), shape)
+    sigma = jnp.broadcast_to(jnp.asarray(sigma, dt), shape)
+    b = jnp.broadcast_to(jnp.asarray(b, dt), shape[:1])
+
+    def one(c1, A1, w1, g1, s1, b1):
+        sp = StackedSpeedup(A=A1, w=w1, gamma=g1, sigma=s1, B=0.0)
+        return solve_cap_hetero_sorted(sp, b1, c1, c1 > 0,
+                                       iters=min(iters, 48))
+
+    return jax.vmap(one)(c, A, w, gamma, sigma, b)

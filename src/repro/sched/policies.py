@@ -53,9 +53,11 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.gwf import solve_cap, solve_cap_hetero
-from repro.core.smartfill import _is_pure_power, _solve
+from repro.core.gwf import (solve_cap, solve_cap_hetero,
+                            solve_cap_hetero_sorted)
+from repro.core.smartfill import _is_pure_power, _solve, _uses_sorted_cap
 from repro.core.speedup import Speedup
 
 __all__ = [
@@ -222,7 +224,7 @@ class SmartFillPolicy(Policy):
         fast = bool(self.fast) and not is_per_job(self.sp)
         theta, *_ = _solve(self.sp, xs, ws, jnp.asarray(self.B, xs.dtype),
                            m, self.coarse, self.descent_iters,
-                           self.cap_iters, fast)
+                           self.cap_iters, fast, with_times=False)
         col = jnp.take(theta, jnp.clip(m - 1, 0, M - 1), axis=1)
         col = jnp.where(jnp.arange(M) < m, col, 0.0)
         out = jnp.zeros_like(rem).at[order].set(col)
@@ -268,46 +270,133 @@ class HeteroSmartFillPolicy(Policy):
     """Re-planning SmartFill for per-job speedup functions (paper §7).
 
     ``sp`` carries job-indexed leaves aligned with the engine's job
-    slots (slot i ↔ leaf entry i); at every event the active jobs are
-    ranked by *normalized* remaining size rem_i / s_i(B) — descending,
-    ties by weight — the per-job leaves are permuted alongside, and the
-    job-indexed solver core plans the current allocation (column m−1).
+    slots (slot i ↔ leaf entry i).  With a **pinned completion order**
+    (``rank`` set — see ``pinned``) the active jobs are ranked by their
+    one-shot rank at every event and only the *allocations* are
+    re-solved; by Prop. 7 carried into §7 this executes the one-shot
+    plan exactly (time consistency).  With ``rank=None`` the policy
+    re-ranks every event by normalized remaining size rem_i / s_i(B) —
+    the PR 5 behavior, kept as an ablation: re-ranking can flip the
+    order mid-run and execute strictly worse than the one-shot plan.
     With a shared (scalar-leaf) speedup this is exactly
     ``SmartFillPolicy``'s ranking and solve.  The closed-form μ* fast
     path never applies (per-job exponents), so ``fast`` is pinned False.
+
+    ``pinned(..., cache_plan=True)`` goes one step further and stores
+    the one-shot allocation table Θ, making each event an O(M) lookup
+    (see ``pinned``).  ``precise=False`` swaps the per-event re-solve
+    onto the relaxed grid/descent path (~3× cheaper, ~1e−4-grade
+    allocations) for streaming re-planning where events perturb the
+    state anyway.
     """
 
     sp: Speedup
     B: float
+    rank: jnp.ndarray | None = None     # per-job one-shot rank, or None
+    theta: jnp.ndarray | None = None    # cached (M, M) plan in rank coords
     coarse: int = 32
     descent_iters: int = 40
     cap_iters: int = 64
+    precise: bool = True
     name = "heteroSF"
 
     def tree_flatten(self):
-        return (self.sp, self.B), (self.coarse, self.descent_iters,
-                                   self.cap_iters)
+        return (self.sp, self.B, self.rank, self.theta), (
+            self.coarse, self.descent_iters, self.cap_iters, self.precise)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        coarse, descent_iters, cap_iters = aux
-        return cls(sp=children[0], B=children[1], coarse=coarse,
-                   descent_iters=descent_iters, cap_iters=cap_iters)
+        coarse, descent_iters, cap_iters, precise = aux
+        return cls(sp=children[0], B=children[1], rank=children[2],
+                   theta=children[3], coarse=coarse,
+                   descent_iters=descent_iters, cap_iters=cap_iters,
+                   precise=precise)
+
+    @classmethod
+    def pinned(cls, sp: Speedup, x0, w0, B: float | None = None,
+               order=None, exchange_passes: int = 2,
+               cache_plan: bool = False, **kwargs):
+        """Policy with the one-shot completion order fixed at construction.
+
+        ``x0``/``w0`` are the *initial* sizes/weights — (M,) for one
+        instance or (K, M) for an ensemble (rank then batches per
+        workload like any other policy leaf).  For a single instance the
+        order comes from the full planner (exchange search included);
+        for a batch, from the per-instance normalized-size heuristic
+        (the batched planner's order).  Pass ``order`` explicitly to pin
+        a caller-chosen permutation instead (e.g. a brute-force optimum
+        or a previously planned ``.order``).
+
+        ``cache_plan=True`` additionally stores the one-shot allocation
+        table Θ and executes it by active-count lookup instead of
+        re-solving — the device analog of ``simulator.schedule_policy``.
+        By Prop. 7 (carried into §7) the looked-up column equals the
+        re-solved allocation at every state the pinned order can reach
+        under pure completions, so this is the same policy with the
+        per-event DP amortized into construction.  Only valid without
+        arrivals (an arrival makes the active set a non-prefix of the
+        pinned order — use rank-only pinning there).
+        """
+        from repro.core.batch import smartfill_hetero_batched
+        from repro.core.smartfill import smartfill_hetero
+
+        B = float(sp.B if B is None else B)
+        x0 = np.asarray(x0, dtype=np.float64)
+        w0 = np.asarray(w0, dtype=np.float64)
+        if cache_plan and order is not None:
+            raise ValueError("cache_plan plans its own order; pass one of "
+                             "order / cache_plan")
+        theta = None
+        if x0.ndim == 1:
+            if order is None:
+                plan = smartfill_hetero(sp, x0, w0, B=B,
+                                        exchange_passes=exchange_passes)
+                order = plan.order
+                if cache_plan:
+                    theta = jnp.asarray(plan.theta)
+            order2d = np.atleast_2d(np.asarray(order))
+        else:
+            if order is None:
+                orders, sched = smartfill_hetero_batched(sp, x0, w0, B=B)
+                order = orders
+                if cache_plan:
+                    theta = jnp.asarray(sched.theta)
+            order2d = np.asarray(order)
+        rank = np.empty_like(order2d)
+        np.put_along_axis(rank, order2d,
+                          np.broadcast_to(np.arange(order2d.shape[1]),
+                                          order2d.shape), axis=1)
+        rank = jnp.asarray(rank if x0.ndim > 1 else rank[0],
+                           jnp.result_type(float))
+        return cls(sp=sp, B=B, rank=rank, theta=theta, **kwargs)
 
     def __call__(self, rem, w, active):
         M = rem.shape[0]
-        rate = jnp.broadcast_to(
-            self.sp.s(jnp.full((M,), self.B, rem.dtype)), (M,))
-        key = jnp.where(active, -(rem / jnp.maximum(rate, 1e-300)), jnp.inf)
+        if self.rank is None:
+            rate = jnp.broadcast_to(
+                self.sp.s(jnp.full((M,), self.B, rem.dtype)), (M,))
+            key = jnp.where(active, -(rem / jnp.maximum(rate, 1e-300)),
+                            jnp.inf)
+        else:
+            key = jnp.where(active, jnp.asarray(self.rank, rem.dtype),
+                            jnp.inf)
         order = jnp.lexsort((w, key))
-        xs = jnp.where(active, rem, 0.0)[order]
-        ws = jnp.where(active, w, 0.0)[order]
-        sp_o = jax.tree_util.tree_map(
-            lambda l: l[order] if getattr(l, "ndim", 0) >= 1 else l, self.sp)
         m = jnp.sum(active)
-        theta, *_ = _solve(sp_o, xs, ws, jnp.asarray(self.B, xs.dtype),
-                           m, self.coarse, self.descent_iters,
-                           self.cap_iters, False)
+        if self.theta is not None:
+            # cached-plan execution: position r < m holds the active job
+            # of r-th smallest pinned rank, which under pure completions
+            # is exactly rank r — row r, column m−1 of the stored table
+            theta = jnp.asarray(self.theta, rem.dtype)
+        else:
+            xs = jnp.where(active, rem, 0.0)[order]
+            ws = jnp.where(active, w, 0.0)[order]
+            sp_o = jax.tree_util.tree_map(
+                lambda l: l[order] if getattr(l, "ndim", 0) >= 1 else l,
+                self.sp)
+            theta, *_ = _solve(sp_o, xs, ws, jnp.asarray(self.B, xs.dtype),
+                               m, self.coarse, self.descent_iters,
+                               self.cap_iters, False, precise=self.precise,
+                               with_times=False)
         col = jnp.take(theta, jnp.clip(m - 1, 0, M - 1), axis=1)
         col = jnp.where(jnp.arange(M) < m, col, 0.0)
         out = jnp.zeros_like(rem).at[order].set(col)
@@ -325,6 +414,11 @@ class WeightedMarginalRatePolicy(Policy):
     each job's own s_i — no carried CDR constants, no μ* recursion, no
     order search.  Kept as the ablation baseline the hetero SmartFill
     differential suite must beat.
+
+    Per-event CAP dispatch is static on the speedup's type/leaf shapes:
+    stackable regular-family per-job speedups take the sorted-bracket
+    solver (``solve_cap_hetero_sorted`` — the §7 fast path), anything
+    else the λ-bisection oracle.
     """
 
     sp: Speedup
@@ -342,8 +436,12 @@ class WeightedMarginalRatePolicy(Policy):
         c = jnp.where(active, rem / jnp.maximum(w, _TINY), 1.0)
         c = c / jnp.maximum(jnp.max(jnp.where(active, c, 0.0)), _TINY)
         c = jnp.clip(c, 1e-12, None)
-        th = solve_cap_hetero(self.sp, jnp.asarray(self.B, rem.dtype), c,
-                              active)
+        if _uses_sorted_cap(self.sp):
+            th = solve_cap_hetero_sorted(
+                self.sp, jnp.asarray(self.B, rem.dtype), c, active)
+        else:
+            th = solve_cap_hetero(self.sp, jnp.asarray(self.B, rem.dtype),
+                                  c, active)
         return jnp.where(active, th, 0.0)
 
 

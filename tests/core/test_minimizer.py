@@ -85,12 +85,12 @@ def test_minimize_f_nan_instance_falls_back_to_B():
     warm = (jnp.asarray(1e-30), jnp.asarray(1e30))
     Bj = jnp.asarray(B)
     # NaN cumulative weight makes every F probe NaN
-    F, _ = _make_f(sp, c, a, jnp.asarray(2), jnp.nan, Bj, warm, cap_iters=32)
+    F, *_ = _make_f(sp, c, a, jnp.asarray(2), jnp.nan, Bj, warm, cap_iters=32)
     mu, val = _minimize_f(F, Bj, coarse=16, descent_iters=8)
     assert float(mu) == B
     assert not np.isfinite(float(val))
     # sane W recovers a finite interior minimizer
-    F, _ = _make_f(sp, c, a, jnp.asarray(2), jnp.asarray(1.5), Bj, warm,
+    F, *_ = _make_f(sp, c, a, jnp.asarray(2), jnp.asarray(1.5), Bj, warm,
                    cap_iters=32)
     mu, val = _minimize_f(F, Bj, coarse=16, descent_iters=8)
     assert 0.0 < float(mu) <= B and np.isfinite(float(val))
