@@ -28,14 +28,17 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (log_speedup, power, sample_workloads, shifted_power,
-                        simulate_ensemble, simulate_policy_device, smartfill,
-                        smartfill_batched, smartfill_hetero)
+from repro.core import (log_speedup, plan_classes, power,
+                        sample_class_workloads, sample_workloads,
+                        shifted_power, simulate_ensemble,
+                        simulate_fluid_classes, simulate_policy_device,
+                        smartfill, smartfill_batched, smartfill_hetero)
 from repro.core.gwf import (solve_cap, solve_cap_regular_reference)
 from repro.kernels.gwf_waterfill.ops import (generic_waterfill_op,
                                              gwf_waterfill_ref)
-from repro.sched.policies import (EquiPolicy, HeSRPTPolicy,
-                                  HeteroSmartFillPolicy, SmartFillPolicy,
+from repro.sched.policies import (ClassSmartFillPolicy, EquiPolicy,
+                                  HeSRPTPolicy, HeteroSmartFillPolicy,
+                                  SmartFillPolicy,
                                   WeightedMarginalRatePolicy)
 
 B = 10.0
@@ -269,6 +272,58 @@ def bench_hetero(quick: bool = False, reps: int = 15):
     return rows
 
 
+def bench_classes(quick: bool = False):
+    """Class-aggregated (many-jobs limit) planning + fluid engine rows.
+
+    ``class_plan_M1e6_C64`` — one full ``plan_classes`` call on 64
+        classes of 15625 jobs each (M = 10⁶): host prep + aggregation
+        transform + the §7 solve on 64 aggregate rows + exchange
+        passes.  This is the ROADMAP "millions of users" headline —
+        per-job planning at this M is off the chart (the per-job bench
+        ceiling is M = 256), aggregation makes it a ~64-row solve.
+    ``class_fluid_ensemble_*`` — the fluid class engine executing the
+        cached one-shot plan over K mixed-family instances, in
+        events/sec (each event completes at least one class).
+    """
+    C = 64
+    per = 1_000_000 // C                    # 15625 jobs/class → M = 10⁶
+    wb = sample_class_workloads(11, K=1, C=C, count_range=(per, per))
+    st = wb.state(0)
+
+    def run_plan():
+        return plan_classes(st)
+
+    out = run_plan()                        # compile + warm
+    rows = [{
+        "name": f"class_plan_M1e6_C{C}", "C": C, "jobs": int(out.counts.sum()),
+        "us_per_call": _time(run_plan, reps=3 if quick else 5, warmup=1),
+        "J": out.J,
+    }]
+
+    K, Cf = (8, 12) if quick else (32, 16)
+    wb = sample_class_workloads(12, K=K, C=Cf)
+    states = [wb.state(k) for k in range(K)]
+    pols = [ClassSmartFillPolicy.from_classes(s, cache_plan=True)
+            for s in states]                # plan construction not timed
+
+    def run_fluid():
+        total = 0
+        for s, p in zip(states, pols):
+            total += simulate_fluid_classes(s, p, trace=False).n_events
+        return total
+
+    events = run_fluid()                    # compile + warm
+    dt = _time(run_fluid, reps=3, warmup=1) / 1e6
+    rows.append({
+        "name": f"class_fluid_ensemble_K{K}_C{Cf}",
+        "us_per_call": dt * 1e6,
+        "events_per_sec": events / dt,
+        "events": events,
+        "instances_per_sec": K / dt,
+    })
+    return rows
+
+
 FLEET_DEVICE_COUNTS = (1, 2, 4, 8)
 
 
@@ -381,6 +436,7 @@ def collect(quick: bool = False):
     single += bench_smartfill(ms=batched_ms)        # same-M baselines
     batched = bench_smartfill_batched(n_instances=n, ms=batched_ms)
     simulator = bench_simulator(K=64 if quick else 256, M=16)
+    classes = bench_classes(quick=quick)
     fleet = bench_fleet(quick=quick)
     summary = {}
     for r in batched:
@@ -414,6 +470,17 @@ def collect(quick: bool = False):
     for r in hetero:
         if "events_per_sec" in r:
             summary["hetero_ensemble_events_per_sec"] = r["events_per_sec"]
+    cls_by_name = {r["name"]: r for r in classes}
+    plan_1e6 = cls_by_name.get("class_plan_M1e6_C64")
+    if plan_1e6:
+        summary["class_plan_M1e6_ms"] = plan_1e6["us_per_call"] / 1e3
+        # per-job jobs/sec through the aggregate planner — the headline
+        # the ROADMAP item asks for
+        summary["class_plan_M1e6_jobs_per_sec"] = (
+            plan_1e6["jobs"] / (plan_1e6["us_per_call"] / 1e6))
+    for r in classes:
+        if "events_per_sec" in r:
+            summary["class_fluid_events_per_sec"] = r["events_per_sec"]
     # weak-scaling efficiency: throughput relative to D=1 (1.0 = ideal;
     # on an oversubscribed CPU host the curve flattens at the physical
     # core count — the rows pin the mechanism, not the silicon)
@@ -431,6 +498,7 @@ def collect(quick: bool = False):
         "smartfill_batched": batched,
         "simulator": simulator,
         "hetero": hetero,
+        "classes": classes,
         "fleet": fleet,
         "summary": summary,
         "config": {"B": B, "n_instances": n, "x64": jax.config.jax_enable_x64,
@@ -447,7 +515,7 @@ def bench_rows(quick: bool = False):
     report = collect(quick=quick)
     return (report["gwf"] + report["smartfill_single"]
             + report["smartfill_batched"] + report["simulator"]
-            + report["hetero"] + report["fleet"])
+            + report["hetero"] + report["classes"] + report["fleet"])
 
 
 def main():
@@ -467,7 +535,7 @@ def main():
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     for sec in ("smartfill_single", "smartfill_batched", "simulator",
-                "hetero", "fleet"):
+                "hetero", "classes", "fleet"):
         for r in report[sec]:
             extra = (f"  {r['instances_per_sec']:.0f} inst/s"
                      if "instances_per_sec" in r else "")

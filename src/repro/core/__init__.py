@@ -50,17 +50,36 @@ from .batch import (  # noqa: F401
     smartfill_batched,
     smartfill_hetero_batched,
 )
+from .classes import (  # noqa: F401
+    ClassPlan,
+    ClassState,
+    aggregate_classes,
+    class_speedup,
+    compact_aggregate_batch,
+    expand_classes,
+    plan_classes,
+    plan_classes_batched,
+    plan_classes_reference,
+)
 from .hesrpt import fit_power, hesrpt_allocations, hesrpt_policy  # noqa: F401
 from .cdr import cdr_violation, estimate_constants  # noqa: F401
 from .simulator import (  # noqa: F401
     EnsembleResult,
+    FluidClassResult,
     SimResult,
     n_events_for,
     schedule_policy,
     simulate_ensemble,
+    simulate_fluid_classes,
     simulate_policy,
     simulate_policy_device,
     simulate_policy_reference,
     smartfill_sim_policy,
 )
-from .workloads import FAMILIES, WorkloadBatch, sample_workloads  # noqa: F401
+from .workloads import (  # noqa: F401
+    FAMILIES,
+    ClassWorkloadBatch,
+    WorkloadBatch,
+    sample_class_workloads,
+    sample_workloads,
+)

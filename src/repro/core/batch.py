@@ -52,6 +52,7 @@ __all__ = [
     "batch_axes",
     "check_axes_unambiguous",
     "current_allocations_from",
+    "hetero_order_batch",
     "smartfill_batched",
     "smartfill_hetero_batched",
     "smartfill_allocations_batched",
@@ -178,6 +179,7 @@ def smartfill_batched(
     cap_iters: int = 64,
     fast_path: bool | None = None,
     validate: bool = False,
+    stol_rel: float | None = None,
 ) -> BatchedSmartFillSchedule:
     """SmartFill over N padded instances in a single vmap'd device call.
 
@@ -188,6 +190,11 @@ def smartfill_batched(
       B: scalar or (N,) budgets; defaults to sp.B.
       active: optional (N, M) prefix masks; defaults to ``X > 0``.
       fast_path: as in ``smartfill`` — None auto-detects pure power.
+      stol_rel: μ* descent exit tolerance override (see ``smartfill``);
+        None keeps the size-dependent default.  The class-aggregated
+        planners tighten this (J at clamped-duration kinks is linearly
+        sensitive to μ*, and at C ≲ 64 rows the extra iterations are
+        nearly free).
       validate: host-side check of the per-instance sorting convention
         (syncs; off by default to keep the call device-resident).  The
         prefix-mask property is always enforced when the mask is
@@ -219,7 +226,7 @@ def smartfill_batched(
     theta, c, a, d, T, J, J_lin, _ = jax.vmap(
         lambda spv, x, w, b, mm: _solve(spv, x, w, b, mm,
                                         coarse, descent_iters, cap_iters,
-                                        fast),
+                                        fast, stol_rel=stol_rel),
         in_axes=(sp_axes, 0, 0, 0, 0),
     )(sp, Xm, Wm, Bv, m)
     return BatchedSmartFillSchedule(
@@ -261,7 +268,22 @@ def smartfill_hetero_batched(
         B = sp.B
     sp = collapse_homogeneous(sp)
     check_axes_unambiguous(sp, N, M, "sp")
+    orders, sp_p, Xp, Wp = hetero_order_batch(sp, Xm, Wm, m, B)
+    sched = smartfill_batched(sp_p, Xp, Wp, B=B, active=active, **kwargs)
+    return orders, sched
 
+
+def hetero_order_batch(sp, Xm, Wm, m, B):
+    """Per-instance §7 order heuristic + batch permutation (host-side).
+
+    The shared prep of ``smartfill_hetero_batched`` and the fleet's
+    class-aggregate planner: for each padded instance compute the
+    SJF-by-normalized-size order over its live prefix, then permute
+    rows and per-job speedup leaves accordingly.  ``Xm``/``Wm``/``m``
+    follow ``_prepare``'s conventions (prefix-live padded rows).
+    Returns ``(orders, sp_p, Xp, Wp)`` ready for any batched solver.
+    """
+    N, M = Xm.shape
     Xh = np.asarray(Xm)
     Wh = np.asarray(Wm)
     ms = np.asarray(m)
@@ -301,8 +323,7 @@ def smartfill_hetero_batched(
         return l
 
     sp_p = jax.tree_util.tree_map(permute_leaf, sp)
-    sched = smartfill_batched(sp_p, Xp, Wp, B=B, active=active, **kwargs)
-    return orders, sched
+    return orders, sp_p, Xp, Wp
 
 
 def smartfill_allocations_batched(

@@ -58,11 +58,13 @@ from jax import lax
 __all__ = [
     "SimResult",
     "EnsembleResult",
+    "FluidClassResult",
     "n_events_for",
     "simulate_policy",
     "simulate_policy_device",
     "simulate_policy_reference",
     "simulate_ensemble",
+    "simulate_fluid_classes",
     "schedule_policy",
     "smartfill_sim_policy",
 ]
@@ -333,6 +335,132 @@ def simulate_ensemble(sp, policies, X, W, arrival=None, B=None,
     names = tuple(getattr(p, "name", type(p).__name__) for p in policies)
     return EnsembleResult(J=J, T=T, finished=finished, n_events=ne,
                           policy_names=names)
+
+
+# ---------------------------------------------------------------------------
+# Fluid class-aggregate executor (many-jobs limit, core/classes.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FluidClassResult:
+    """Outcome of the fluid class executor (host-materialized).
+
+    T[c] is the exhaustion time of class c (0 for empty classes);
+    J_jobs = Σ_c n⁰_c w_c T_c is the discrete objective under the
+    all-jobs-finish-at-exhaustion convention — the quantity
+    ``plan_classes`` optimizes; J_fluid = ∫ Σ_c w_c n_c(t) dt is the
+    fluid-limit objective with the continuously draining count
+    n_c(t) = R_c(t)/x_c (≤ J_jobs, since mass that drains early stops
+    accruing weight).  events is the (t, Θ) trace of aggregate
+    allocations per inter-event interval.
+    """
+
+    T: np.ndarray
+    J_fluid: float
+    J_jobs: float
+    finished: bool
+    events: list
+    n_events: int
+
+
+def _fluid_core(sp_agg, policy, R0, wx_ratio, W_agg, rtol, n_events):
+    """Traced fluid event loop over class aggregates.
+
+    Classes drain continuously: aggregate work R_c decreases at the
+    aggregate rate S_c(Θ_c) with S_c frozen at the initial counts (the
+    fluid limit holds the per-class speedup family fixed over a planning
+    horizon; completions shrink the *mass*, not the family).  Between
+    events allocations are constant, so the next event is the earliest
+    class exhaustion — at most C non-trivial events.  The weighted-count
+    integral over one interval is closed-form (n_c is affine in t):
+
+        ∫ w_c n_c dt = (w_c/x_c) ∫ R_c(t) dt
+                     = (w_c/x_c) (R_c·dt − S_c(Θ_c)·dt²/2).
+    """
+    dtype = R0.dtype
+    C = R0.shape[0]
+    real = R0 > 0
+    eps = jnp.finfo(dtype).eps
+    tol = jnp.maximum(rtol, 8.0 * eps) * jnp.maximum(
+        1.0, jnp.max(R0, initial=0.0))
+    zero = jnp.zeros((), dtype)
+
+    def step(carry, _):
+        t, R, T, Jf = carry
+        active = real & (R > 0)
+        theta = jnp.where(active, policy(R, W_agg, active), zero)
+        rates = jnp.where(active, sp_agg.s(theta), zero)
+        runnable = active & (rates > 0)
+        dt_c = jnp.min(jnp.where(runnable,
+                                 R / jnp.where(runnable, rates, 1.0),
+                                 jnp.inf))
+        live = jnp.isfinite(dt_c)
+        dt = jnp.where(live, dt_c, 0.0)
+        t_new = t + dt
+        dJ = jnp.sum(jnp.where(active,
+                               wx_ratio * (R * dt - rates * dt * dt / 2.0),
+                               0.0))
+        R2 = jnp.where(active, jnp.maximum(R - rates * dt, 0.0), R)
+        done_now = active & (R2 <= tol)
+        T = jnp.where(done_now, t_new, T)
+        R2 = jnp.where(done_now, zero, R2)
+        return (t_new, R2, T, Jf + dJ), (t, theta, live & active.any())
+
+    carry0 = (zero, jnp.where(real, R0, 0.0), jnp.zeros((C,), dtype), zero)
+    (_, R_end, T, Jf), (ts, thetas, valid) = lax.scan(
+        step, carry0, None, length=n_events)
+    finished = jnp.all(~real | (R_end <= 0))
+    return T, Jf, finished, ts, thetas, valid
+
+
+@partial(jax.jit, static_argnames=("n_events",))
+def _fluid_jit(sp_agg, policy, R0, wx_ratio, W_agg, rtol, n_events):
+    return _fluid_core(sp_agg, policy, R0, wx_ratio, W_agg, rtol, n_events)
+
+
+def simulate_fluid_classes(state, policy, rtol: float = 1e-12,
+                           max_events: int | None = None,
+                           trace: bool = True) -> FluidClassResult:
+    """Run a device-ready policy over class aggregates in the fluid limit.
+
+    ``state`` is a ``core.classes.ClassState``; ``policy`` must be a
+    jax-traceable ``(rem, w, active) → Θ`` pytree (``sched/policies.py``)
+    invoked with *aggregate* remaining work and *aggregate* weights
+    n_c·w_c — e.g. ``ClassSmartFillPolicy.from_classes(state)``.  Each
+    event completes at least one class, so the default budget 2C+8 is
+    ample.  Zero-count classes are inert (T = 0, never allocated).
+    """
+    from .classes import class_speedup
+
+    counts = np.asarray(state.counts, dtype=np.float64)
+    x = np.asarray(state.sizes, dtype=np.float64)
+    w = np.asarray(state.weights, dtype=np.float64)
+    C = counts.shape[0]
+    if C == 0:
+        return FluidClassResult(T=np.zeros(0), J_fluid=0.0, J_jobs=0.0,
+                                finished=True, events=[], n_events=0)
+    sp_agg = class_speedup(state.sp, jnp.asarray(counts))
+    live = counts > 0
+    R0 = jnp.asarray(np.where(live, counts * x, 0.0))
+    W_agg = jnp.asarray(np.where(live, counts * w, 0.0))
+    # guard the x=0 padding slots: R0 is 0 there, the ratio never used
+    wx = jnp.asarray(np.where(live, w / np.where(x > 0, x, 1.0), 0.0))
+    n_events = int(max_events or (2 * C + 8))
+    T, Jf, finished, ts, thetas, valid = _fluid_jit(
+        sp_agg, policy, R0, wx, W_agg, jnp.asarray(rtol, R0.dtype), n_events)
+    T = np.asarray(T)
+    J_jobs = float(np.sum(counts * w * T)) if bool(finished) else float("inf")
+    mask = np.asarray(valid)
+    events = []
+    if trace:
+        ts = np.asarray(ts)
+        thetas = np.asarray(thetas)
+        events = [(float(ts[i]), thetas[i].copy())
+                  for i in np.flatnonzero(mask)]
+    return FluidClassResult(
+        T=T, J_fluid=float(Jf) if bool(finished) else float("inf"),
+        J_jobs=J_jobs, finished=bool(finished), events=events,
+        n_events=int(mask.sum()))
 
 
 # ---------------------------------------------------------------------------

@@ -512,11 +512,23 @@ def _minimize_f_hinted(F_grid, F_chain, F_desc, B, coarse, descent_iters,
     inf = jnp.asarray(jnp.inf, dtype)
     fs = jnp.stack(fl)
     fs = jnp.where(jnp.isfinite(fs), fs, inf)
-    kk = jnp.clip(jnp.argmin(fs), 1, ws - 2)
+    # the window argmin may sit on a window *edge* (e.g. a boundary
+    # minimum at μ = B, where the new job takes the whole budget); the
+    # clipped triple below is then not a bracket (fm > edge value) and
+    # the descent can walk into an interior basin and discard the edge —
+    # keep the exactly-priced argmin as a final candidate, like
+    # ``_minimize_f`` keeps its grid argmin
+    kbest = jnp.argmin(fs)
+    mu_w, f_w = pts[kbest], fs[kbest]
+    kk = jnp.clip(kbest, 1, ws - 2)
     xa, xm, xb = pts[kk - 1], pts[kk], pts[kk + 1]
     fa, fm, fb = fs[kk - 1], fs[kk], fs[kk + 1]
     span0 = xb - xa
-    tol = jnp.asarray(4e-9, dtype) * span0    # ≈ φ^-40, the old default
+    # ≈ φ^-40 (the old default), except when the caller asks for a
+    # tighter vertex exit than the width exit would allow — the classes
+    # oracle pins J to 1e-8, which needs μ* located beyond 4e-9·span
+    tol = jnp.minimum(jnp.asarray(4e-9, dtype),
+                      jnp.asarray(stol_rel, dtype)) * span0
     # vertex-stability exit: F'(μ*) = 0, so at a smooth minimum a μ*
     # located to stol_rel·span leaves J within O((stol_rel·span)²·F'') —
     # negligible; at a segment-change *kink* the J error is linear in
@@ -537,7 +549,11 @@ def _minimize_f_hinted(F_grid, F_chain, F_desc, B, coarse, descent_iters,
         den = 2.0 * (d1 - d2)
         u_p = xm - ((xm - xa) * d1 - (xm - xb) * d2) / jnp.where(
             den != 0.0, den, 1.0)
-        ok_p = (den != 0.0) & jnp.isfinite(u_p) & (u_p > xa) & (u_p < xb)
+        # den < 0 ⟺ the fitted parabola is convex (vertex is a minimum);
+        # a concave fit (possible while the triple is not yet a bracket,
+        # fm above an edge value) puts u_p at the parabola's *maximum* —
+        # accepting it stalls the loop shaving slivers off the wrong side
+        ok_p = (den < 0.0) & jnp.isfinite(u_p) & (u_p > xa) & (u_p < xb)
         # a vertex that stopped moving IS convergence (for a quadratic
         # the vertex is exact at any bracket width — waiting for the
         # width tolerance would golden-step ~40 more times for nothing)
@@ -568,8 +584,8 @@ def _minimize_f_hinted(F_grid, F_chain, F_desc, B, coarse, descent_iters,
            jnp.zeros((), dtype=bool))
     _, xa, xm, xb, fa, fm, fb, lam, _ = lax.while_loop(cond, body, st0)
 
-    cand_mu = jnp.stack([xa, xm, xb])
-    cand_f = jnp.stack([fa, fm, fb])
+    cand_mu = jnp.stack([mu_w, xa, xm, xb])
+    cand_f = jnp.stack([f_w, fa, fm, fb])
     i = jnp.argmin(jnp.where(jnp.isfinite(cand_f), cand_f, jnp.inf))
     mu, val = cand_mu[i], cand_f[i]
     bad = ~(ok & jnp.isfinite(val))
@@ -578,9 +594,9 @@ def _minimize_f_hinted(F_grid, F_chain, F_desc, B, coarse, descent_iters,
 
 @partial(jax.jit,
          static_argnames=("coarse", "descent_iters", "cap_iters", "fast",
-                          "precise", "with_times"))
+                          "precise", "with_times", "stol_rel"))
 def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast,
-           lam0=None, precise=True, with_times=True):
+           lam0=None, precise=True, with_times=True, stol_rel=None):
     """Fixed-shape SmartFill core: lax.scan over iterations k = 1..M−1.
 
     Args:
@@ -607,6 +623,12 @@ def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast,
       with_times: static — False skips the back-substituted durations/
         T/J (returned as zeros); per-event policies only consume the
         allocation column.
+      stol_rel: static — override for the hinted minimizer's vertex-
+        stability exit (None ⇒ the size-tiered defaults below).  The
+        class-aggregation oracle passes ~1e-10: its instances are tiny
+        (C ≲ 64) and its differential contract (1e-8 rel J vs a host
+        recursion) is linearly sensitive to μ* at clamped-duration
+        kinks, so the extra descent iterations are worth buying.
 
     Returns (theta, c, a, durations, T, J, J_linear, lam) as device
     arrays, where lam[k] is iteration k's CAP dual λ* on the sorted
@@ -672,7 +694,8 @@ def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast,
             # are cheap at that size); large instances are certified by
             # J == J_linear, where the relaxed exit buys ~2× fewer evals
             small_m = precise and M < _APPROX_GRID_MIN_M
-            stol_rel = 3e-7 if small_m else 1e-4
+            stol_eff = ((3e-7 if small_m else 1e-4)
+                        if stol_rel is None else stol_rel)
             coarse_eff = max(coarse, 32) if small_m else coarse
             # the small-M grid is exact, so its ±2-cell re-pricing
             # window guards only descent-entry quality; at large M the
@@ -681,7 +704,7 @@ def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast,
             window = 5 if small_m else 3
             mu, _, lam_mz = _minimize_f_hinted(
                 chain[0], chain[1], chain[2], B, coarse_eff, descent_iters,
-                hint0, stol_rel=stol_rel, window=window)
+                hint0, stol_rel=stol_eff, window=window)
         else:
             mu, _ = _minimize_f(F, B, coarse, descent_iters)
         if chain is not None and not fast:
@@ -1072,6 +1095,7 @@ def smartfill_hetero(
     exchange_window: int = 1,
     batched_exchange: bool = True,
     fast_path: bool | None = None,
+    stol_rel: float | None = None,
 ) -> HeteroSmartFillSchedule:
     """SmartFill with per-job speedup functions (paper §7), device-resident.
 
@@ -1099,6 +1123,9 @@ def smartfill_hetero(
         ``_solve`` (device argmin, λ* warm-started from the incumbent
         order, two host syncs per step).  False falls back to the
         sequential per-candidate loop — the differential reference.
+      stol_rel: optional override for the μ* descent's vertex-stability
+        exit (see ``_solve``); ``core/classes.py`` passes ~1e-10 to meet
+        its 1e-8 differential contract on C ≲ 64 aggregates.
 
     Returns a HeteroSmartFillSchedule; ``.order`` maps schedule rows
     back to the caller's job indices.
@@ -1128,7 +1155,8 @@ def smartfill_hetero(
     def run_one(perm):
         p = jnp.asarray(perm)
         return _solve(_permute_speedup(sp, p), x[p], w[p], B, M,
-                      coarse, descent_iters, cap_iters, fast)
+                      coarse, descent_iters, cap_iters, fast,
+                      stol_rel=stol_rel)
 
     init = normalized_order(sp, x, w, B)
     if batched_exchange and exchange_passes > 0 and M > 1:
@@ -1141,7 +1169,7 @@ def smartfill_hetero(
             out = jax.vmap(
                 lambda spv, xv, wv: _solve(spv, xv, wv, B, M, coarse,
                                            descent_iters, cap_iters, fast,
-                                           lam0),
+                                           lam0, stol_rel=stol_rel),
                 in_axes=(sp_axes, 0, 0))(spn, x[perms], w[perms])
             return out[5], out[7]
 

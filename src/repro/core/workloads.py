@@ -35,7 +35,8 @@ import numpy as np
 
 from .speedup import RegularSpeedup, StackedSpeedup
 
-__all__ = ["WorkloadBatch", "sample_workloads", "FAMILIES"]
+__all__ = ["WorkloadBatch", "ClassWorkloadBatch", "sample_workloads",
+           "sample_class_workloads", "FAMILIES"]
 
 FAMILIES = ("power", "shifted", "log", "neg_power", "saturating")
 
@@ -183,3 +184,97 @@ def sample_workloads(
             sigma[k] = np.concatenate([sk, np.repeat(sk[-1], M - mk)])
         sp = _family_speedup(A, w, gamma, sigma, B)
     return WorkloadBatch(X=X, W=W, arrival=ARR, m=m, B=float(B), sp=sp)
+
+
+# ---------------------------------------------------------------------------
+# Class-structured ensembles (core/classes.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClassWorkloadBatch:
+    """K class-aggregated instances: per-class counts, sizes, weights.
+
+    Zero-count classes are legitimate (and sampled by default) — the
+    planner treats them as inert padding, which is exactly what the
+    differential suite needs to exercise.  ``sp`` leaves are (K, C):
+    every class of every instance draws its own speedup family.
+    """
+
+    counts: np.ndarray       # (K, C) job counts — integral floats, 0 allowed
+    sizes: np.ndarray        # (K, C) per-job remaining size within the class
+    weights: np.ndarray      # (K, C) per-job weight within the class
+    B: float
+    sp: RegularSpeedup | StackedSpeedup     # (K, C) leaves
+
+    def __len__(self) -> int:
+        return int(self.counts.shape[0])
+
+    @property
+    def jobs(self) -> np.ndarray:
+        """(K,) total job count per instance."""
+        return self.counts.sum(axis=1)
+
+    def state(self, k: int):
+        """``ClassState`` view of instance ``k`` (single-instance APIs)."""
+        from .classes import ClassState
+
+        sp = self.sp
+        if isinstance(sp, StackedSpeedup):
+            sp_k = StackedSpeedup(A=sp.A[k], w=sp.w[k], gamma=sp.gamma[k],
+                                  sigma=sp.sigma[k], B=sp.B)
+        else:
+            sp_k = RegularSpeedup(A=sp.A[k], w=sp.w[k], gamma=sp.gamma[k],
+                                  sigma=sp.sigma, B=sp.B)
+        return ClassState(counts=self.counts[k], sizes=self.sizes[k],
+                          weights=self.weights[k], sp=sp_k, B=self.B)
+
+
+def sample_class_workloads(
+    seed: int,
+    K: int,
+    C: int,
+    *,
+    B: float = 10.0,
+    family=FAMILIES,
+    count_range: tuple = (0, 50),
+    size_range: tuple = (0.5, 20.0),
+    weights: str = "random",
+) -> ClassWorkloadBatch:
+    """Draw K class-structured instances from one seed.
+
+    Args:
+      seed, K, C: rng seed, instance count, classes per instance.
+      B: server bandwidth recorded on the batch (and on ``sp``).
+      family: name(s) from ``FAMILIES`` to mix uniformly per class
+        (default: all five, so σ=−1 saturating rows mix with σ=+1).
+      count_range: (lo, hi) inclusive per-class job counts; lo = 0
+        samples genuinely empty classes.  Each instance is re-rolled to
+        keep at least one live class.
+      size_range: uniform per-job size support within a class.
+      weights: 'random' → independent U(0.1, 5) per class; 'slowdown' →
+        w = 1/x.
+
+    Returns a ClassWorkloadBatch; feed ``counts/sizes/weights/sp``
+    straight to ``plan_classes_batched`` or ``.state(k)`` to the
+    single-instance planner / fluid simulator.
+    """
+    rng = np.random.default_rng(seed)
+    lo, hi = count_range
+    if not (0 <= lo <= hi):
+        raise ValueError("count_range must satisfy 0 ≤ lo ≤ hi")
+    counts = rng.integers(lo, hi + 1, (K, C)).astype(np.float64)
+    for k in range(K):                       # keep every instance non-empty
+        if not (counts[k] > 0).any():
+            counts[k, rng.integers(0, C)] = 1.0
+    sizes = rng.uniform(*size_range, (K, C))
+    if weights == "slowdown":
+        W = 1.0 / sizes
+    elif weights == "random":
+        W = rng.uniform(0.1, 5.0, (K, C))
+    else:
+        raise ValueError("weights must be 'slowdown' or 'random'")
+    A, w, gamma, sigma = (arr.reshape(K, C) for arr in
+                          _sample_family_params(rng, K * C, family, B))
+    sp = _family_speedup(A, w, gamma, sigma, B)
+    return ClassWorkloadBatch(counts=counts, sizes=sizes, weights=W,
+                              B=float(B), sp=sp)

@@ -53,7 +53,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.core.batch import (BatchedSmartFillSchedule, _prepare,
-                              check_axes_unambiguous,
+                              check_axes_unambiguous, hetero_order_batch,
                               validate_padded_instances)
 from repro.core.simulator import (EnsembleResult, _check_policy_budget,
                                   _sim_core, n_events_for)
@@ -65,6 +65,7 @@ from .sharding import active_mesh
 __all__ = [
     "active_fleet_mesh",
     "fleet_mesh",
+    "plan_classes_sharded",
     "plan_sharded",
     "simulate_ensemble_sharded",
 ]
@@ -250,7 +251,7 @@ def _run_sharded(mesh: Mesh, fn, batched, shared, N: int,
 
 @functools.lru_cache(maxsize=256)
 def _plan_fn(sp_key, coarse: int, descent_iters: int, cap_iters: int,
-             fast: bool):
+             fast: bool, stol_rel: float | None = None):
     """Cached instance-map for planning: one stable callable per static
     configuration, so ``_sharded_program`` can key its jit cache on it."""
 
@@ -260,7 +261,8 @@ def _plan_fn(sp_key, coarse: int, descent_iters: int, cap_iters: int,
         def one(x1, w1, b1, m1, sp_b1):
             spv = _merge_leaves(sp_key, sp_b1, shared)
             return _solve(spv, x1, w1, b1, m1,
-                          coarse, descent_iters, cap_iters, fast)
+                          coarse, descent_iters, cap_iters, fast,
+                          stol_rel=stol_rel)
 
         return jax.vmap(one)(x, w, b, mm, sp_b)
 
@@ -306,6 +308,7 @@ def plan_sharded(
     cap_iters: int = 64,
     fast_path: bool | None = None,
     validate: bool = False,
+    stol_rel: float | None = None,
 ) -> BatchedSmartFillSchedule:
     """``smartfill_batched`` with the instance axis sharded over a mesh.
 
@@ -350,13 +353,57 @@ def plan_sharded(
         _pad_rows(m, total, edge=False),        # m = 0 ⇒ inert instance
         tuple(_pad_rows(l, total, edge=True) for l in split.batched),
     )
-    fn = _plan_fn(split.key, coarse, descent_iters, cap_iters, fast)
+    fn = _plan_fn(split.key, coarse, descent_iters, cap_iters, fast,
+                  stol_rel)
     theta, c, a, d, T, J, J_lin, _ = _run_sharded(
         mesh, fn, batched, split.shared, N, chunk_size)
     return BatchedSmartFillSchedule(
         theta=theta, c=c, a=a, durations=d, T=T,
         J=J, J_linear=J_lin, active=active, m=m,
     )
+
+
+def plan_classes_sharded(
+    counts,
+    sizes,
+    weights,
+    sp,
+    B=None,
+    *,
+    mesh: Mesh | None = None,
+    chunk_size: int | None = None,
+    **kwargs,
+):
+    """Class-aggregated batched planning, instance axis sharded over a mesh.
+
+    The fleet front door for class aggregates (``core/classes.py``): the
+    host-side prep is byte-identical to ``plan_classes_batched`` —
+    live-first compaction of the (K, C) class slots, the aggregation
+    transform S_c(Θ) = n_c·s_c(Θ/n_c) on the speedup leaves, and the
+    per-instance normalized-size order — and the aggregate batch then
+    rides ``plan_sharded``.  Instance-by-instance the computation is
+    identical to the single-device path, so ``(orders, sched)`` match
+    ``plan_classes_batched`` exactly (the differential guarantee
+    tests/core/test_classes.py pins under the forced-host-devices mesh).
+    μ* precision defaults match ``plan_classes_batched`` for the same
+    reason.
+    """
+    from repro.core.classes import compact_aggregate_batch
+
+    if B is None:
+        B = sp.B
+    kwargs.setdefault("coarse", 64)
+    kwargs.setdefault("descent_iters", 96)
+    kwargs.setdefault("stol_rel", 1e-10)
+    perm, sp_agg, X, W = compact_aggregate_batch(counts, sizes, weights, sp)
+    Xm, Wm, active, m = _prepare(X, W, None)
+    sp_agg = collapse_homogeneous(sp_agg)
+    check_axes_unambiguous(sp_agg, *Xm.shape, "sp")
+    orders, sp_p, Xp, Wp = hetero_order_batch(sp_agg, Xm, Wm, m, B)
+    sched = plan_sharded(sp_p, Xp, Wp, B=B, active=active, mesh=mesh,
+                         chunk_size=chunk_size, **kwargs)
+    orders = np.take_along_axis(perm, orders, axis=1)
+    return orders, sched
 
 
 # ---------------------------------------------------------------------------

@@ -64,6 +64,7 @@ __all__ = [
     "Policy",
     "SmartFillPolicy",
     "HeteroSmartFillPolicy",
+    "ClassSmartFillPolicy",
     "HeSRPTPolicy",
     "EquiPolicy",
     "SRPT1Policy",
@@ -401,6 +402,58 @@ class HeteroSmartFillPolicy(Policy):
         col = jnp.where(jnp.arange(M) < m, col, 0.0)
         out = jnp.zeros_like(rem).at[order].set(col)
         return jnp.where(active, out, 0.0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ClassSmartFillPolicy(HeteroSmartFillPolicy):
+    """Re-planning SmartFill over *class aggregates* (core/classes.py).
+
+    State is aggregate: rem_c = remaining class work R_c (initially
+    n_c·x_c), w_c = aggregate weight n_c·w_c, under the class-aggregated
+    speedup S_c(Θ) = n_c·s_c(Θ/n_c) — which stays inside the regular
+    family (``class_speedup``), so the whole §7 per-job machinery applies
+    verbatim with C rows instead of M.  Inherits ``HeteroSmartFillPolicy``
+    unchanged; only construction differs: ``from_classes`` applies the
+    aggregation transform host-side and (by default) pins the class
+    completion order from the one-shot ``plan_classes`` plan, so running
+    it through ``simulate_fluid_classes`` executes the plan exactly
+    (time consistency, Prop. 7 over aggregates).  ``pin=False`` keeps
+    the per-event re-ranking ablation.  Zero-count classes carry R = 0
+    and are never active.
+    """
+
+    name = "classSF"
+
+    @classmethod
+    def from_classes(cls, state, B: float | None = None, pin: bool = True,
+                     cache_plan: bool = False, **kwargs):
+        """Build from a ``ClassState``.
+
+        ``pin=True`` ranks classes by the one-shot plan's completion
+        order (empty classes rank last — they are never active anyway);
+        ``cache_plan=True`` additionally stores the plan's allocation
+        table for O(C) per-event lookup instead of a re-solve.
+        """
+        from repro.core.classes import aggregate_classes, plan_classes
+
+        B = float(state.B if B is None else B)
+        sp_agg, _, _ = aggregate_classes(state)
+        rank = None
+        theta = None
+        if pin or cache_plan:
+            plan = plan_classes(state, B=B)
+            C = state.C
+            r = np.full(C, C, dtype=np.float64)
+            r[np.asarray(plan.order)] = np.arange(plan.order.size)
+            rank = jnp.asarray(r)
+            if cache_plan:
+                kl = plan.order.size
+                th = np.zeros((C, C))
+                if kl:
+                    th[:kl, :kl] = np.asarray(plan.sched.theta)
+                theta = jnp.asarray(th)
+        return cls(sp=sp_agg, B=B, rank=rank, theta=theta, **kwargs)
 
 
 @jax.tree_util.register_pytree_node_class

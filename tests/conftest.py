@@ -5,7 +5,93 @@ precision, and model code pins its own dtypes explicitly so it is
 unaffected.  (XLA_FLAGS / device-count manipulation is deliberately NOT
 done here — smoke tests must see the real single-device CPU backend; only
 launch/dryrun.py requests 512 placeholder devices, in its own process.)
+
+Also provides ``--forbid-skips``: CI's tier-1 job passes it so that a
+skipped or xfailed test cannot slip through the green build unnoticed —
+a silently-skipping differential test is indistinguishable from a
+passing one in the summary line, which is exactly how coverage rots.
+Two skip categories are waived (and printed, never hidden):
+
+* tests carrying the ``slow`` marker — they are deselected from tier-1
+  anyway, but someone running ``-m slow --forbid-skips`` locally should
+  not be failed for a skip inside the slow sweep;
+* module-level ``importorskip('hypothesis')`` — hypothesis is a
+  dev-only extra; CI installs ``.[dev]`` so this waiver is inert there,
+  it only keeps the flag usable on minimal local installs.
 """
+import re
+
 import jax
 
 jax.config.update("jax_enable_x64", True)
+
+# The one optional dependency a minimal install may lack.  Keep this
+# pattern narrow: waiving every "could not import" would let a broken
+# package import masquerade as an optional-dep skip.
+_WAIVED_SKIP = re.compile(r"could not import 'hypothesis'")
+
+
+def _skip_reason(report):
+    # Skip reports carry (path, lineno, "Skipped: reason") in longrepr.
+    if isinstance(report.longrepr, tuple):
+        reason = report.longrepr[2]
+    else:
+        reason = str(report.longrepr)
+    return reason.removeprefix("Skipped: ")
+
+
+class _ForbidSkips:
+    def __init__(self):
+        self.offenders = []
+        self.waived = []
+
+    def _classify(self, nodeid, reason, keywords=()):
+        if "slow" in keywords or _WAIVED_SKIP.search(reason):
+            self.waived.append((nodeid, reason))
+        else:
+            self.offenders.append((nodeid, reason))
+
+    def pytest_collectreport(self, report):
+        # Module-level pytest.importorskip lands here, not in runtest.
+        if report.skipped:
+            self._classify(report.nodeid, _skip_reason(report))
+
+    def pytest_runtest_logreport(self, report):
+        if getattr(report, "wasxfail", None) is not None:
+            # xfailed (outcome 'skipped') and xpassed (outcome 'passed',
+            # non-strict) both mean a known-broken test is being carried.
+            if report.when == "call":
+                self._classify(report.nodeid, f"xfail: {report.wasxfail}",
+                               report.keywords)
+        elif report.skipped:
+            self._classify(report.nodeid, _skip_reason(report),
+                           report.keywords)
+
+    def pytest_terminal_summary(self, terminalreporter):
+        tr = terminalreporter
+        if self.waived:
+            tr.section("forbid-skips: waived (slow marker / optional dep)")
+            for nodeid, reason in self.waived:
+                tr.line(f"  {nodeid}: {reason}")
+        if self.offenders:
+            tr.section("forbid-skips: unaccounted skips/xfails", sep="!")
+            for nodeid, reason in self.offenders:
+                tr.line(f"  {nodeid}: {reason}")
+            tr.line(f"{len(self.offenders)} test(s) skipped or xfailed "
+                    "outside the slow marker; failing the run.")
+
+    def pytest_sessionfinish(self, session, exitstatus):
+        if self.offenders and session.exitstatus == 0:
+            session.exitstatus = 1
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--forbid-skips", action="store_true", default=False,
+        help="fail the run if any test skips or xfails outside the slow "
+             "marker (CI tier-1 passes this)")
+
+
+def pytest_configure(config):
+    if config.getoption("--forbid-skips"):
+        config.pluginmanager.register(_ForbidSkips(), "forbid-skips-guard")

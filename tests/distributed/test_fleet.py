@@ -238,6 +238,29 @@ def test_plan_parity_hetero_per_job_speedups():
     _assert_plan_parity(ref, sh, jnp.float64)
 
 
+def test_plan_parity_class_aggregates():
+    """Class-aggregated fleets shard: ``plan_classes_sharded`` must
+    reproduce ``plan_classes_batched`` bit-for-bit — identical orders
+    (the host-side compaction + normalized-size ordering is shared
+    code) and identical J/θ/T (the solve is ``plan_sharded``'s, which
+    is instance-by-instance the single-device program).  Zero-count
+    classes ride along as inert padding."""
+    from repro.core import plan_classes_batched, sample_class_workloads
+    from repro.distributed import plan_classes_sharded
+
+    wl = sample_class_workloads(31, K=K, C=5, B=B)
+    counts = wl.counts.copy()
+    counts[2] = 0.0
+    counts[2, 3] = 4.0           # one nearly-empty instance in the batch
+    ref_orders, ref = plan_classes_batched(counts, wl.sizes, wl.weights,
+                                           wl.sp, B=B)
+    sh_orders, sh = plan_classes_sharded(counts, wl.sizes, wl.weights,
+                                         wl.sp, B=B, mesh=fleet_mesh(),
+                                         chunk_size=8)
+    np.testing.assert_array_equal(sh_orders, ref_orders)
+    _assert_plan_parity(ref, sh, jnp.float64)
+
+
 def test_ensemble_parity_hetero_policies():
     """HeteroSmartFillPolicy + the retired WMR baseline shard with their
     (K, M) per-job leaves through the ensemble runner."""
