@@ -39,7 +39,7 @@ import shutil
 import sys
 
 _SECTIONS = ("calibration", "gwf", "smartfill_single", "smartfill_batched",
-             "simulator", "hetero", "classes", "fleet")
+             "simulator", "hetero", "classes", "robust", "fleet")
 _DEVICE_ROW = re.compile(r"^fleet_.*_D(\d+)$")
 _DEFAULT_BASELINE = pathlib.Path(__file__).parent / "BENCH_baseline.json"
 

@@ -324,6 +324,81 @@ def bench_classes(quick: bool = False):
     return rows
 
 
+def bench_robust(quick: bool = False):
+    """Robustness-layer rows: what the control plane pays to be safe.
+
+    ``robust_sf_ensemble_*``     — plain SmartFill ensemble (the
+        baseline the certificate overhead is measured against);
+    ``robust_cert_ensemble_*``   — the same ensemble behind the full
+        ``DegradingPolicy`` ladder (per-event certificates on every
+        rung + the GWF-static and EQUI fallbacks evaluated eagerly) —
+        the "certificates are nearly free next to the per-event DP"
+        claim, quoted as ``robust_certificate_overhead_x``;
+    ``robust_faulted_ensemble_*`` — the fault-aware engine under a
+        seeded chaos ensemble (budget preemptions + failures +
+        stragglers, one trace per workload), in events/sec;
+    ``robust_degraded_ensemble_*`` — a sabotaged primary forcing every
+        event onto the GWF-static rung; its J against the healthy
+        re-planning run is ``robust_degraded_vs_replan_J_gap_pct`` —
+        the scheduling cost of running degraded instead of re-solving.
+    """
+    from repro.core.workloads import sample_fault_traces
+    from repro.robust import DegradingPolicy, SaboteurPolicy
+    from repro.sched.policies import GWFStaticPolicy
+
+    K, M = (32, 12) if quick else (64, 16)
+    sp = _SPS["regular"]
+    wl = sample_workloads(21, K=K, M=M, B=B, m_range=(max(2, M // 2), M))
+    rows = []
+
+    def ens(policies, faults=None):
+        def run():
+            out = simulate_ensemble(sp, policies, wl.X, wl.W, B=B,
+                                    faults=faults)
+            jax.block_until_ready(out.J)
+            return out
+
+        out = run()                             # compile + warm
+        dt = _time(run, reps=3, warmup=1) / 1e6
+        events = int(np.asarray(out.n_events).sum())
+        return out, dt, events
+
+    plain = (SmartFillPolicy(sp, B=B),)
+    out_p, dt_p, ev_p = ens(plain)
+    rows.append({"name": f"robust_sf_ensemble_K{K}_M{M}",
+                 "us_per_call": dt_p * 1e6, "events_per_sec": ev_p / dt_p,
+                 "events": ev_p, "instances_per_sec": K / dt_p})
+
+    certified = (DegradingPolicy.ladder(sp, B=B),)
+    out_c, dt_c, ev_c = ens(certified)
+    rows.append({"name": f"robust_cert_ensemble_K{K}_M{M}",
+                 "us_per_call": dt_c * 1e6, "events_per_sec": ev_c / dt_c,
+                 "events": ev_c, "instances_per_sec": K / dt_c})
+
+    traces = sample_fault_traces(22, K, M, B=B, horizon=6.0,
+                                 preempt_rate=0.5, fail_rate=0.3,
+                                 straggle_rate=0.3)
+    out_f, dt_f, ev_f = ens(plain, faults=traces)
+    rows.append({"name": f"robust_faulted_ensemble_K{K}_M{M}",
+                 "us_per_call": dt_f * 1e6, "events_per_sec": ev_f / dt_f,
+                 "events": ev_f, "instances_per_sec": K / dt_f})
+
+    degraded = (DegradingPolicy(rungs=(
+        SaboteurPolicy(SmartFillPolicy(sp, B=B), mode="nan"),
+        GWFStaticPolicy(sp, B=B),
+        EquiPolicy(B))),)
+    out_d, dt_d, ev_d = ens(degraded)
+    J_p = np.asarray(out_p.J)[0]
+    J_d = np.asarray(out_d.J)[0]
+    ok = np.isfinite(J_p) & np.isfinite(J_d) & (J_p > 0)
+    gap_pct = float(np.median((J_d[ok] - J_p[ok]) / J_p[ok]) * 100.0)
+    rows.append({"name": f"robust_degraded_ensemble_K{K}_M{M}",
+                 "us_per_call": dt_d * 1e6, "events_per_sec": ev_d / dt_d,
+                 "events": ev_d, "instances_per_sec": K / dt_d,
+                 "J_gap_pct": gap_pct})
+    return rows
+
+
 FLEET_DEVICE_COUNTS = (1, 2, 4, 8)
 
 
@@ -437,6 +512,7 @@ def collect(quick: bool = False):
     batched = bench_smartfill_batched(n_instances=n, ms=batched_ms)
     simulator = bench_simulator(K=64 if quick else 256, M=16)
     classes = bench_classes(quick=quick)
+    robust = bench_robust(quick=quick)
     fleet = bench_fleet(quick=quick)
     summary = {}
     for r in batched:
@@ -481,6 +557,23 @@ def collect(quick: bool = False):
     for r in classes:
         if "events_per_sec" in r:
             summary["class_fluid_events_per_sec"] = r["events_per_sec"]
+    rob_plain = next((r for r in robust
+                      if r["name"].startswith("robust_sf_ensemble")), None)
+    rob_cert = next((r for r in robust
+                     if r["name"].startswith("robust_cert_ensemble")), None)
+    if rob_plain and rob_cert:
+        # the certificate-overhead headline: wrapped / unwrapped wall time
+        summary["robust_certificate_overhead_x"] = (
+            rob_cert["us_per_call"] / rob_plain["us_per_call"])
+    rob_faulted = next((r for r in robust
+                        if r["name"].startswith("robust_faulted")), None)
+    if rob_faulted:
+        summary["robust_faulted_events_per_sec"] = (
+            rob_faulted["events_per_sec"])
+    rob_deg = next((r for r in robust
+                    if r["name"].startswith("robust_degraded")), None)
+    if rob_deg:
+        summary["robust_degraded_vs_replan_J_gap_pct"] = rob_deg["J_gap_pct"]
     # weak-scaling efficiency: throughput relative to D=1 (1.0 = ideal;
     # on an oversubscribed CPU host the curve flattens at the physical
     # core count — the rows pin the mechanism, not the silicon)
@@ -499,6 +592,7 @@ def collect(quick: bool = False):
         "simulator": simulator,
         "hetero": hetero,
         "classes": classes,
+        "robust": robust,
         "fleet": fleet,
         "summary": summary,
         "config": {"B": B, "n_instances": n, "x64": jax.config.jax_enable_x64,
@@ -515,7 +609,8 @@ def bench_rows(quick: bool = False):
     report = collect(quick=quick)
     return (report["gwf"] + report["smartfill_single"]
             + report["smartfill_batched"] + report["simulator"]
-            + report["hetero"] + report["classes"] + report["fleet"])
+            + report["hetero"] + report["classes"] + report["robust"]
+            + report["fleet"])
 
 
 def main():
@@ -535,7 +630,7 @@ def main():
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     for sec in ("smartfill_single", "smartfill_batched", "simulator",
-                "hetero", "classes", "fleet"):
+                "hetero", "classes", "robust", "fleet"):
         for r in report[sec]:
             extra = (f"  {r['instances_per_sec']:.0f} inst/s"
                      if "instances_per_sec" in r else "")

@@ -31,6 +31,28 @@ pytree) around a ``jax.vmap`` over workloads, inside a single
 any pytree leaf of ``sp`` (or of a policy) with leading dimension K is
 vmapped alongside the workload arrays.
 
+**Fault schedules** (``faults=`` on every executor): a ``FaultTrace``
+holds a sorted sequence of timed control-plane events folded into the
+event horizon exactly like arrivals — the step advances to exactly
+``min(t + dt_completion, next_arrival, next_fault)``:
+
+  * ``KIND_BUDGET``    — the server budget becomes ``value`` (preemption
+    shrinks B(t), recovery restores it).  Policies are invoked with the
+    *current* budget (the optional 4th argument of the policy
+    interface), so re-planning policies re-solve under B(t) and cached
+    plans invalidate instead of executing a stale table.
+  * ``KIND_FAILURE``   — job ``job`` crashes and restarts, losing the
+    fraction ``value`` of its *completed* work (rem += value·(x − rem)).
+    Completions are resolved first: a failure coincident with (or after)
+    a job's completion is a no-op.
+  * ``KIND_STRAGGLER`` — job ``job``'s effective service rate is scaled
+    by ``value`` from now on (degraded speedup the planner cannot see);
+    ``value = 1`` is recovery.
+
+Both executors implement identical fault semantics, so the host oracle
+remains the differential pin for the faulted device engine
+(tests/robust/test_faults.py).
+
 Engine throughput is dominated by the per-event policy call — for
 ``SmartFillPolicy`` that is a full re-plan, so the events/sec reported
 by ``benchmarks/perf_core.py`` scale directly with the solver hot path
@@ -59,6 +81,11 @@ __all__ = [
     "SimResult",
     "EnsembleResult",
     "FluidClassResult",
+    "FaultTrace",
+    "KIND_BUDGET",
+    "KIND_FAILURE",
+    "KIND_STRAGGLER",
+    "budget_trace",
     "n_events_for",
     "simulate_policy",
     "simulate_policy_device",
@@ -104,15 +131,203 @@ def n_events_for(M: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Fault traces (dynamic budgets, failures, stragglers)
+# ---------------------------------------------------------------------------
+
+KIND_BUDGET = 0      # value = new server budget B(t)
+KIND_FAILURE = 1     # job restarts, losing fraction `value` of done work
+KIND_STRAGGLER = 2   # job's effective rate is scaled by `value` from now on
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultTrace:
+    """Seeded, replayable control-plane fault schedule.
+
+    times:  (S,) or (K, S) non-decreasing event times (+inf = padding).
+    kinds:  int array, same shape — KIND_BUDGET / KIND_FAILURE /
+            KIND_STRAGGLER per event (ignored on +inf padding slots).
+    jobs:   int array, same shape — target job for FAILURE / STRAGGLER
+            (ignored for BUDGET; use 0).
+    values: float array, same shape — payload: the new budget (> 0), the
+            lost fraction of completed work in [0, 1], or the new rate
+            multiplier (> 0; a hard-zero stall would deadlock the host
+            oracle while the device engine pads J to +inf, so full stops
+            are rejected by ``validate``).
+
+    The 2-D form carries one trace per workload for ensemble runs;
+    ``instance(k)`` extracts a single row.  Build via
+    ``core.workloads.sample_fault_traces`` (seeded chaos) or
+    ``budget_trace`` (pure B(t) steps).
+    """
+
+    times: np.ndarray
+    kinds: np.ndarray
+    jobs: np.ndarray
+    values: np.ndarray
+
+    def __post_init__(self):
+        object.__setattr__(self, "times", np.asarray(self.times, np.float64))
+        object.__setattr__(self, "kinds", np.asarray(self.kinds, np.int32))
+        object.__setattr__(self, "jobs", np.asarray(self.jobs, np.int32))
+        object.__setattr__(self, "values", np.asarray(self.values, np.float64))
+
+    @property
+    def S(self) -> int:
+        return int(self.times.shape[-1])
+
+    @property
+    def batched(self) -> bool:
+        return self.times.ndim == 2
+
+    def instance(self, k: int) -> "FaultTrace":
+        if not self.batched:
+            return self
+        return FaultTrace(self.times[k], self.kinds[k], self.jobs[k],
+                          self.values[k])
+
+    def validate(self, M: int) -> None:
+        """Host-side shape/semantics checks; raises ValueError."""
+        t, k, j, v = self.times, self.kinds, self.jobs, self.values
+        if t.ndim not in (1, 2):
+            raise ValueError(f"FaultTrace.times must be 1-D or 2-D, got "
+                             f"shape {t.shape}")
+        if not (k.shape == t.shape == j.shape == v.shape):
+            raise ValueError("FaultTrace arrays must share one shape, got "
+                             f"times{t.shape} kinds{k.shape} jobs{j.shape} "
+                             f"values{v.shape}")
+        if np.isnan(t).any() or (t < 0).any():
+            raise ValueError("FaultTrace.times must be ≥ 0 (NaN forbidden; "
+                             "+inf = padding)")
+        if not np.all(t[..., :-1] <= t[..., 1:]):
+            raise ValueError("FaultTrace.times must be non-decreasing "
+                             "per trace (inf-padded at the end)")
+        live = np.isfinite(t)
+        if not np.isin(k[live], (KIND_BUDGET, KIND_FAILURE,
+                                 KIND_STRAGGLER)).all():
+            raise ValueError("FaultTrace.kinds must be KIND_BUDGET/"
+                             "KIND_FAILURE/KIND_STRAGGLER")
+        targeted = live & np.isin(k, (KIND_FAILURE, KIND_STRAGGLER))
+        if ((j[targeted] < 0) | (j[targeted] >= M)).any():
+            raise ValueError(f"FaultTrace.jobs must lie in [0, {M}) for "
+                             "failure/straggler events")
+        vb = v[live & (k == KIND_BUDGET)]
+        if (~np.isfinite(vb) | (vb <= 0)).any():
+            raise ValueError("budget events need a finite value > 0")
+        vf = v[live & (k == KIND_FAILURE)]
+        if (~np.isfinite(vf) | (vf < 0) | (vf > 1)).any():
+            raise ValueError("failure events need a loss fraction in [0, 1]")
+        vs = v[live & (k == KIND_STRAGGLER)]
+        if (~np.isfinite(vs) | (vs <= 0)).any():
+            raise ValueError("straggler events need a finite rate "
+                             "multiplier > 0")
+
+
+def budget_trace(times, values) -> FaultTrace:
+    """Pure budget schedule B(t): step to ``values[i]`` at ``times[i]``."""
+    times = np.asarray(times, np.float64)
+    values = np.asarray(values, np.float64)
+    return FaultTrace(times=times, kinds=np.zeros(times.shape, np.int32),
+                      jobs=np.zeros(times.shape, np.int32), values=values)
+
+
+def _prepared_faults(faults: FaultTrace, M: int, dtype, K: int | None = None):
+    """Validate and lower a FaultTrace to device arrays.
+
+    Appends one +inf sentinel event so the scan can index ``times[fi]``
+    with ``fi`` up to S without out-of-bounds clamping surprises; with
+    ``K`` given, 1-D traces are broadcast so every fault leaf is
+    unambiguously (K, S+1)-batched for vmap/shard_map.
+    """
+    faults.validate(M)
+    t = faults.times
+    pad = np.full(t.shape[:-1] + (1,), np.inf)
+    t = np.concatenate([t, pad], axis=-1)
+    k = np.concatenate([faults.kinds,
+                        np.full(pad.shape, -1, np.int32)], axis=-1)
+    j = np.concatenate([faults.jobs, np.zeros(pad.shape, np.int32)], axis=-1)
+    v = np.concatenate([faults.values, np.zeros(pad.shape)], axis=-1)
+    if K is not None:
+        if t.ndim == 1:
+            t, k, j, v = (np.broadcast_to(a, (K,) + a.shape).copy()
+                          for a in (t, k, j, v))
+        elif t.shape[0] != K:
+            raise ValueError(f"batched FaultTrace has {t.shape[0]} traces "
+                             f"for K={K} workloads")
+    elif t.ndim != 1:
+        raise ValueError("single-instance executors need a 1-D FaultTrace "
+                         "(use .instance(k) to pick one row)")
+    return (jnp.asarray(t, dtype), jnp.asarray(k), jnp.asarray(j),
+            jnp.asarray(v, dtype))
+
+
+def _fault_n_events(M: int, S: int) -> int:
+    """Default event budget with faults: each fault consumes one event
+    and each failure can force one extra completion."""
+    return n_events_for(M) + 2 * int(S)
+
+
+# ---------------------------------------------------------------------------
+# Input validation (front-door satellite): negative / non-finite sizes,
+# weights or budgets used to flow into the scan and surface as NaN J.
+# ---------------------------------------------------------------------------
+
+def _concrete(a):
+    """Host view of ``a``, or None if it is a tracer/abstract value."""
+    try:
+        return np.asarray(a)
+    except Exception:
+        return None
+
+
+def _validate_workload(x, w, arrival=None, what: str = "simulate_policy"):
+    for name, a in (("x (sizes)", x), ("w (weights)", w)):
+        arr = _concrete(a)
+        if arr is None:
+            continue
+        if not np.all(np.isfinite(arr)):
+            raise ValueError(f"{what}: {name} must be finite; got "
+                             f"min={np.min(arr)!r} max={np.max(arr)!r}")
+        if np.any(arr < 0):
+            raise ValueError(f"{what}: {name} must be ≥ 0 "
+                             f"(size 0 = padding); got min={np.min(arr)!r}")
+    if arrival is not None:
+        arr = _concrete(arrival)
+        if arr is not None and np.isnan(arr).any():
+            raise ValueError(f"{what}: arrival times must not be NaN")
+
+
+def _validate_budget(B, what: str, source: str = "B"):
+    if B is None:
+        return
+    arr = _concrete(B)
+    if arr is None:
+        return
+    if not np.all(np.isfinite(arr)) or np.any(arr <= 0):
+        raise ValueError(f"{what}: {source} must be finite and > 0, "
+                         f"got {arr!r}")
+
+
+# ---------------------------------------------------------------------------
 # Device engine
 # ---------------------------------------------------------------------------
 
-def _sim_core(sp, policy, x, w, arrival, rtol, n_events):
+def _sim_core(sp, policy, x, w, arrival, rtol, n_events, faults=None,
+              B0=None):
     """Traced single-instance event loop — the body shared by jit/vmap.
 
     Jobs with x == 0 are padding: never arrive, never run, T = 0.
     Returns (T, finished, ts, thetas, valid) where ts/thetas/valid are
     the (n_events,)-padded event trace (valid=False ⇒ halt no-op).
+
+    ``faults`` (prepared sentinel-terminated arrays, see
+    ``_prepared_faults``) switches to the fault-aware step: the carry
+    additionally tracks the current budget B(t) (initialized from
+    ``B0``), per-job rate multipliers, and a fault cursor.  The step
+    advances to ``min(t + dt_completion, next_arrival, next_fault)``,
+    resolves completions first, then applies at most one fault event
+    (coincident faults drain through successive dt = 0 steps).  With
+    ``faults=None`` the legacy step runs unchanged — byte-identical
+    program, policies invoked with the 3-argument form.
     """
     dtype = x.dtype
     M = x.shape[0]
@@ -124,33 +339,96 @@ def _sim_core(sp, policy, x, w, arrival, rtol, n_events):
     tol = jnp.maximum(rtol, 8.0 * eps) * jnp.maximum(1.0, jnp.max(x, initial=0.0))
     zero = jnp.zeros((), dtype)
 
+    if faults is None:
+        def step(carry, _):
+            t, rem, T = carry
+            arrived = real & (arrival <= t)
+            active = arrived & (rem > 0)
+            theta = jnp.where(active, policy(rem, w, active), zero)
+            rates = jnp.where(active, sp.s(theta), zero)
+            runnable = active & (rates > 0)
+            dt_c = jnp.min(jnp.where(runnable,
+                                     rem / jnp.where(runnable, rates, 1.0),
+                                     jnp.inf))
+            pending = real & ~arrived
+            t_arr = jnp.min(jnp.where(pending, arrival, jnp.inf))
+            t_next = jnp.minimum(t + dt_c, t_arr)  # == t_arr on arrivals
+            live = jnp.isfinite(t_next)
+            t_new = jnp.where(live, t_next, t)
+            dt = t_new - t
+            rem2 = jnp.where(active, rem - rates * dt, rem)
+            done_now = active & (rem2 <= tol)
+            T = jnp.where(done_now, t_new, T)
+            rem2 = jnp.where(done_now, zero, jnp.maximum(rem2, 0.0))
+            return (t_new, rem2, T), (t, theta, live)
+
+        carry0 = (zero, rem0, jnp.zeros((M,), dtype))
+        (_, rem_end, T), (ts, thetas, valid) = lax.scan(
+            step, carry0, None, length=n_events)
+        finished = jnp.all(~real | (rem_end <= 0))
+        return T, finished, ts, thetas, valid
+
+    ftimes, fkinds, fjobs, fvalues = faults     # (S+1,) sentinel-terminated
+    S = ftimes.shape[0] - 1
+    lane = jnp.arange(M)
+
     def step(carry, _):
-        t, rem, T = carry
+        t, rem, T, Bc, mult, fi = carry
         arrived = real & (arrival <= t)
         active = arrived & (rem > 0)
-        theta = jnp.where(active, policy(rem, w, active), zero)
-        rates = jnp.where(active, sp.s(theta), zero)
+        theta = jnp.where(active, policy(rem, w, active, Bc), zero)
+        rates = jnp.where(active, sp.s(theta) * mult, zero)
         runnable = active & (rates > 0)
         dt_c = jnp.min(jnp.where(runnable,
                                  rem / jnp.where(runnable, rates, 1.0),
                                  jnp.inf))
         pending = real & ~arrived
         t_arr = jnp.min(jnp.where(pending, arrival, jnp.inf))
-        t_next = jnp.minimum(t + dt_c, t_arr)   # == t_arr exactly on arrivals
-        live = jnp.isfinite(t_next)
+        idx = jnp.minimum(fi, S)                # sentinel keeps this in-range
+        t_fault = ftimes[idx]
+        t_next = jnp.minimum(jnp.minimum(t + dt_c, t_arr), t_fault)
+        # faults alone are not work: once every real job is done (or can
+        # never arrive) the engine halts even if fault events remain —
+        # mirrored by the reference oracle's early return.
+        live = jnp.isfinite(t_next) & (active.any() | pending.any())
         t_new = jnp.where(live, t_next, t)
         dt = t_new - t
         rem2 = jnp.where(active, rem - rates * dt, rem)
         done_now = active & (rem2 <= tol)
         T = jnp.where(done_now, t_new, T)
         rem2 = jnp.where(done_now, zero, jnp.maximum(rem2, 0.0))
-        return (t_new, rem2, T), (t, theta, live)
+        # completions above are resolved first; now at most one fault
+        hit = live & (t_fault <= t_new)
+        kind = fkinds[idx]
+        sel = lane == fjobs[idx]
+        val = fvalues[idx]
+        Bc = jnp.where(hit & (kind == KIND_BUDGET), val, Bc)
+        # a failure only bites jobs that have arrived and still run —
+        # crashing a job at (or after) its completion instant is a no-op
+        failable = real & (arrival <= t_new) & (rem2 > 0)
+        lose = hit & (kind == KIND_FAILURE)
+        rem2 = jnp.where(lose & sel & failable,
+                         jnp.minimum(rem2 + val * (x - rem2), x), rem2)
+        mult = jnp.where(hit & (kind == KIND_STRAGGLER) & sel, val, mult)
+        fi = fi + hit.astype(fi.dtype)
+        return (t_new, rem2, T, Bc, mult, fi), (t, theta, live)
 
-    carry0 = (zero, rem0, jnp.zeros((M,), dtype))
-    (_, rem_end, T), (ts, thetas, valid) = lax.scan(
+    carry0 = (zero, rem0, jnp.zeros((M,), dtype),
+              jnp.asarray(B0, dtype), jnp.ones((M,), dtype),
+              jnp.zeros((), jnp.int32))
+    (_, rem_end, T, _, _, _), (ts, thetas, valid) = lax.scan(
         step, carry0, None, length=n_events)
     finished = jnp.all(~real | (rem_end <= 0))
     return T, finished, ts, thetas, valid
+
+
+@partial(jax.jit, static_argnames=("n_events",))
+def _simulate_faulted_jit(sp, policy, x, w, arrival, rtol, n_events,
+                          faults, B0):
+    T, finished, ts, thetas, valid = _sim_core(
+        sp, policy, x, w, arrival, rtol, n_events, faults=faults, B0=B0)
+    J = jnp.where(finished, jnp.sum(w * T), jnp.inf)
+    return T, J, finished, ts, thetas, valid
 
 
 @partial(jax.jit, static_argnames=("n_events",))
@@ -183,9 +461,21 @@ def _check_policy_budget(policy, B):
             "budgets: give the policy a (K,)-shaped B leaf)")
 
 
+def _fault_B0(policy, B, what: str):
+    """Initial budget B(0) for a faulted run: the caller's B, else the
+    policy's own; faulted runs need one (the carry tracks it)."""
+    B0 = B if B is not None else getattr(policy, "B", None)
+    if B0 is None:
+        raise ValueError(
+            f"{what}: faulted runs need an initial budget — pass B= or use "
+            "a policy with a B leaf")
+    return B0
+
+
 def simulate_policy_device(sp, x, w, policy, B=None, arrival=None,
                            rtol: float = 1e-12, max_events: int | None = None,
-                           trace: bool = True) -> SimResult:
+                           trace: bool = True,
+                           faults: FaultTrace | None = None) -> SimResult:
     """Run a jax-traceable policy through the ``lax.scan`` engine.
 
     policy(rem, w, active) → (M,) allocations with Σ over active ≤ B;
@@ -195,8 +485,17 @@ def simulate_policy_device(sp, x, w, policy, B=None, arrival=None,
     holds per-job release times; jobs are folded in as events.  Returns
     a host-materialized SimResult; jobs that did not complete within the
     4M+16 event budget leave J = +inf.
+
+    ``faults`` (a 1-D ``FaultTrace``) enables the fault-aware engine:
+    the policy is then invoked as ``policy(rem, w, active, B_t)`` with
+    the current budget, so it must accept the optional 4th argument
+    (every policy in ``sched/policies.py`` does).
     """
     _check_policy_budget(policy, B)
+    _validate_workload(x, w, arrival, what="simulate_policy")
+    _validate_budget(B, "simulate_policy")
+    _validate_budget(getattr(policy, "B", None), "simulate_policy",
+                     source=f"policy {getattr(policy, 'name', policy)!r}.B")
     x = jnp.asarray(x, dtype=jnp.result_type(float))
     w = jnp.asarray(w, dtype=x.dtype)
     M = x.shape[0]
@@ -204,9 +503,17 @@ def simulate_policy_device(sp, x, w, policy, B=None, arrival=None,
         return SimResult(T=np.zeros(0), J=0.0, events=[], n_events=0)
     arr = (jnp.zeros((M,), x.dtype) if arrival is None
            else jnp.asarray(arrival, x.dtype))
-    n_events = int(max_events or n_events_for(M))
-    T, J, finished, ts, thetas, valid = _simulate_jit(
-        sp, policy, x, w, arr, jnp.asarray(rtol, x.dtype), n_events)
+    if faults is not None:
+        ft = _prepared_faults(faults, M, x.dtype)
+        n_events = int(max_events or _fault_n_events(M, faults.S))
+        B0 = jnp.asarray(_fault_B0(policy, B, "simulate_policy"), x.dtype)
+        T, J, finished, ts, thetas, valid = _simulate_faulted_jit(
+            sp, policy, x, w, arr, jnp.asarray(rtol, x.dtype), n_events,
+            ft, B0)
+    else:
+        n_events = int(max_events or n_events_for(M))
+        T, J, finished, ts, thetas, valid = _simulate_jit(
+            sp, policy, x, w, arr, jnp.asarray(rtol, x.dtype), n_events)
     if not trace:
         return SimResult(T=np.asarray(T), J=float(J), events=[],
                          n_events=int(np.asarray(valid).sum()))
@@ -220,7 +527,8 @@ def simulate_policy_device(sp, x, w, policy, B=None, arrival=None,
 
 
 def simulate_policy(sp, x, w, policy, B=None, arrival=None,
-                    rtol: float = 1e-12, max_events: int | None = None):
+                    rtol: float = 1e-12, max_events: int | None = None,
+                    faults: FaultTrace | None = None):
     """Run ``policy`` to completion under true speedup ``sp``.
 
     Dispatch: pytree policies from ``sched/policies.py`` (marked
@@ -230,9 +538,10 @@ def simulate_policy(sp, x, w, policy, B=None, arrival=None,
     if getattr(policy, "device_ready", False):
         return simulate_policy_device(sp, x, w, policy, B=B,
                                       arrival=arrival, rtol=rtol,
-                                      max_events=max_events)
+                                      max_events=max_events, faults=faults)
     return simulate_policy_reference(sp, x, w, policy, B=B, arrival=arrival,
-                                     rtol=rtol, max_events=max_events)
+                                     rtol=rtol, max_events=max_events,
+                                     faults=faults)
 
 
 # ---------------------------------------------------------------------------
@@ -247,22 +556,34 @@ def _batch_axes(tree, K: int):
 
 
 @partial(jax.jit, static_argnames=("n_events",))
-def _ensemble_jit(sp, policies, X, W, ARR, rtol, n_events):
+def _ensemble_jit(sp, policies, X, W, ARR, rtol, n_events, faults=None):
     K = X.shape[0]
     sp_axes = _batch_axes(sp, K)
     Ts, Js, fins, nev = [], [], [], []
     for pol in policies:                 # static unroll — one program
         pol_axes = _batch_axes(pol, K)
 
-        def one(spv, pv, xk, wk, ak):
-            T, finished, _, _, valid = _sim_core(
-                spv, pv, xk, wk, ak, rtol, n_events)
-            J = jnp.where(finished, jnp.sum(wk * T), jnp.inf)
-            return T, J, finished, jnp.sum(valid)
+        if faults is None:
+            def one(spv, pv, xk, wk, ak):
+                T, finished, _, _, valid = _sim_core(
+                    spv, pv, xk, wk, ak, rtol, n_events)
+                J = jnp.where(finished, jnp.sum(wk * T), jnp.inf)
+                return T, J, finished, jnp.sum(valid)
 
-        T, J, finished, ne = jax.vmap(
-            one, in_axes=(sp_axes, pol_axes, 0, 0, 0))(
-                sp, pol, X, W, ARR)
+            T, J, finished, ne = jax.vmap(
+                one, in_axes=(sp_axes, pol_axes, 0, 0, 0))(
+                    sp, pol, X, W, ARR)
+        else:
+            def one(spv, pv, xk, wk, ak, fk):
+                T, finished, _, _, valid = _sim_core(
+                    spv, pv, xk, wk, ak, rtol, n_events,
+                    faults=fk, B0=pv.B)
+                J = jnp.where(finished, jnp.sum(wk * T), jnp.inf)
+                return T, J, finished, jnp.sum(valid)
+
+            T, J, finished, ne = jax.vmap(
+                one, in_axes=(sp_axes, pol_axes, 0, 0, 0, (0, 0, 0, 0)))(
+                    sp, pol, X, W, ARR, faults)
         Ts.append(T)
         Js.append(J)
         fins.append(finished)
@@ -281,7 +602,8 @@ def _check_axes_unambiguous(tree, K: int, M: int, what: str):
 
 def simulate_ensemble(sp, policies, X, W, arrival=None, B=None,
                       rtol: float = 1e-12,
-                      n_events: int | None = None) -> EnsembleResult:
+                      n_events: int | None = None,
+                      faults: FaultTrace | None = None) -> EnsembleResult:
     """Evaluate P policies × K workloads in one compiled device call.
 
     Args:
@@ -298,7 +620,12 @@ def simulate_ensemble(sp, policies, X, W, arrival=None, B=None,
       arrival: optional (K, M) release times (0 = present at start).
       B: cross-check only — each policy spends its *own* B; a concrete
         mismatch with a policy's budget raises.
-      n_events: event budget per instance; defaults to 4M+16.
+      n_events: event budget per instance; defaults to 4M+16
+        (+2 per fault event when ``faults`` is given).
+      faults: optional ``FaultTrace`` — 1-D (same trace for every
+        workload) or (K, S)-batched (one trace per workload, sharded
+        like workload ensembles).  Every policy then needs a B leaf
+        (the initial budget of its fault carry).
 
     Returns an EnsembleResult with all arrays still on device.
     """
@@ -307,6 +634,8 @@ def simulate_ensemble(sp, policies, X, W, arrival=None, B=None,
     if X.ndim != 2 or W.shape != X.shape:
         raise ValueError("X and W must both be (K, M)")
     K, M = X.shape
+    _validate_workload(X, W, arrival, what="simulate_ensemble")
+    _validate_budget(B, "simulate_ensemble")
     ARR = (jnp.zeros_like(X) if arrival is None
            else jnp.asarray(arrival, X.dtype))
     if ARR.shape != X.shape:
@@ -328,10 +657,22 @@ def simulate_ensemble(sp, policies, X, W, arrival=None, B=None,
             raise ValueError(
                 f"policy {p!r} is not device-ready; use sched/policies.py")
         _check_policy_budget(p, B)
+        _validate_budget(getattr(p, "B", None), "simulate_ensemble",
+                         source=f"policy {getattr(p, 'name', p)!r}.B")
         _check_axes_unambiguous(p, K, M, f"policy {getattr(p, 'name', p)!r}")
-    n_events = int(n_events or n_events_for(M))
+    ft = None
+    if faults is not None:
+        for p in policies:
+            # the ensemble fault carry starts from each policy's own B
+            _fault_B0(p, None, "simulate_ensemble")
+        # broadcast to (K, S+1) so fault leaves always batch unambiguously
+        ft = _prepared_faults(faults, M, X.dtype, K=K)
+        n_events = int(n_events or _fault_n_events(M, faults.S))
+    else:
+        n_events = int(n_events or n_events_for(M))
     J, T, finished, ne = _ensemble_jit(
-        sp, policies, X, W, ARR, jnp.asarray(rtol, X.dtype), n_events)
+        sp, policies, X, W, ARR, jnp.asarray(rtol, X.dtype), n_events,
+        faults=ft)
     names = tuple(getattr(p, "name", type(p).__name__) for p in policies)
     return EnsembleResult(J=J, T=T, finished=finished, n_events=ne,
                           policy_names=names)
@@ -470,25 +811,49 @@ def simulate_fluid_classes(state, policy, rtol: float = 1e-12,
 
 def simulate_policy_reference(sp, x, w, policy, B: float | None = None,
                               arrival=None, rtol: float = 1e-12,
-                              max_events: int | None = None):
+                              max_events: int | None = None,
+                              faults: FaultTrace | None = None):
     """Numpy event loop oracle; exact same event semantics as the engine.
 
     policy(rem, w, active) → (M,) allocations with Σ over active ≤ B.
     Raises on budget violations, deadlock and event-budget exhaustion —
     host-side checks the device engine cannot afford.
+
+    With ``faults`` the oracle mirrors the fault-aware device step
+    exactly — current-budget policy invocation (4-argument form),
+    completion-before-fault ordering, one fault per event, faults alone
+    are not work — so it stays the differential pin for the faulted
+    engine.  The runtime budget check then tracks B(t).
     """
     x = np.asarray(x, dtype=np.float64)
     w = np.asarray(w, dtype=np.float64)
+    _validate_workload(x, w, arrival, what="simulate_policy_reference")
+    _validate_budget(B, "simulate_policy_reference")
     M = x.shape[0]
-    B = float(getattr(sp, "B", 0.0) if B is None else B)
+    if faults is None:
+        Bcur = float(getattr(sp, "B", 0.0) if B is None else B)
+    else:
+        Bcur = float(_fault_B0(policy, B, "simulate_policy_reference"))
     real = x > 0
     arr = (np.zeros(M) if arrival is None
            else np.asarray(arrival, dtype=np.float64))
     rem = np.where(real, x, 0.0)
     T = np.zeros(M)
+    mult = np.ones(M)
     t = 0.0
     events = []
-    limit = max_events or n_events_for(M)
+    if faults is not None:
+        faults.validate(M)
+        if faults.batched:
+            raise ValueError("the reference oracle runs one instance — "
+                             "pass faults.instance(k)")
+        ftimes, fkinds, fjobs, fvalues = (faults.times, faults.kinds,
+                                          faults.jobs, faults.values)
+        fi, S = 0, faults.S
+        limit = max_events or _fault_n_events(M, S)
+    else:
+        fi, S = 0, 0
+        limit = max_events or n_events_for(M)
     # same tolerance formula as the device engine (float64 host side)
     tol = max(rtol, 8.0 * np.finfo(np.float64).eps) * max(
         1.0, float(x.max()) if M else 1.0)
@@ -500,19 +865,24 @@ def simulate_policy_reference(sp, x, w, policy, B: float | None = None,
         if not active.any() and not pending.any():
             return SimResult(T=T, J=float(np.sum(w * T)), events=events,
                              n_events=len(events))
-        theta = np.where(active,
-                         np.asarray(policy(rem, w, active), dtype=np.float64),
-                         0.0)
-        if theta[active].sum() > B * (1 + 1e-9):
+        if faults is None:
+            raw = policy(rem, w, active)
+        else:
+            raw = policy(rem, w, active, Bcur)
+        theta = np.where(active, np.asarray(raw, dtype=np.float64), 0.0)
+        if theta[active].sum() > Bcur * (1 + 1e-9):
             raise ValueError("policy exceeded bandwidth budget")
-        rates = np.where(active, np.array(sp.s(theta), dtype=np.float64), 0.0)
+        rates = np.where(active,
+                         np.array(sp.s(theta), dtype=np.float64) * mult, 0.0)
         runnable = active & (rates > 0)
-        if not runnable.any() and not pending.any():
+        t_fault = float(ftimes[fi]) if fi < S else np.inf
+        if not runnable.any() and not pending.any() \
+                and not np.isfinite(t_fault):
             raise RuntimeError("deadlock: no active job has positive rate")
         dt_c = (float(np.min(rem[runnable] / rates[runnable]))
                 if runnable.any() else np.inf)
         t_arr = float(np.min(arr[pending])) if pending.any() else np.inf
-        t_next = min(t + dt_c, t_arr)
+        t_next = min(t + dt_c, t_arr, t_fault)
         events.append((t, theta.copy()))
         dt = t_next - t
         t = t_next
@@ -520,6 +890,17 @@ def simulate_policy_reference(sp, x, w, policy, B: float | None = None,
         done = active & (rem <= tol)
         T[done] = t
         rem[done] = 0.0
+        if faults is not None and t_fault <= t:
+            k, j, v = int(fkinds[fi]), int(fjobs[fi]), float(fvalues[fi])
+            if k == KIND_BUDGET:
+                Bcur = v
+            elif k == KIND_FAILURE:
+                # completions above resolved first: rem[j] == 0 ⇒ no-op
+                if real[j] and arr[j] <= t and rem[j] > 0:
+                    rem[j] = min(rem[j] + v * (x[j] - rem[j]), x[j])
+            elif k == KIND_STRAGGLER:
+                mult[j] = v
+            fi += 1
     raise RuntimeError(f"exceeded {limit} events — policy may not complete jobs")
 
 

@@ -36,7 +36,7 @@ import numpy as np
 from .speedup import RegularSpeedup, StackedSpeedup
 
 __all__ = ["WorkloadBatch", "ClassWorkloadBatch", "sample_workloads",
-           "sample_class_workloads", "FAMILIES"]
+           "sample_class_workloads", "sample_fault_traces", "FAMILIES"]
 
 FAMILIES = ("power", "shifted", "log", "neg_power", "saturating")
 
@@ -184,6 +184,107 @@ def sample_workloads(
             sigma[k] = np.concatenate([sk, np.repeat(sk[-1], M - mk)])
         sp = _family_speedup(A, w, gamma, sigma, B)
     return WorkloadBatch(X=X, W=W, arrival=ARR, m=m, B=float(B), sp=sp)
+
+
+# ---------------------------------------------------------------------------
+# Seeded chaos: fault-trace ensembles for the robust control plane
+# ---------------------------------------------------------------------------
+
+def sample_fault_traces(
+    seed: int,
+    K: int,
+    M: int,
+    *,
+    B: float,
+    horizon: float,
+    preempt_rate: float = 0.0,
+    fail_rate: float = 0.0,
+    straggle_rate: float = 0.0,
+    budget_frac: tuple = (0.25, 0.75),
+    repair_time: float = 1.0,
+    loss: tuple = (0.5, 1.0),
+    slow: tuple = (0.2, 0.8),
+    recover: bool = True,
+    snap_to=None,
+    snap_frac: float = 0.5,
+):
+    """Draw K seeded fault traces for the fault-aware scenario engine.
+
+    Three independent Poisson processes over ``[0, horizon)`` per trace
+    (the chaos analog of ``sample_workloads``' Poisson arrivals):
+
+      * preemptions (``preempt_rate``): the budget drops to
+        B·U(*budget_frac*); ``recover=True`` pairs each with a recovery
+        event Exp(``repair_time``) later restoring the full ``B``.
+      * job failures (``fail_rate``): a uniformly chosen job restarts,
+        losing a U(*loss*) fraction of its completed work.
+      * stragglers (``straggle_rate``): a uniformly chosen job's rate is
+        scaled by U(*slow*); ``recover=True`` schedules the multiplier
+        back to 1 Exp(``repair_time``) later.
+
+    ``snap_to`` (optional array of timestamps, e.g. a workload's arrival
+    times) snaps each drawn event time onto the nearest entry with
+    probability ``snap_frac`` — the knob the coincident-event tests use
+    to land budget steps exactly on arrivals/completions.
+
+    Returns a batched ``FaultTrace`` with (K, S) arrays, S the largest
+    per-trace event count (shorter traces are +inf-padded); shards like
+    a workload ensemble through ``simulate_ensemble`` /
+    ``simulate_ensemble_sharded``.
+    """
+    from .simulator import (FaultTrace, KIND_BUDGET, KIND_FAILURE,
+                            KIND_STRAGGLER)
+
+    if horizon <= 0:
+        raise ValueError("horizon must be > 0")
+    rng = np.random.default_rng(seed)
+    snap = None if snap_to is None else np.sort(
+        np.asarray(snap_to, np.float64).ravel())
+    per_trace = []
+    for _ in range(K):
+        ts, ks, js, vs = [], [], [], []
+
+        def emit(t, kind, job, value):
+            ts.append(float(t))
+            ks.append(int(kind))
+            js.append(int(job))
+            vs.append(float(value))
+
+        def draw_time():
+            t = rng.uniform(0.0, horizon)
+            if snap is not None and snap.size and rng.random() < snap_frac:
+                t = float(snap[np.argmin(np.abs(snap - t))])
+            return t
+
+        for _ in range(rng.poisson(preempt_rate * horizon)):
+            t = draw_time()
+            emit(t, KIND_BUDGET, 0, B * rng.uniform(*budget_frac))
+            if recover:
+                emit(t + rng.exponential(repair_time), KIND_BUDGET, 0, B)
+        for _ in range(rng.poisson(fail_rate * horizon)):
+            emit(draw_time(), KIND_FAILURE, rng.integers(0, M),
+                 rng.uniform(*loss))
+        for _ in range(rng.poisson(straggle_rate * horizon)):
+            t = draw_time()
+            j = int(rng.integers(0, M))
+            emit(t, KIND_STRAGGLER, j, rng.uniform(*slow))
+            if recover:
+                emit(t + rng.exponential(repair_time), KIND_STRAGGLER, j, 1.0)
+        order = np.argsort(np.asarray(ts, np.float64), kind="stable")
+        per_trace.append((np.asarray(ts)[order], np.asarray(ks)[order],
+                          np.asarray(js)[order], np.asarray(vs)[order]))
+    S = max((t.size for t, *_ in per_trace), default=0)
+    times = np.full((K, S), np.inf)
+    kinds = np.zeros((K, S), np.int32)
+    jobs = np.zeros((K, S), np.int32)
+    values = np.zeros((K, S))
+    for k, (t, kk, jj, vv) in enumerate(per_trace):
+        n = t.size
+        times[k, :n] = t
+        kinds[k, :n] = kk
+        jobs[k, :n] = jj
+        values[k, :n] = vv
+    return FaultTrace(times=times, kinds=kinds, jobs=jobs, values=values)
 
 
 # ---------------------------------------------------------------------------

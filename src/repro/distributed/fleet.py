@@ -56,7 +56,9 @@ from repro.core.batch import (BatchedSmartFillSchedule, _prepare,
                               check_axes_unambiguous, hetero_order_batch,
                               validate_padded_instances)
 from repro.core.simulator import (EnsembleResult, _check_policy_budget,
-                                  _sim_core, n_events_for)
+                                  _fault_B0, _fault_n_events, _prepared_faults,
+                                  _sim_core, _validate_budget,
+                                  _validate_workload, n_events_for)
 from repro.core.smartfill import _fast_ok, _solve
 from repro.core.speedup import collapse_homogeneous
 
@@ -270,12 +272,32 @@ def _plan_fn(sp_key, coarse: int, descent_iters: int, cap_iters: int,
 
 
 @functools.lru_cache(maxsize=256)
-def _sim_fn(sp_key, pol_key, n_events: int):
-    """Cached instance-map for ensemble simulation (cf. ``_plan_fn``)."""
+def _sim_fn(sp_key, pol_key, n_events: int, faulted: bool = False):
+    """Cached instance-map for ensemble simulation (cf. ``_plan_fn``).
+
+    With ``faulted`` the slice carries the prepared per-instance fault
+    arrays (times/kinds/jobs/values, each (rows, S+1)) and the core runs
+    its fault-aware step with each lane's budget carry seeded from the
+    (possibly per-instance) policy ``B`` leaf."""
 
     def fn(sl, shared):
-        x, w, arr, sp_b, pol_b = sl
         sp_sh, pol_sh, rtol = shared
+
+        if faulted:
+            x, w, arr, sp_b, pol_b, flt = sl
+
+            def one(x1, w1, a1, sp_b1, pol_b1, f1):
+                spv = _merge_leaves(sp_key, sp_b1, sp_sh)
+                pv = _merge_leaves(pol_key, pol_b1, pol_sh)
+                T, finished, _, _, valid = _sim_core(
+                    spv, pv, x1, w1, a1, rtol, n_events,
+                    faults=f1, B0=pv.B)
+                J = jnp.where(finished, jnp.sum(w1 * T), jnp.inf)
+                return T, J, finished, jnp.sum(valid)
+
+            return jax.vmap(one)(x, w, arr, sp_b, pol_b, flt)
+
+        x, w, arr, sp_b, pol_b = sl
 
         def one(x1, w1, a1, sp_b1, pol_b1):
             spv = _merge_leaves(sp_key, sp_b1, sp_sh)
@@ -419,6 +441,7 @@ def simulate_ensemble_sharded(
     B=None,
     rtol: float = 1e-12,
     n_events: int | None = None,
+    faults=None,
     *,
     mesh: Mesh | None = None,
     chunk_size: int | None = None,
@@ -432,12 +455,22 @@ def simulate_ensemble_sharded(
     program here, where the single-device runner unrolls them into one);
     workloads partition over ``mesh`` with chunked streaming as in
     ``plan_sharded``.
+
+    ``faults``: optional ``FaultTrace`` (1-D shared, or (K, S)-batched —
+    one trace per workload).  Fault arrays broadcast to (K, S+1) and
+    shard across the mesh *alongside their workloads*, so a chaos
+    ensemble (``core.workloads.sample_fault_traces``) fans out over the
+    fleet exactly like the workloads it poisons.  Padded instances are
+    inert (no live jobs ⇒ the engine halts before consuming any fault),
+    and every policy needs a ``B`` leaf to seed its budget carry.
     """
     X = jnp.asarray(X, dtype=jnp.result_type(float))
     W = jnp.asarray(W, dtype=X.dtype)
     if X.ndim != 2 or W.shape != X.shape:
         raise ValueError("X and W must both be (K, M)")
     K, M = X.shape
+    _validate_workload(X, W, arrival, what="simulate_ensemble_sharded")
+    _validate_budget(B, "simulate_ensemble_sharded")
     ARR = (jnp.zeros_like(X) if arrival is None
            else jnp.asarray(arrival, X.dtype))
     if ARR.shape != X.shape:
@@ -458,8 +491,17 @@ def simulate_ensemble_sharded(
             raise ValueError(
                 f"policy {p!r} is not device-ready; use sched/policies.py")
         _check_policy_budget(p, B)
+        _validate_budget(getattr(p, "B", None), "simulate_ensemble_sharded",
+                         source=f"policy {getattr(p, 'name', p)!r}.B")
         check_axes_unambiguous(p, K, M, f"policy {getattr(p, 'name', p)!r}")
-    n_events = int(n_events or n_events_for(M))
+    flt = None
+    if faults is not None:
+        for p in policies:
+            _fault_B0(p, None, "simulate_ensemble_sharded")
+        flt = _prepared_faults(faults, M, X.dtype, K=K)
+        n_events = int(n_events or _fault_n_events(M, faults.S))
+    else:
+        n_events = int(n_events or n_events_for(M))
     rtol = jnp.asarray(rtol, X.dtype)
 
     mesh = _resolve_mesh(mesh)
@@ -470,15 +512,21 @@ def simulate_ensemble_sharded(
     Wp = _pad_rows(W, total, edge=False)
     ARRp = _pad_rows(ARR, total, edge=False)
     sp_bat = tuple(_pad_rows(l, total, edge=True) for l in sp_split.batched)
+    if flt is not None:
+        # edge-replicated rows stay valid sorted traces; padded instances
+        # have no live jobs, so the engine halts before consuming them
+        flt = tuple(_pad_rows(l, total, edge=True) for l in flt)
 
     Js, Ts, fins, nev = [], [], [], []
     for pol in policies:
         pol_split = _SplitLeaves(pol, K)
-        batched = (Xp, Wp, ARRp, sp_bat,
-                   tuple(_pad_rows(l, total, edge=True)
-                         for l in pol_split.batched))
+        pol_bat = tuple(_pad_rows(l, total, edge=True)
+                        for l in pol_split.batched)
+        batched = ((Xp, Wp, ARRp, sp_bat, pol_bat) if flt is None
+                   else (Xp, Wp, ARRp, sp_bat, pol_bat, flt))
         shared = (sp_split.shared, pol_split.shared, rtol)
-        fn = _sim_fn(sp_split.key, pol_split.key, n_events)
+        fn = _sim_fn(sp_split.key, pol_split.key, n_events,
+                     faulted=flt is not None)
         T, J, finished, ne = _run_sharded(mesh, fn, batched, shared, K,
                                           chunk_size)
         Ts.append(T)

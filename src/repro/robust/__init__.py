@@ -1,0 +1,48 @@
+"""Fault-tolerance layer for the scheduling stack.
+
+The scheduling analog of ``train/fault_tolerance.py``: where training
+survives preempted slices and poisoned gradients, the control plane must
+survive preempted budget, crashed jobs, degraded speedups, and solvers
+that emit garbage.  Three independently usable layers:
+
+  * dynamic budgets + fault injection — ``core.simulator.FaultTrace``
+    executed by the fault-aware engine, sampled by
+    ``core.workloads.sample_fault_traces`` (re-exported here);
+  * plan certificates + the degradation ladder —
+    ``certificates.allocation_ok`` / ``certificates.certify_plan`` and
+    ``degrade.DegradingPolicy`` (SmartFill → GWF-static → EQUI);
+  * the host watchdog — ``watchdog.Watchdog`` retry/timeout/backoff for
+    the serving control loop.
+
+See the README "Robustness" section for the certificate semantics and
+fault-trace format.
+"""
+from repro.core.simulator import (  # noqa: F401
+    KIND_BUDGET,
+    KIND_FAILURE,
+    KIND_STRAGGLER,
+    FaultTrace,
+    budget_trace,
+)
+from repro.core.workloads import sample_fault_traces  # noqa: F401
+
+from .certificates import PlanCertificate, allocation_ok, certify_plan  # noqa: F401
+from .degrade import DegradingPolicy, SaboteurPolicy, degradation_report  # noqa: F401
+from .watchdog import Watchdog, WatchdogGiveUp  # noqa: F401
+
+__all__ = [
+    "KIND_BUDGET",
+    "KIND_FAILURE",
+    "KIND_STRAGGLER",
+    "FaultTrace",
+    "budget_trace",
+    "sample_fault_traces",
+    "PlanCertificate",
+    "allocation_ok",
+    "certify_plan",
+    "DegradingPolicy",
+    "SaboteurPolicy",
+    "degradation_report",
+    "Watchdog",
+    "WatchdogGiveUp",
+]

@@ -1,0 +1,123 @@
+"""Runtime plan certificates: is this allocation/plan safe to execute?
+
+Two granularities, matching the two places a poisoned solve can leak
+into execution:
+
+``allocation_ok``
+    A device scalar certifying one event's allocation θ — finite,
+    non-negative, Σ over active ≤ B(t).  Cheap enough to evaluate every
+    event inside the engine's ``lax.scan``; this is what
+    ``robust.degrade.DegradingPolicy`` gates each ladder rung on.
+
+``certify_plan``
+    A host-side certificate for a full SmartFill allocation table:
+    finite θ everywhere, every phase column spends exactly the budget,
+    every phase satisfies the CAP KKT system (``core.gwf.cap_residual``
+    — the optimality conditions (9a)–(9d)), and the Prop. 9 identity
+    J == Σ a_i x_i (= ``J_linear``) holds.  This is the pre-flight check
+    for pinning a cached plan (``HeteroSmartFillPolicy.pinned``) or
+    shipping one to the fleet: a plan that passes is feasible *and*
+    optimal for its instance, not merely finite.
+
+The failure mode is real: ``sched/cluster.py`` carried a silent
+``isfinite(J)`` host fallback long before this module existed (now a
+loud ``ClusterSimResult.status``), and a non-converged μ* descent can
+emit a table that is finite but infeasible — only the KKT residuals
+catch that.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gwf import cap_residual
+
+__all__ = ["PlanCertificate", "allocation_ok", "certify_plan"]
+
+
+def allocation_ok(theta, B, active, tol: float = 1e-6):
+    """Device-scalar feasibility certificate for one event's allocation.
+
+    True iff, over the active set, θ is finite, ≥ −tol·B (water-filling
+    round-off may dip a hair below zero), and Σθ ≤ B·(1+tol).  Pure jnp
+    ops on scalars/masks — safe inside jit/vmap/scan, and cheap next to
+    any solve that produced θ.
+    """
+    th = jnp.where(active, theta, 0.0)
+    Bv = jnp.asarray(B, th.dtype)
+    finite = jnp.all(jnp.isfinite(th)) & jnp.isfinite(Bv)
+    nonneg = jnp.all(th >= -tol * Bv)
+    within = jnp.sum(th) <= Bv * (1.0 + tol)
+    return finite & nonneg & within
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCertificate:
+    """Host-materialized verdict of ``certify_plan``.
+
+    ok: every check below passed at its tolerance.
+    finite: the whole table (and J, J_linear) is finite.
+    budget: max over phases of |Σ_active θ − B| / B.
+    kkt: max over phases of each ``cap_residual`` violation
+      ("order", "ratio", "park") — ≤ tol everywhere ⟺ each phase solves
+      its CAP, i.e. the plan is phase-wise optimal, not just feasible.
+    j_gap: |J − J_linear| / max(1, |J|) — the Prop. 9 identity (NaN when
+      the schedule carries no J_linear).
+    """
+
+    ok: bool
+    finite: bool
+    budget: float
+    kkt: dict
+    j_gap: float
+
+
+def certify_plan(sp, sched, B=None, tol: float = 1e-6,
+                 check_j_gap: bool = True) -> PlanCertificate:
+    """Certify a SmartFill schedule before executing/caching it.
+
+    ``sched`` is a ``SmartFillSchedule`` / ``HeteroSmartFillSchedule``
+    (phase j = column j, jobs 0..j active).  For heterogeneous schedules
+    pass ``sp`` already permuted into the schedule's rank coordinates
+    (the same alignment the solver used).  ``B`` defaults to ``sp.B``.
+
+    The KKT sweep is one vmapped ``cap_residual`` over the M phase
+    columns; everything is then reduced host-side.  ``check_j_gap=False``
+    skips the Prop. 9 identity for schedules where clamped
+    back-substitution legitimately breaks it (an unrealizable hetero
+    order — see ``HeteroSmartFillSchedule``).
+    """
+    theta = jnp.asarray(sched.theta)
+    M = theta.shape[0]
+    Bv = float(sp.B if B is None else B)
+    J = float(sched.J)
+    J_linear = float(getattr(sched, "J_linear", np.nan))
+    finite = bool(np.all(np.isfinite(np.asarray(theta)))) \
+        and np.isfinite(J) \
+        and (not check_j_gap or np.isfinite(J_linear))
+
+    if M == 0:
+        return PlanCertificate(ok=finite, finite=finite, budget=0.0,
+                               kkt={"order": 0.0, "ratio": 0.0, "park": 0.0},
+                               j_gap=0.0)
+
+    lane = jnp.arange(M)
+
+    def one(j):
+        active = lane <= j
+        return cap_residual(sp, jnp.asarray(Bv, theta.dtype), sched.c,
+                            theta[:, j], active=active, tol=tol)
+
+    res = jax.vmap(one)(lane)
+    budget = float(jnp.max(res["budget"])) / max(Bv, 1e-300)
+    kkt = {k: float(jnp.max(res[k])) for k in ("order", "ratio", "park")}
+    j_gap = (abs(J - J_linear) / max(1.0, abs(J))
+             if check_j_gap else float("nan"))
+    ok = bool(finite and budget <= tol
+              and all(v <= tol for v in kkt.values())
+              and (not check_j_gap or j_gap <= tol))
+    return PlanCertificate(ok=ok, finite=finite, budget=budget, kkt=kkt,
+                           j_gap=j_gap)

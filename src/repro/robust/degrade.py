@@ -1,0 +1,203 @@
+"""Certified degradation ladder: never execute an infeasible allocation.
+
+``DegradingPolicy`` wraps an ordered tuple of policies ("rungs") behind
+the standard policy interface.  Every event it evaluates each rung and
+selects the **first** whose per-event certificate
+(``robust.certificates.allocation_ok`` — finite, non-negative,
+Σθ ≤ B(t)) passes; if every rung fails it emits the all-zero allocation
+(trivially feasible; the engine then simply advances to the next
+arrival/fault event).  The canonical ladder (``DegradingPolicy.ladder``)
+is
+
+    SmartFill  →  GWF-static  →  EQUI
+
+i.e. optimal re-planning, then weighted water-filling without the
+carried CDR constants, then an even split — strictly decreasing solver
+complexity, so whatever poisoned the expensive rung (a non-converged μ*
+descent, a NaN'd carry, a hostile budget) is progressively less able to
+poison the fallback.  EQUI divides B(t) by the active count in two
+arithmetic ops; short of a non-finite budget it cannot fail, which makes
+the ladder's feasibility guarantee unconditional in practice.
+
+Selection is branchless (`jnp.where` over rung outputs), so the wrapper
+is jit/vmap/scan-safe and — crucially for the "certificates are free
+when healthy" contract — **bit-identical** to the primary rung whenever
+the primary's certificate passes: ``where(True, θ_primary, ·)`` is the
+untouched primary allocation.  The cost is evaluating the lower rungs
+eagerly; keep them cheap (one CAP solve + two ops above) next to a
+primary that runs a full SmartFill DP per event.
+
+``SaboteurPolicy`` is the matching chaos tool: it wraps any rung and
+corrupts its output on demand (NaN, overspend, negative) so tests can
+force certificate failures without relying on a real solver divergence.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sched.policies import (EquiPolicy, GWFStaticPolicy, Policy,
+                                  SmartFillPolicy)
+
+from .certificates import allocation_ok
+
+__all__ = ["DegradingPolicy", "SaboteurPolicy", "degradation_report"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DegradingPolicy(Policy):
+    """Certificate-gated fallback chain over ``rungs`` (most- to
+    least-capable).  See the module docstring for semantics.
+
+    The rung tuple is a pytree child — per-workload rung parameters
+    (e.g. (K,)-shaped budgets) batch through ``simulate_ensemble``
+    exactly like any other policy leaf.  ``tol`` is the certificate
+    tolerance (static aux data).
+    """
+
+    rungs: tuple
+    tol: float = 1e-6
+    name = "Degrading"
+
+    def __post_init__(self):
+        if not self.rungs:
+            raise ValueError("DegradingPolicy needs at least one rung")
+
+    @property
+    def B(self):
+        """The primary rung's budget (the ladder shares one server)."""
+        return self.rungs[0].B
+
+    def tree_flatten(self):
+        return (tuple(self.rungs),), (self.tol,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(rungs=children[0], tol=aux[0])
+
+    @classmethod
+    def ladder(cls, sp, B: float | None = None, primary: Policy | None = None,
+               tol: float = 1e-6) -> "DegradingPolicy":
+        """The canonical SmartFill → GWF-static → EQUI ladder.
+
+        ``primary`` overrides the first rung (e.g. a pinned
+        ``HeteroSmartFillPolicy``); the fallback rungs are always built
+        on the *shared* speedup ``sp`` and budget ``B``.
+        """
+        B = float(sp.B if B is None else B)
+        primary = SmartFillPolicy(sp, B=B) if primary is None else primary
+        return cls(rungs=(primary, GWFStaticPolicy(sp, B=B),
+                          EquiPolicy(B=B)), tol=tol)
+
+    def _certified(self, rem, w, active, B):
+        """Rung outputs and their certificates under the live budget."""
+        b = jnp.asarray(self.B if B is None else B,
+                        jnp.asarray(rem).dtype)
+        outs, oks = [], []
+        for rung in self.rungs:
+            th = jnp.where(active, rung(rem, w, active, B), 0.0)
+            outs.append(th)
+            oks.append(allocation_ok(th, b, active, self.tol))
+        return outs, oks
+
+    def __call__(self, rem, w, active, B=None):
+        outs, oks = self._certified(rem, w, active, B)
+        # fold from the bottom: zero floor, then each higher rung takes
+        # precedence when certified — where(True, θ_primary, ·) keeps
+        # the healthy path bit-identical to the unwrapped primary
+        out = jnp.zeros_like(outs[0])
+        for th, ok in zip(reversed(outs), reversed(oks)):
+            out = jnp.where(ok, th, out)
+        return out
+
+    def rung_index(self, rem, w, active, B=None):
+        """Which rung fired: 0 = primary, …, len(rungs) = all failed
+        (zero allocation).  Diagnostic — same tracing rules as
+        ``__call__``."""
+        _, oks = self._certified(rem, w, active, B)
+        idx = jnp.asarray(len(self.rungs), jnp.int32)
+        for i, ok in reversed(list(enumerate(oks))):
+            idx = jnp.where(ok, jnp.asarray(i, jnp.int32), idx)
+        return idx
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SaboteurPolicy(Policy):
+    """Chaos wrapper: corrupt ``inner``'s allocation to force a
+    certificate failure.
+
+    mode:
+      * ``"nan"``       — NaN on every active slot (non-finite θ).
+      * ``"overspend"`` — 2·B to every active job (Σθ > B).
+      * ``"negative"``  — the negated allocation minus 1 (θ < 0).
+
+    ``min_active`` only sabotages events with more than that many active
+    jobs, so tests can poison mid-run states while leaving the endgame
+    healthy (mixed-rung trajectories).
+    """
+
+    inner: Policy
+    mode: str = "nan"
+    min_active: int = 0
+    name = "Saboteur"
+
+    _MODES = ("nan", "overspend", "negative")
+
+    def __post_init__(self):
+        if self.mode not in self._MODES:
+            raise ValueError(f"mode must be one of {self._MODES}")
+
+    @property
+    def B(self):
+        return self.inner.B
+
+    def tree_flatten(self):
+        return (self.inner,), (self.mode, self.min_active)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(inner=children[0], mode=aux[0], min_active=aux[1])
+
+    def __call__(self, rem, w, active, B=None):
+        th = self.inner(rem, w, active, B)
+        b = jnp.asarray(self.B if B is None else B,
+                        jnp.asarray(rem).dtype)
+        if self.mode == "nan":
+            bad = jnp.where(active, jnp.nan, 0.0)
+        elif self.mode == "overspend":
+            bad = jnp.where(active, 2.0 * b, 0.0)
+        else:
+            bad = jnp.where(active, -th - 1.0, 0.0)
+        hit = jnp.sum(active) > self.min_active
+        return jnp.where(hit, bad, th)
+
+
+def degradation_report(sp, x, w, policy: DegradingPolicy, B=None,
+                       arrival=None, faults=None, rtol: float = 1e-12):
+    """Replay one instance host-side, recording which rung fired when.
+
+    Runs the reference oracle with a recording wrapper around
+    ``policy`` and returns ``{"J", "T", "rung_counts", "n_events"}``
+    where rung_counts maps rung index → event count (index
+    ``len(rungs)`` = every certificate failed, zero allocation).  Host
+    diagnostics only — the hot path never pays for this.
+    """
+    from repro.core.simulator import simulate_policy_reference
+
+    counts: dict[int, int] = {}
+
+    def recording(rem, w_, active, Bt=None):
+        i = int(policy.rung_index(rem, w_, active, Bt))
+        counts[i] = counts.get(i, 0) + 1
+        return np.asarray(policy(rem, w_, active, Bt))
+
+    res = simulate_policy_reference(sp, x, w, recording, B=B,
+                                    arrival=arrival, rtol=rtol,
+                                    faults=faults)
+    return {"J": res.J, "T": res.T, "rung_counts": counts,
+            "n_events": res.n_events}

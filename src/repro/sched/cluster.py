@@ -30,6 +30,7 @@ theory abstracts away:
 from __future__ import annotations
 
 import dataclasses
+import logging
 
 import jax.numpy as jnp
 import numpy as np
@@ -39,7 +40,36 @@ from repro.core.batch import current_allocations_from
 from repro.core.speedup import (RegularSpeedup, Speedup, stack_speedup_rows,
                                 stack_speedups)
 
-__all__ = ["Job", "ClusterScheduler", "integerize"]
+__all__ = ["Job", "ClusterScheduler", "ClusterSimResult", "integerize"]
+
+_log = logging.getLogger(__name__)
+# the device→host fallback is worth one loud line per process, not one
+# per simulate() call in a sweep
+_warned_device_fallback = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSimResult:
+    """Outcome of ``ClusterScheduler.simulate``.
+
+    ``path`` records which executor produced the result ("device" |
+    "host"); ``status`` is "ok" unless the device engine exhausted its
+    fixed event budget and the run was re-executed on the host loop
+    ("device-event-budget-exhausted") — previously a *silent* swap.
+    Iterates as ``(events, J)`` for back-compat tuple unpacking.
+    """
+
+    events: list
+    J: float
+    path: str = "device"
+    status: str = "ok"
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+    def __iter__(self):
+        return iter((self.events, self.J))
 
 
 @dataclasses.dataclass
@@ -78,6 +108,8 @@ class ClusterScheduler:
         self.realloc_cost = realloc_cost_s
         self.min_delta = min_delta
         self.integer_chips = integer_chips
+        # device→host event-budget fallbacks taken by simulate()
+        self.device_fallbacks = 0
 
     # ---- per-job speedups (paper §7) ------------------------------------
     def _job_speedup(self, job: Job) -> Speedup:
@@ -249,10 +281,11 @@ class ClusterScheduler:
         return self.current_allocations_fleets([jobs])[0]
 
     # ---- event loop -----------------------------------------------------
-    def simulate(self, jobs: list[Job]):
+    def simulate(self, jobs: list[Job]) -> ClusterSimResult:
         """Run to completion: arrivals + completions + reallocation costs.
 
-        Returns (events, J) where J = Σ wᵢ·(Tᵢ − arrivalᵢ).
+        Returns a ``ClusterSimResult`` (iterates as ``(events, J)``)
+        with J = Σ wᵢ·(Tᵢ − arrivalᵢ).
 
         When no real-world cost is configured (``realloc_cost_s == 0``
         and continuous chips) the run is the paper's exact OPT execution
@@ -264,12 +297,19 @@ class ClusterScheduler:
         an anti-thrash heuristic for *costly* reallocations: with no
         cost model there is nothing to avoid, so the cost-free path
         executes the exact (unmerged) optimum.
+
+        If the device engine fails to finish every job within its fixed
+        event budget, the run is re-executed on the host loop and the
+        result is flagged (``status="device-event-budget-exhausted"``,
+        one warning logged per process) — check ``.ok`` when the
+        distinction matters.
         """
         if self.realloc_cost == 0.0 and not self.integer_chips:
             return self._simulate_device(jobs)
-        return self.simulate_host(jobs)
+        events, J = self.simulate_host(jobs)
+        return ClusterSimResult(events=events, J=J, path="host")
 
-    def _simulate_device(self, jobs: list[Job]):
+    def _simulate_device(self, jobs: list[Job]) -> ClusterSimResult:
         """Exact OPT execution on the scenario engine (no cost model).
 
         Per-job speedups ride in as job-indexed leaves aligned with the
@@ -281,27 +321,39 @@ class ClusterScheduler:
 
         n = len(jobs)
         if n == 0:
-            return [], 0.0
+            return ClusterSimResult(events=[], J=0.0)
         # jobs already completed (done set) are padding: size 0
         x = np.array([0.0 if j.done is not None else j.size for j in jobs])
         w = np.array([j.weight for j in jobs])
         arr = np.array([j.arrival for j in jobs])
         if not (x > 0).any():
-            return [], 0.0
+            return ClusterSimResult(events=[], J=0.0)
         sp = self.slot_speedup(jobs)
         policy = (SmartFillPolicy(sp, B=self.B) if sp is self.sp
                   else HeteroSmartFillPolicy(sp, B=self.B))
         res = simulate_policy_device(
             sp, x, w, policy, B=self.B, arrival=arr)
         if not np.isfinite(res.J):      # event budget exhausted — fall back
-            return self.simulate_host(jobs)
+            self.device_fallbacks += 1
+            global _warned_device_fallback
+            if not _warned_device_fallback:
+                _warned_device_fallback = True
+                _log.warning(
+                    "device scenario engine exhausted its %d-event budget "
+                    "on a %d-job instance; re-running on the host loop "
+                    "(flagged on ClusterSimResult.status; further "
+                    "occurrences are counted, not logged)",
+                    4 * n + 16, n)
+            events, J = self.simulate_host(jobs)
+            return ClusterSimResult(events=events, J=J, path="host",
+                                    status="device-event-budget-exhausted")
         live = x > 0
         J = float(np.sum(np.where(live, w * (res.T - arr), 0.0)))
         # host-loop convention: jobs that entered already completed still
         # contribute their recorded flow time
         J += sum(j.weight * (j.done - j.arrival) for j in jobs
                  if j.done is not None)
-        return res.events, J
+        return ClusterSimResult(events=res.events, J=J)
 
     def simulate_host(self, jobs: list[Job]):
         """Host event loop with real-world costs (the pre-engine path).

@@ -2,11 +2,18 @@
 
 Every policy is a frozen-dataclass pytree implementing one interface,
 
-    policy(rem, w, active) → (M,) allocations θ with Σ over active ≤ B,
+    policy(rem, w, active, B=None) → (M,) allocations θ with
+    Σ over active ≤ B,
 
 in pure jnp ops, so policies are swappable inside the engine's
 ``lax.scan`` (``core/simulator.py``) and batchable under ``jax.vmap``
-(``simulate_ensemble``).  All numeric parameters — the speedup function,
+(``simulate_ensemble``).  The optional 4th argument is the *current*
+budget under dynamic-budget (fault-aware) execution: ``None`` (the
+default, and the only form the legacy engine uses) means "spend your
+own ``B``"; a traced value B(t) overrides it for this event, so
+re-planning policies re-solve under the live budget and cached plans
+(``HeteroSmartFillPolicy.pinned(cache_plan=True)``) invalidate and
+re-solve instead of executing a stale table.  All numeric parameters — the speedup function,
 B, heSRPT's exponent, static constants — are pytree *children*, so any
 of them can carry a leading (K,) workload dimension and be vmapped per
 instance by the ensemble runner (e.g. per-workload budgets or fitted
@@ -89,8 +96,13 @@ class Policy:
     device_ready = True
     name = "policy"
 
-    def __call__(self, rem, w, active):
+    def __call__(self, rem, w, active, B=None):
         raise NotImplementedError
+
+    def _budget(self, B):
+        """The budget to spend this event: the engine-supplied B(t)
+        under fault-aware execution, else the policy's own B."""
+        return self.B if B is None else B
 
 
 @jax.tree_util.register_pytree_node_class
@@ -108,9 +120,9 @@ class EquiPolicy(Policy):
     def tree_unflatten(cls, aux, children):
         return cls(B=children[0])
 
-    def __call__(self, rem, w, active):
+    def __call__(self, rem, w, active, B=None):
         m = jnp.sum(active)
-        share = self.B / jnp.maximum(m, 1)
+        share = self._budget(B) / jnp.maximum(m, 1)
         return jnp.where(active, share, 0.0)
 
 
@@ -129,10 +141,11 @@ class SRPT1Policy(Policy):
     def tree_unflatten(cls, aux, children):
         return cls(B=children[0])
 
-    def __call__(self, rem, w, active):
+    def __call__(self, rem, w, active, B=None):
         key = jnp.where(active, rem, jnp.inf)
         i = jnp.argmin(key)
-        out = jnp.zeros_like(rem).at[i].set(self.B)
+        out = jnp.zeros_like(rem).at[i].set(
+            jnp.asarray(self._budget(B), rem.dtype))
         return jnp.where(active, out, 0.0)
 
 
@@ -153,7 +166,7 @@ class HeSRPTPolicy(Policy):
     def tree_unflatten(cls, aux, children):
         return cls(p=children[0], B=children[1])
 
-    def __call__(self, rem, w, active):
+    def __call__(self, rem, w, active, B=None):
         M = rem.shape[0]
         order = _active_order(rem, w, active)
         ws = jnp.where(active, w, 0.0)[order]
@@ -167,7 +180,7 @@ class HeSRPTPolicy(Policy):
         Wm = jnp.maximum(Wc, 0.0) ** mexp
         Wm_prev = jnp.concatenate([jnp.zeros((1,), Wm.dtype), Wm[:-1]])
         Wk = Wm[jnp.maximum(m - 1, 0)]
-        shares = self.B * (Wm - Wm_prev) / jnp.maximum(Wk, _TINY)
+        shares = self._budget(B) * (Wm - Wm_prev) / jnp.maximum(Wk, _TINY)
         shares = jnp.where(jnp.arange(M) < m, shares, 0.0)
         out = jnp.zeros_like(rem).at[order].set(shares)
         return jnp.where(active, out, 0.0)
@@ -207,7 +220,7 @@ class SmartFillPolicy(Policy):
                    descent_iters=descent_iters, cap_iters=cap_iters,
                    fast=fast)
 
-    def __call__(self, rem, w, active):
+    def __call__(self, rem, w, active, B=None):
         from repro.core.speedup import is_per_job
 
         M = rem.shape[0]
@@ -223,7 +236,8 @@ class SmartFillPolicy(Policy):
         # HeteroSmartFillPolicy for those — this guard just makes the
         # mistake safe).
         fast = bool(self.fast) and not is_per_job(self.sp)
-        theta, *_ = _solve(self.sp, xs, ws, jnp.asarray(self.B, xs.dtype),
+        theta, *_ = _solve(self.sp, xs, ws,
+                           jnp.asarray(self._budget(B), xs.dtype),
                            m, self.coarse, self.descent_iters,
                            self.cap_iters, fast, with_times=False)
         col = jnp.take(theta, jnp.clip(m - 1, 0, M - 1), axis=1)
@@ -254,14 +268,15 @@ class GWFStaticPolicy(Policy):
     def tree_unflatten(cls, aux, children):
         return cls(sp=children[0], c=children[1], B=children[2])
 
-    def __call__(self, rem, w, active):
+    def __call__(self, rem, w, active, B=None):
         if self.c is None:
             wmax = jnp.max(jnp.where(active, w, 0.0))
             c = jnp.where(active, w, 1.0) / jnp.maximum(wmax, _TINY)
         else:
             c = self.c
         c = jnp.clip(c, 1e-12, None)
-        th = solve_cap(self.sp, jnp.asarray(self.B, rem.dtype), c, active)
+        th = solve_cap(self.sp, jnp.asarray(self._budget(B), rem.dtype),
+                       c, active)
         return jnp.where(active, th, 0.0)
 
 
@@ -285,7 +300,10 @@ class HeteroSmartFillPolicy(Policy):
 
     ``pinned(..., cache_plan=True)`` goes one step further and stores
     the one-shot allocation table Θ, making each event an O(M) lookup
-    (see ``pinned``).  ``precise=False`` swaps the per-event re-solve
+    (see ``pinned``).  Under dynamic budgets (the engine passes B(t))
+    the cached table self-invalidates: it executes verbatim while
+    B(t) == the construction budget and re-solves on the pinned order
+    the moment a budget event moves it — never a stale table.  ``precise=False`` swaps the per-event re-solve
     onto the relaxed grid/descent path (~3× cheaper, ~1e−4-grade
     allocations) for streaming re-planning where events perturb the
     state anyway.
@@ -371,7 +389,7 @@ class HeteroSmartFillPolicy(Policy):
                            jnp.result_type(float))
         return cls(sp=sp, B=B, rank=rank, theta=theta, **kwargs)
 
-    def __call__(self, rem, w, active):
+    def __call__(self, rem, w, active, B=None):
         M = rem.shape[0]
         if self.rank is None:
             rate = jnp.broadcast_to(
@@ -383,21 +401,37 @@ class HeteroSmartFillPolicy(Policy):
                             jnp.inf)
         order = jnp.lexsort((w, key))
         m = jnp.sum(active)
-        if self.theta is not None:
-            # cached-plan execution: position r < m holds the active job
-            # of r-th smallest pinned rank, which under pure completions
-            # is exactly rank r — row r, column m−1 of the stored table
-            theta = jnp.asarray(self.theta, rem.dtype)
-        else:
+
+        def resolve(bv):
             xs = jnp.where(active, rem, 0.0)[order]
             ws = jnp.where(active, w, 0.0)[order]
             sp_o = jax.tree_util.tree_map(
                 lambda l: l[order] if getattr(l, "ndim", 0) >= 1 else l,
                 self.sp)
-            theta, *_ = _solve(sp_o, xs, ws, jnp.asarray(self.B, xs.dtype),
-                               m, self.coarse, self.descent_iters,
-                               self.cap_iters, False, precise=self.precise,
-                               with_times=False)
+            th, *_ = _solve(sp_o, xs, ws, jnp.asarray(bv, xs.dtype),
+                            m, self.coarse, self.descent_iters,
+                            self.cap_iters, False, precise=self.precise,
+                            with_times=False)
+            return th
+
+        if self.theta is not None:
+            # cached-plan execution: position r < m holds the active job
+            # of r-th smallest pinned rank, which under pure completions
+            # is exactly rank r — row r, column m−1 of the stored table
+            table = jnp.asarray(self.theta, rem.dtype)
+            if B is None:
+                theta = table
+            else:
+                # dynamic budget: the stored table was solved under
+                # self.B — execute it verbatim while B(t) matches
+                # (bit-identical to the undisturbed run), re-solve on
+                # the pinned order the moment the budget moves
+                theta = jax.lax.cond(
+                    jnp.all(jnp.asarray(B) == jnp.asarray(self.B)),
+                    lambda: table,
+                    lambda: resolve(B))
+        else:
+            theta = resolve(self._budget(B))
         col = jnp.take(theta, jnp.clip(m - 1, 0, M - 1), axis=1)
         col = jnp.where(jnp.arange(M) < m, col, 0.0)
         out = jnp.zeros_like(rem).at[order].set(col)
@@ -485,16 +519,15 @@ class WeightedMarginalRatePolicy(Policy):
     def tree_unflatten(cls, aux, children):
         return cls(sp=children[0], B=children[1])
 
-    def __call__(self, rem, w, active):
+    def __call__(self, rem, w, active, B=None):
+        b = jnp.asarray(self._budget(B), rem.dtype)
         c = jnp.where(active, rem / jnp.maximum(w, _TINY), 1.0)
         c = c / jnp.maximum(jnp.max(jnp.where(active, c, 0.0)), _TINY)
         c = jnp.clip(c, 1e-12, None)
         if _uses_sorted_cap(self.sp):
-            th = solve_cap_hetero_sorted(
-                self.sp, jnp.asarray(self.B, rem.dtype), c, active)
+            th = solve_cap_hetero_sorted(self.sp, b, c, active)
         else:
-            th = solve_cap_hetero(self.sp, jnp.asarray(self.B, rem.dtype),
-                                  c, active)
+            th = solve_cap_hetero(self.sp, b, c, active)
         return jnp.where(active, th, 0.0)
 
 

@@ -52,11 +52,19 @@ class AdmissionDecision:
     admit: (C,) bool — marginal cost under the threshold.
     marginal_cost: (C,) ΔJ of adding each candidate to the running set.
     baseline_J: optimal J of the running set alone.
+    status: "ok", or "degraded: …" when the watchdog exhausted its
+      retries and the controller fell back to deny-all (admit all-False,
+      marginal_cost +inf) instead of crashing the serving loop.
     """
 
     admit: np.ndarray
     marginal_cost: np.ndarray
     baseline_J: float
+    status: str = "ok"
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
 
 
 def _sorted_instance(sizes, weights):
@@ -76,11 +84,16 @@ class AdmissionController:
       mesh: optional 1-D device mesh for the ``"simulate"`` estimator —
         candidate mixes shard across it.  Defaults to the active mesh
         context at evaluation time (single-device when none is active).
+      watchdog: optional ``robust.Watchdog``.  When set, the J-scoring
+        device call runs under it (retry/timeout/backoff, results
+        validated all-finite); if the watchdog gives up the controller
+        returns a deny-all ``AdmissionDecision`` with
+        ``status="degraded: …"`` instead of crashing the serving loop.
     """
 
     def __init__(self, sp: Speedup, B: float | None = None,
                  cost_threshold: float = np.inf, estimator: str = "plan",
-                 mesh=None):
+                 mesh=None, watchdog=None):
         if estimator not in ("plan", "simulate"):
             raise ValueError("estimator must be 'plan' or 'simulate'")
         self.sp = sp
@@ -88,6 +101,7 @@ class AdmissionController:
         self.cost_threshold = float(cost_threshold)
         self.estimator = estimator
         self.mesh = mesh
+        self.watchdog = watchdog
 
     def evaluate(self, running_sizes, running_weights,
                  cand_sizes, cand_weights,
@@ -155,11 +169,29 @@ class AdmissionController:
             # rank candidates by a J that is not the optimal weighted
             # completion time.
             self._validate_agreeable(X, W, act)
-        if self.estimator == "simulate":
-            J = self._simulated_J(X, W, sp)
-        else:
+
+        def score():
+            if self.estimator == "simulate":
+                return self._simulated_J(X, W, sp)
             sched = smartfill_batched(sp, X, W, B=self.B, active=act)
-            J = np.asarray(sched.J)
+            return np.asarray(sched.J)
+
+        if self.watchdog is not None:
+            from repro.robust.watchdog import WatchdogGiveUp
+
+            try:
+                J = self.watchdog.call(
+                    score, label=f"admission score ({self.estimator})",
+                    validate=lambda j: bool(np.all(np.isfinite(j))))
+            except WatchdogGiveUp as e:
+                # fail closed: admit nothing rather than admit on garbage
+                return AdmissionDecision(
+                    admit=np.zeros(C, dtype=bool),
+                    marginal_cost=np.full(C, np.inf),
+                    baseline_J=float("nan"),
+                    status=f"degraded: {e}")
+        else:
+            J = score()
         marginal = J[1:] - J[0]
         return AdmissionDecision(
             admit=marginal <= self.cost_threshold,

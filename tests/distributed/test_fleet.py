@@ -279,3 +279,33 @@ def test_ensemble_parity_hetero_policies():
                                rtol=1e-6)
     np.testing.assert_array_equal(np.asarray(sh.finished),
                                   np.asarray(ref.finished))
+
+
+def test_ensemble_parity_faulted():
+    """Fault ensembles shard like workloads: per-instance chaos traces
+    ride the mesh and the sharded faulted run equals the single-device
+    faulted run exactly (including the all-padding instance, which must
+    halt before consuming any fault)."""
+    from repro.core.simulator import budget_trace
+    from repro.core.workloads import sample_fault_traces
+
+    X, W, wl = _workloads(21, k=9, m=4)
+    sp = _SPS["regular"]()
+    traces = sample_fault_traces(22, 9, 4, B=B, horizon=4.0,
+                                 preempt_rate=0.8, fail_rate=0.5,
+                                 straggle_rate=0.5)
+    pols = (SmartFillPolicy(sp, B=B), EquiPolicy(B))
+    ref = simulate_ensemble(sp, pols, X, W, faults=traces)
+    sh = simulate_ensemble_sharded(sp, pols, X, W, faults=traces,
+                                   mesh=fleet_mesh(), chunk_size=4)
+    np.testing.assert_array_equal(np.asarray(sh.J), np.asarray(ref.J))
+    np.testing.assert_array_equal(np.asarray(sh.T), np.asarray(ref.T))
+    np.testing.assert_array_equal(np.asarray(sh.finished),
+                                  np.asarray(ref.finished))
+
+    # a shared 1-D trace broadcasts to every lane identically too
+    bt = budget_trace([0.5, 1.5], [3.0, B])
+    ref1 = simulate_ensemble(sp, pols, X, W, faults=bt)
+    sh1 = simulate_ensemble_sharded(sp, pols, X, W, faults=bt,
+                                    mesh=fleet_mesh())
+    np.testing.assert_array_equal(np.asarray(sh1.J), np.asarray(ref1.J))

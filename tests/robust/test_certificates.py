@@ -1,0 +1,88 @@
+"""Plan certificates: on-device validation of SmartFill plans."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import power, smartfill
+from repro.robust import allocation_ok, certify_plan
+
+B = 8.0
+
+
+@pytest.fixture(scope="module")
+def plan():
+    sp = power(1.0, 0.5, B)
+    x = np.array([5.0, 3.0, 1.0])
+    w = 1.0 / x
+    return sp, smartfill(sp, x, w, B=B)
+
+
+def test_allocation_ok_accepts_feasible():
+    active = jnp.array([True, True, False])
+    th = jnp.array([3.0, 5.0, 0.0])
+    assert bool(allocation_ok(th, B, active))
+    # exactly at budget with slack tolerance
+    assert bool(allocation_ok(jnp.array([8.0, 0.0, 0.0]), B, active))
+
+
+def test_allocation_ok_rejects_each_violation():
+    active = jnp.array([True, True, True])
+    assert not bool(allocation_ok(jnp.array([jnp.nan, 1.0, 1.0]), B, active))
+    assert not bool(allocation_ok(jnp.array([jnp.inf, 1.0, 1.0]), B, active))
+    assert not bool(allocation_ok(jnp.array([-1.0, 1.0, 1.0]), B, active))
+    assert not bool(allocation_ok(jnp.array([5.0, 5.0, 5.0]), B, active))
+    assert not bool(allocation_ok(jnp.array([1.0, 1.0, 1.0]), jnp.nan, active))
+
+
+def test_allocation_ok_ignores_inactive_slots():
+    """Garbage parked on inactive slots must not fail the certificate —
+    the engine zeroes them before they are spent."""
+    active = jnp.array([True, False, False])
+    th = jnp.array([4.0, jnp.nan, 100.0])
+    assert bool(allocation_ok(th, B, active))
+
+
+def test_certify_real_plan_passes(plan):
+    sp, sched = plan
+    cert = certify_plan(sp, sched, B=B)
+    assert bool(cert.ok) and bool(cert.finite)
+    assert float(cert.budget) < 1e-8
+    assert max(cert.kkt.values()) < 1e-6
+    assert float(cert.j_gap) < 1e-8
+
+
+def test_certify_detects_corruption(plan):
+    sp, sched = plan
+    import dataclasses
+
+    bad = dataclasses.replace(sched, theta=np.asarray(sched.theta) * 1.5)
+    cert = certify_plan(sp, bad, B=B)
+    assert not bool(cert.ok)
+    assert float(cert.budget) > 0.1        # overspends every phase
+
+    nan = dataclasses.replace(
+        sched, theta=np.where(np.asarray(sched.theta) > 0, np.nan, 0.0))
+    cert = certify_plan(sp, nan, B=B)
+    assert not bool(cert.ok) and not bool(cert.finite)
+
+
+def test_certify_detects_kkt_violation(plan):
+    """A feasible but non-optimal allocation (budget respected, water
+    levels wrong) must fail on the KKT residual, not the budget row."""
+    sp, sched = plan
+    import dataclasses
+
+    theta = np.asarray(sched.theta).copy()
+    # rebalance the last phase column: move bandwidth between two jobs
+    col = theta[:, -1].copy()
+    live = np.flatnonzero(col > 1e-9)
+    if live.size >= 2:
+        shift = 0.4 * col[live[0]]
+        col[live[0]] -= shift
+        col[live[1]] += shift
+    theta[:, -1] = col
+    bad = dataclasses.replace(sched, theta=theta)
+    cert = certify_plan(sp, bad, B=B)
+    assert float(cert.budget) < 1e-8       # still on budget
+    assert not bool(cert.ok)
+    assert max(cert.kkt.values()) > 1e-3

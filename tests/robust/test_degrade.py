@@ -1,0 +1,108 @@
+"""Degradation ladder: certificate-gated fallback, never an infeasible θ.
+
+The contract under forced solver failure (SaboteurPolicy corrupting the
+primary rung): the executed allocation is always finite, non-negative,
+and within the *live* budget B(t); and when the primary's certificate
+passes, the wrapped run is bit-identical to the unwrapped policy.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import power, simulate_policy_device
+from repro.core.simulator import budget_trace
+from repro.robust import DegradingPolicy, SaboteurPolicy, degradation_report
+from repro.sched.policies import EquiPolicy, GWFStaticPolicy, SmartFillPolicy
+
+B = 8.0
+SP = power(1.0, 0.5, B)
+X = np.array([5.0, 3.0, 1.0])
+W = 1.0 / X
+
+
+def _ladder(primary=None):
+    return DegradingPolicy.ladder(SP, B=B, primary=primary)
+
+
+def test_healthy_run_bit_identical_to_unwrapped():
+    plain = simulate_policy_device(SP, X, W, SmartFillPolicy(SP, B=B))
+    wrapped = simulate_policy_device(SP, X, W, _ladder())
+    assert wrapped.J == plain.J                       # bitwise, not approx
+    np.testing.assert_array_equal(wrapped.T, plain.T)
+    for (t0, th0), (t1, th1) in zip(plain.events, wrapped.events):
+        assert t0 == t1
+        np.testing.assert_array_equal(th0, th1)
+
+
+@pytest.mark.parametrize("mode", ["nan", "overspend", "negative"])
+def test_sabotaged_primary_falls_to_gwf(mode):
+    sab = SaboteurPolicy(SmartFillPolicy(SP, B=B), mode=mode)
+    lad = DegradingPolicy(rungs=(sab, GWFStaticPolicy(SP, B=B),
+                                 EquiPolicy(B)))
+    gwf = simulate_policy_device(SP, X, W, GWFStaticPolicy(SP, B=B))
+    res = simulate_policy_device(SP, X, W, lad)
+    assert res.J == gwf.J                             # rung 1 exactly
+    for _, th in res.events:
+        assert np.all(np.isfinite(th))
+        assert np.all(th >= 0)
+        assert th.sum() <= B * (1 + 1e-6)
+
+
+def test_all_rungs_sabotaged_emits_zero_allocation():
+    rungs = tuple(SaboteurPolicy(r, mode="nan")
+                  for r in _ladder().rungs)
+    lad = DegradingPolicy(rungs=rungs)
+    rem = jnp.asarray(X)
+    active = jnp.ones(3, bool)
+    th = np.asarray(lad(rem, jnp.asarray(W), active))
+    np.testing.assert_array_equal(th, np.zeros(3))
+    assert int(lad.rung_index(rem, jnp.asarray(W), active)) == len(rungs)
+
+
+def test_respects_dynamic_budget():
+    """After a budget-drop fault the ladder's certificate gates against
+    B(t), not the construction-time budget."""
+    sab = SaboteurPolicy(SmartFillPolicy(SP, B=B), mode="overspend")
+    lad = DegradingPolicy(rungs=(sab, GWFStaticPolicy(SP, B=B),
+                                 EquiPolicy(B)))
+    tr = budget_trace([1.0], [2.0])                   # B: 8 -> 2 at t = 1
+    res = simulate_policy_device(SP, X, W, lad, faults=tr)
+    assert np.isfinite(res.J)
+    for t, th in res.events:
+        cap = 2.0 if t >= 1.0 else B
+        assert th.sum() <= cap * (1 + 1e-6), (t, th)
+
+
+def test_rung_index_reports_selection():
+    lad = _ladder()
+    rem, w, act = jnp.asarray(X), jnp.asarray(W), jnp.ones(3, bool)
+    assert int(lad.rung_index(rem, w, act)) == 0
+    sab = DegradingPolicy(rungs=(
+        SaboteurPolicy(SmartFillPolicy(SP, B=B), mode="nan"),
+        GWFStaticPolicy(SP, B=B), EquiPolicy(B)))
+    assert int(sab.rung_index(rem, w, act)) == 1
+
+
+def test_min_active_mixes_rungs_along_trajectory():
+    """Sabotage only while > 1 job is active: the run starts on the
+    fallback rung and finishes on the (healthy) primary."""
+    sab = SaboteurPolicy(SmartFillPolicy(SP, B=B), mode="nan", min_active=1)
+    lad = DegradingPolicy(rungs=(sab, EquiPolicy(B)))
+    rep = degradation_report(SP, X, W, lad, B=B)
+    assert np.isfinite(rep["J"])
+    assert rep["rung_counts"].get(1, 0) > 0           # degraded early
+    assert rep["rung_counts"].get(0, 0) > 0           # primary endgame
+
+
+def test_degradation_report_healthy_is_all_primary():
+    rep = degradation_report(SP, X, W, _ladder(), B=B)
+    assert set(rep["rung_counts"]) == {0}
+    plain = simulate_policy_device(SP, X, W, SmartFillPolicy(SP, B=B))
+    assert abs(rep["J"] - plain.J) < 1e-9
+
+
+def test_empty_ladder_rejected():
+    with pytest.raises(ValueError, match="at least one rung"):
+        DegradingPolicy(rungs=())
+    with pytest.raises(ValueError, match="mode"):
+        SaboteurPolicy(EquiPolicy(B), mode="garbage")

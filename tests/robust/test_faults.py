@@ -1,0 +1,326 @@
+"""Fault-aware engine: device == host oracle under chaos.
+
+The acceptance bar for the robustness layer: across ≥ 64 seeded fault
+traces spanning every speedup family — budget preemptions/recoveries,
+job failures, stragglers, coincident with arrivals and completions —
+the ``lax.scan`` fault-aware step and the numpy reference oracle agree
+on J to 1e-6 relative.  Plus hand-computed single-fault semantics, the
+ensemble/sharding parity, sampler properties, and the front-door
+validation satellite.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    log_speedup,
+    neg_power,
+    power,
+    saturating,
+    shifted_power,
+    simulate_policy_device,
+    simulate_policy_reference,
+)
+from repro.core.simulator import (
+    KIND_BUDGET,
+    KIND_FAILURE,
+    KIND_STRAGGLER,
+    FaultTrace,
+    budget_trace,
+    simulate_ensemble,
+)
+from repro.core.workloads import sample_fault_traces, sample_workloads
+from repro.sched.policies import EquiPolicy, GWFStaticPolicy, SmartFillPolicy
+
+B = 8.0
+RTOL = 1e-6
+
+SPS = {
+    "power": power(1.0, 0.5, B),
+    "shifted": shifted_power(1.0, 4.0, 0.5, B),
+    "log": log_speedup(1.0, 1.0, B),
+    "neg_power": neg_power(5.0, 2.0, -1.0, B),
+    "saturating": saturating(1.0, 12.0, 2.0, B),
+}
+
+
+def _trace(times, kinds, jobs, values):
+    return FaultTrace(times=np.asarray(times, float),
+                      kinds=np.asarray(kinds, np.int32),
+                      jobs=np.asarray(jobs, np.int32),
+                      values=np.asarray(values, float))
+
+
+def _jitted(pol):
+    """One-compile policy wrapper for the host reference loop (the
+    un-jitted per-event dispatch would dominate the differential sweep)."""
+    fast = jax.jit(lambda rem, w, active, b: pol(rem, w, active, b))
+
+    def call(rem, w, active, b=None):
+        return np.asarray(fast(rem, w, active,
+                               pol.B if b is None else b))
+
+    return call
+
+
+# ---------------------------------------------------------------------------
+# The differential proof: 65 seeded traces, all five families
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fam", list(SPS))
+def test_device_matches_reference_under_chaos(fam):
+    """13 seeded chaos traces per family (65 total ≥ 64): preemption +
+    recovery, failures, stragglers, with fault times snapped onto the
+    arrival times so coincident budget-step/arrival events are hit."""
+    sp = SPS[fam]
+    seed = 100 + list(SPS).index(fam)
+    M = 5
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(1.0, 6.0, M)
+    order = np.argsort(-x)
+    x = x[order]
+    w = 1.0 / x
+    arrival = np.concatenate([[0.0], np.sort(rng.uniform(0.0, 2.0, M - 1))])
+    traces = sample_fault_traces(
+        seed, 13, M, B=B, horizon=5.0, preempt_rate=0.6, fail_rate=0.4,
+        straggle_rate=0.4, snap_to=arrival, snap_frac=0.5)
+    pol = GWFStaticPolicy(sp, B=B)
+    ref_pol = _jitted(pol)
+    for k in range(13):
+        tr = traces.instance(k)
+        dev = simulate_policy_device(sp, x, w, pol, arrival=arrival,
+                                     faults=tr)
+        ref = simulate_policy_reference(sp, x, w, ref_pol, B=B,
+                                        arrival=arrival, faults=tr)
+        assert np.isfinite(ref.J)
+        assert abs(dev.J - ref.J) / max(ref.J, 1e-12) < RTOL, (fam, k)
+        np.testing.assert_allclose(dev.T, ref.T, rtol=RTOL, atol=RTOL)
+
+
+def test_coincident_budget_arrival_completion():
+    """Budget step + arrival + completion at the same timestamp, plus a
+    second coincident budget event draining through a dt = 0 step."""
+    sp = power(1.0, 0.5, 4.0)
+    x = np.array([2.0, 3.0])
+    w = np.array([1.0, 1.0])
+    arrival = np.array([0.0, 1.0])      # job 1 lands exactly at t = 1
+    # job 0 alone: theta = 4, rate 2 -> completes at exactly t = 1;
+    # two budget events at t = 1 (the second wins): B -> 2 then -> 1
+    tr = budget_trace([1.0, 1.0], [2.0, 1.0])
+    pol = EquiPolicy(4.0)
+    dev = simulate_policy_device(sp, x, w, pol, arrival=arrival, faults=tr)
+    ref = simulate_policy_reference(sp, x, w, _jitted(pol), B=4.0,
+                                    arrival=arrival, faults=tr)
+    # job 1 runs alone under B = 1: rate 1, completes at 1 + 3
+    np.testing.assert_allclose(dev.T, [1.0, 4.0], rtol=1e-9)
+    np.testing.assert_allclose(dev.T, ref.T, rtol=RTOL)
+    assert abs(dev.J - ref.J) / ref.J < RTOL
+
+
+# ---------------------------------------------------------------------------
+# Hand-computed single-fault semantics
+# ---------------------------------------------------------------------------
+def test_budget_step_semantics():
+    sp = power(1.0, 0.5, 4.0)
+    x = np.array([2.0, 2.0])
+    w = np.array([1.0, 1.0])
+    tr = budget_trace([1.0], [1.0])     # B: 4 -> 1 at t = 1
+    dev = simulate_policy_device(sp, x, w, EquiPolicy(4.0), faults=tr)
+    # until t=1: theta = 2 each, rate sqrt(2); after: theta = 0.5 each
+    T = 1.0 + (2.0 - np.sqrt(2.0)) / np.sqrt(0.5)
+    np.testing.assert_allclose(dev.T, [T, T], rtol=1e-9)
+
+
+def test_failure_rework_semantics():
+    sp = power(1.0, 0.5, 4.0)
+    x = np.array([3.0])
+    w = np.array([1.0])
+    # rate 2; at t = 1 rem = 1, rework 0.5*(x - rem) = 1 -> rem = 2
+    tr = _trace([1.0], [KIND_FAILURE], [0], [0.5])
+    dev = simulate_policy_device(sp, x, w, EquiPolicy(4.0), faults=tr)
+    np.testing.assert_allclose(dev.T, [2.0], rtol=1e-9)
+
+
+def test_full_failure_restarts_job():
+    sp = power(1.0, 0.5, 4.0)
+    x = np.array([3.0])
+    w = np.array([1.0])
+    tr = _trace([1.0], [KIND_FAILURE], [0], [1.0])   # lose everything
+    dev = simulate_policy_device(sp, x, w, EquiPolicy(4.0), faults=tr)
+    np.testing.assert_allclose(dev.T, [1.0 + 1.5], rtol=1e-9)
+
+
+def test_straggler_semantics():
+    sp = power(1.0, 0.5, 4.0)
+    x = np.array([4.0])
+    w = np.array([1.0])
+    # rate 2; at t = 1 rem = 2, multiplier 0.5 -> rate 1 -> T = 3
+    tr = _trace([1.0], [KIND_STRAGGLER], [0], [0.5])
+    dev = simulate_policy_device(sp, x, w, EquiPolicy(4.0), faults=tr)
+    np.testing.assert_allclose(dev.T, [3.0], rtol=1e-9)
+
+
+def test_fault_on_completed_job_is_inert():
+    sp = power(1.0, 0.5, 4.0)
+    x = np.array([2.0])
+    w = np.array([1.0])
+    # completes at t = 1; a failure at t = 2 must not resurrect it
+    tr = _trace([2.0], [KIND_FAILURE], [0], [1.0])
+    dev = simulate_policy_device(sp, x, w, EquiPolicy(4.0), faults=tr)
+    np.testing.assert_allclose(dev.T, [1.0], rtol=1e-9)
+
+
+def test_legacy_unfaulted_path_accepts_three_arg_policy():
+    """faults=None keeps the 3-argument policy protocol working."""
+    @jax.tree_util.register_pytree_node_class
+    class OldEqui:
+        device_ready = True
+        name = "old-equi"
+
+        def __init__(self, B):
+            self.B = B
+
+        def tree_flatten(self):
+            return (self.B,), None
+
+        @classmethod
+        def tree_unflatten(cls, aux, children):
+            return cls(children[0])
+
+        def __call__(self, rem, w, active):
+            import jax.numpy as jnp
+            n = jnp.maximum(jnp.sum(active), 1)
+            return jnp.where(active, self.B / n, 0.0)
+
+    sp = power(1.0, 0.5, 4.0)
+    x = np.array([2.0, 2.0])
+    dev = simulate_policy_device(sp, x, 1.0 / x, OldEqui(4.0))
+    ref = simulate_policy_device(sp, x, 1.0 / x, EquiPolicy(4.0))
+    np.testing.assert_allclose(dev.T, ref.T, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Ensemble parity
+# ---------------------------------------------------------------------------
+def test_faulted_ensemble_matches_single_instance():
+    sp = power(1.0, 0.6, B)
+    K, M = 6, 4
+    wb = sample_workloads(3, K, M, B=B)
+    traces = sample_fault_traces(4, K, M, B=B, horizon=4.0,
+                                 preempt_rate=0.7, fail_rate=0.5,
+                                 straggle_rate=0.5)
+    pols = (SmartFillPolicy(sp, B=B), EquiPolicy(B))
+    res = simulate_ensemble(sp, pols, wb.X, wb.W, faults=traces)
+    J = np.asarray(res.J)
+    for p, pol in enumerate(pols):
+        for k in range(K):
+            one = simulate_policy_device(sp, wb.X[k], wb.W[k], pol,
+                                         faults=traces.instance(k))
+            assert abs(J[p, k] - one.J) <= 1e-12 * max(1.0, one.J), (p, k)
+
+
+def test_shared_trace_broadcasts_over_ensemble():
+    sp = power(1.0, 0.6, B)
+    wb = sample_workloads(5, 4, 3, B=B)
+    tr = budget_trace([0.5, 1.5], [3.0, B])
+    pols = (EquiPolicy(B),)
+    res = simulate_ensemble(sp, pols, wb.X, wb.W, faults=tr)
+    for k in range(4):
+        one = simulate_policy_device(sp, wb.X[k], wb.W[k], pols[0],
+                                     faults=tr)
+        assert abs(np.asarray(res.J)[0, k] - one.J) <= 1e-12
+
+
+def test_faulted_run_without_budget_raises():
+    sp = power(1.0, 0.5, B)
+
+    class NoB:
+        device_ready = True
+        name = "no-budget"
+
+        def __call__(self, rem, w, active, b=None):
+            import jax.numpy as jnp
+            return jnp.where(active, 1.0, 0.0)
+
+    with pytest.raises(ValueError, match="initial budget"):
+        simulate_policy_device(sp, np.array([1.0]), np.array([1.0]), NoB(),
+                               faults=budget_trace([1.0], [2.0]))
+
+
+# ---------------------------------------------------------------------------
+# Sampler properties
+# ---------------------------------------------------------------------------
+def test_sampler_shapes_and_validity():
+    M = 6
+    tr = sample_fault_traces(0, 8, M, B=B, horizon=5.0, preempt_rate=1.0,
+                             fail_rate=1.0, straggle_rate=1.0)
+    assert tr.batched and tr.times.shape == (8, tr.S)
+    tr.validate(M)                       # sorted, kinds/jobs/values in range
+    # recovery pairing: every preemption is followed by a restore to B
+    for k in range(8):
+        one = tr.instance(k)
+        fin = np.isfinite(one.times)
+        vals = one.values[fin & (one.kinds == KIND_BUDGET)]
+        if vals.size:
+            assert np.any(vals == B) or np.all(vals < B)
+
+
+def test_sampler_is_seeded():
+    a = sample_fault_traces(7, 3, 4, B=B, horizon=3.0, preempt_rate=1.0)
+    b = sample_fault_traces(7, 3, 4, B=B, horizon=3.0, preempt_rate=1.0)
+    np.testing.assert_array_equal(a.times, b.times)
+    np.testing.assert_array_equal(a.values, b.values)
+
+
+def test_sampler_snap_creates_coincidences():
+    grid = np.array([0.5, 1.0, 2.0])
+    tr = sample_fault_traces(1, 4, 4, B=B, horizon=3.0, preempt_rate=2.0,
+                             snap_to=grid, snap_frac=1.0, recover=False)
+    fin = np.isfinite(tr.times)
+    assert np.all(np.isin(np.round(tr.times[fin], 12), np.round(grid, 12)))
+
+
+# ---------------------------------------------------------------------------
+# Validation satellite: front doors reject garbage loudly
+# ---------------------------------------------------------------------------
+def test_rejects_bad_workloads_and_budgets():
+    sp = power(1.0, 0.5, B)
+    pol = EquiPolicy(B)
+    with pytest.raises(ValueError, match="finite"):
+        simulate_policy_device(sp, np.array([np.inf]), np.array([1.0]), pol)
+    with pytest.raises(ValueError, match="≥ 0"):
+        simulate_policy_device(sp, np.array([-1.0]), np.array([1.0]), pol)
+    with pytest.raises(ValueError, match="NaN"):
+        simulate_policy_device(sp, np.array([1.0]), np.array([1.0]), pol,
+                               arrival=np.array([np.nan]))
+    with pytest.raises(ValueError, match="finite and > 0"):
+        simulate_policy_device(sp, np.array([1.0]), np.array([1.0]),
+                               EquiPolicy(-2.0))
+    with pytest.raises(ValueError):
+        simulate_ensemble(sp, (pol,), np.array([[1.0, -2.0]]),
+                          np.array([[1.0, 1.0]]))
+
+
+def test_rejects_malformed_fault_traces():
+    sp = power(1.0, 0.5, B)
+    pol = EquiPolicy(B)
+    x, w = np.array([2.0]), np.array([1.0])
+    bad = [
+        _trace([2.0, 1.0], [0, 0], [0, 0], [1.0, 1.0]),     # unsorted
+        _trace([1.0], [7], [0], [1.0]),                     # unknown kind
+        _trace([1.0], [KIND_BUDGET], [0], [-1.0]),          # B <= 0
+        _trace([1.0], [KIND_FAILURE], [0], [1.5]),          # loss > 1
+        _trace([1.0], [KIND_STRAGGLER], [0], [0.0]),        # rate 0
+        _trace([1.0], [KIND_FAILURE], [3], [0.5]),          # job out of range
+    ]
+    for tr in bad:
+        with pytest.raises(ValueError):
+            simulate_policy_device(sp, x, w, pol, faults=tr)
+
+
+def test_reference_rejects_batched_trace():
+    sp = power(1.0, 0.5, B)
+    tr = sample_fault_traces(0, 3, 2, B=B, horizon=2.0, preempt_rate=1.0)
+    with pytest.raises(ValueError, match="instance"):
+        simulate_policy_reference(sp, np.array([2.0, 1.0]),
+                                  np.array([0.5, 1.0]),
+                                  _jitted(EquiPolicy(B)), B=B, faults=tr)

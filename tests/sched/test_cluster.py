@@ -241,3 +241,60 @@ def test_unstackable_job_speedup_raises_not_falls_back():
              Job(name="b", size=50.0, weight=0.02)]
     with pytest.raises(TypeError, match="scheduler-wide"):
         cs_gen.plan(jobs2)
+
+
+# ---------------------------------------------------------------------------
+# Loud event-budget-exhaustion fallback (robustness satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_returns_ok_result_object():
+    from repro.sched.cluster import ClusterSimResult
+
+    sp = log_speedup(1.0, 1.0, B)
+    res = ClusterScheduler(sp, B).simulate(_jobs())
+    assert isinstance(res, ClusterSimResult)
+    assert res.ok and res.status == "ok" and res.path == "device"
+    events, J = res                      # tuple unpacking stays supported
+    assert J == res.J and events is res.events
+
+
+def test_device_event_budget_exhaustion_is_loud(monkeypatch, caplog):
+    """A non-finite device J triggers the host re-run, a flagged status,
+    a fallback counter, and exactly one warning per process."""
+    import logging
+
+    import repro.sched.cluster as cluster_mod
+
+    class Unfinished:
+        J = float("inf")
+        T = np.zeros(2)
+        events = []
+        n_events = 0
+
+    def fake_simulate_policy_device(*a, **k):
+        return Unfinished()
+
+    import repro.core as core_mod
+    monkeypatch.setattr(core_mod, "simulate_policy_device",
+                        fake_simulate_policy_device)
+    monkeypatch.setattr(cluster_mod, "_warned_device_fallback", False)
+
+    sp = log_speedup(1.0, 1.0, B)
+    cs = ClusterScheduler(sp, B)
+    with caplog.at_level(logging.WARNING, logger="repro.sched.cluster"):
+        r1 = cs.simulate(_jobs())
+        r2 = cs.simulate(_jobs())
+    for r in (r1, r2):
+        assert not r.ok
+        assert r.status == "device-event-budget-exhausted"
+        assert r.path == "host"
+        assert np.isfinite(r.J)
+    assert cs.device_fallbacks == 2
+    warnings = [rec for rec in caplog.records
+                if "event budget" in rec.message]
+    assert len(warnings) == 1            # logged once, counted after
+
+    # the host re-run must agree with an honest host-loop execution
+    events, J_host = cs.simulate_host(_jobs())
+    assert abs(r1.J - J_host) < 1e-9 * max(1.0, J_host)

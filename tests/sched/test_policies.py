@@ -224,3 +224,89 @@ def test_hetero_policy_batches_per_workload_leaves():
     assert np.all(np.isfinite(J))
     # SmartFill should not lose to the static-constant heuristic overall
     assert np.mean(J[0] <= J[1] * (1 + 1e-9)) >= 0.5
+
+
+# ---------------------------------------------------------------------------
+# Dynamic budgets: every policy honors B(t); cached plans self-invalidate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fam", sorted(SP))
+def test_policies_respect_live_budget_argument(fam):
+    """policy(rem, w, active, B_t) spends B_t, not the construction B."""
+    sp = SP[fam]
+    rem = jnp.asarray([6.0, 3.0, 1.0])
+    w = 1.0 / rem
+    active = jnp.ones(3, bool)
+    for pol in _mk_policies(sp):
+        th_low = np.asarray(pol(rem, w, active, 2.5))
+        assert th_low.sum() <= 2.5 * (1 + 1e-6), pol.name
+        th_default = np.asarray(pol(rem, w, active))
+        th_same = np.asarray(pol(rem, w, active, B))
+        np.testing.assert_allclose(th_same, th_default, rtol=1e-12)
+
+
+def _pinned_cached(sp, x, w):
+    from repro.sched.policies import HeteroSmartFillPolicy
+
+    return HeteroSmartFillPolicy.pinned(sp, x, w, B=B, cache_plan=True)
+
+
+def _hetero_instance(seed=3, m=5):
+    from repro.core.speedup import stack_speedups
+
+    rng = np.random.default_rng(seed)
+    st = stack_speedups([power(1.0, p, B)
+                         for p in rng.uniform(0.3, 0.9, m)])
+    x = np.sort(rng.uniform(1.0, 8.0, m))[::-1].copy()
+    return st, x, 1.0 / x
+
+
+def test_cached_plan_noop_budget_event_executes_table_verbatim():
+    """A budget event that re-asserts the construction budget must leave
+    the cached table executing verbatim (where(True, table, ·)) — same
+    allocations, so the trajectory agrees to the ulp-level rounding the
+    extra integration split introduces."""
+    from repro.core import simulate_policy_device
+    from repro.core.simulator import budget_trace
+
+    st, x, w = _hetero_instance()
+    pol = _pinned_cached(st, x, w)
+    plain = simulate_policy_device(st, x, w, pol, B=B)
+    noop = simulate_policy_device(st, x, w, pol, B=B,
+                                  faults=budget_trace([0.5], [B]))
+    assert abs(noop.J - plain.J) <= 1e-12 * plain.J
+    np.testing.assert_allclose(noop.T, plain.T, rtol=1e-12)
+    # the allocations themselves are the cached table rows, bit-equal:
+    # every faulted event matches a plain event at the same count
+    plain_th = {th.tobytes() for _, th in plain.events}
+    for _, th in noop.events:
+        assert th.tobytes() in plain_th
+
+
+def test_cached_plan_invalidates_on_budget_change():
+    """The moment B(t) moves, the cached table re-solves on the pinned
+    order — device == host oracle, and no event overspends B(t)."""
+    import jax
+
+    from repro.core import simulate_policy_device, simulate_policy_reference
+    from repro.core.simulator import budget_trace
+
+    st, x, w = _hetero_instance()
+    pol = _pinned_cached(st, x, w)
+    tr = budget_trace([0.4, 1.8], [B / 2, B])     # drop, then restore
+    dev = simulate_policy_device(st, x, w, pol, B=B, faults=tr)
+    fast = jax.jit(lambda rem, ww, act, b: pol(rem, ww, act, b))
+    ref = simulate_policy_reference(
+        st, x, w,
+        lambda rem, ww, act, b=None: np.asarray(
+            fast(rem, ww, act, B if b is None else b)),
+        B=B, faults=tr)
+    assert np.isfinite(ref.J)
+    assert abs(dev.J - ref.J) / ref.J < 1e-6
+    for t, th in dev.events:
+        cap = B / 2 if 0.4 <= t < 1.8 else B
+        assert th.sum() <= cap * (1 + 1e-6), (t, th.sum())
+    # the drop must actually change the trajectory vs the unfaulted run
+    plain = simulate_policy_device(st, x, w, pol, B=B)
+    assert dev.J > plain.J * (1 + 1e-6)
