@@ -1,4 +1,4 @@
-"""Diff a BENCH_core.json run against the committed baseline.
+"""Diff a BENCH_core.json / BENCH_serve.json run against its baseline.
 
 Fails (exit 1) when any matched benchmark row regresses by more than
 ``--threshold`` (default 30%) on its primary metric — us_per_instance
@@ -39,7 +39,7 @@ import shutil
 import sys
 
 _SECTIONS = ("calibration", "gwf", "smartfill_single", "smartfill_batched",
-             "simulator", "hetero", "classes", "robust", "fleet")
+             "simulator", "hetero", "classes", "robust", "fleet", "serve")
 _DEVICE_ROW = re.compile(r"^fleet_.*_D(\d+)$")
 _DEFAULT_BASELINE = pathlib.Path(__file__).parent / "BENCH_baseline.json"
 

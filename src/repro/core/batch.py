@@ -223,7 +223,7 @@ def smartfill_batched(
     # Scalar leaves stay shared.
     check_axes_unambiguous(sp, N, Xm.shape[1], "sp")
     sp_axes = batch_axes(sp, N)
-    theta, c, a, d, T, J, J_lin, _ = jax.vmap(
+    theta, c, a, d, T, J, J_lin, _, _ = jax.vmap(
         lambda spv, x, w, b, mm: _solve(spv, x, w, b, mm,
                                         coarse, descent_iters, cap_iters,
                                         fast, stol_rel=stol_rel),

@@ -78,6 +78,7 @@ __all__ = [
     "solve_cap_regular_reference",
     "solve_cap_generic",
     "solve_cap_hetero",
+    "cap_bracket_probe",
     "solve_cap_hetero_sorted",
     "solve_cap_batched",
     "waterfill_prepare",
@@ -345,6 +346,39 @@ def solve_cap_generic(sp: Speedup, b, c, active=None, iters: int = 96,
     if return_bracket:
         return theta, (lo, hi)
     return theta
+
+
+def cap_bracket_probe(sp: Speedup, b, c, bracket, active=None):
+    """β-probe a carried λ-bracket against the *live* CAP instance.
+
+    This is the validation ``solve_cap_generic`` applies internally to
+    a warm ``bracket``, exposed for callers that must *decide* on the
+    hint's health rather than silently absorb it — the streaming
+    controller replans warm while the carried bracket still straddles
+    λ* and falls back to a cold solve the moment it doesn't (budget
+    collapse, bulk arrival).
+
+    Returns ``(lo_ok, hi_ok)`` booleans: β decreasing in λ means the
+    lower end is valid iff β(lo) ≥ b and the upper iff β(hi) ≤ b.  Two
+    O(M) β evaluations; jit/vmap-safe.
+    """
+    c = jnp.asarray(c)
+    k = c.shape[0]
+    if active is None:
+        active = jnp.ones((k,), dtype=bool)
+    b_safe = jnp.maximum(jnp.asarray(b, c.dtype),
+                         jnp.asarray(1e-300, c.dtype))
+    ds0 = jnp.broadcast_to(sp.ds0(), c.shape)
+
+    def beta(lam):
+        y = c * lam
+        th = jnp.clip(sp.ds_inv(y), 0.0, b_safe)
+        th = jnp.where(y >= ds0, 0.0, th)
+        return jnp.sum(_masked(th, active, 0.0))
+
+    lo = jnp.maximum(jnp.asarray(bracket[0], c.dtype), 1e-300)
+    hi = jnp.asarray(bracket[1], c.dtype)
+    return beta(lo) >= b_safe, beta(hi) <= b_safe
 
 
 def solve_cap_hetero(sp: Speedup, b, c, active=None, iters: int = 96,

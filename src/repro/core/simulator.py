@@ -70,12 +70,15 @@ Used for
 from __future__ import annotations
 
 import dataclasses
+import logging
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+
+_log = logging.getLogger(__name__)
 
 __all__ = [
     "SimResult",
@@ -112,13 +115,20 @@ class EnsembleResult:
     J[p, k] = Σ_i w_i T_i of policy p on workload k (+inf where the
     policy failed to complete every job within the event budget);
     T: (P, K, M) completion times; finished: (P, K) all-jobs-done flags;
-    n_events: (P, K) executed (non-halt) event counts.
+    n_events: (P, K) executed (non-halt) event counts;
+    exhausted: (P, K) — True where the row is unfinished *because* the
+    fixed device event budget saturated (n_events hit the horizon), as
+    opposed to e.g. a zero-allocation policy stalling.  Such a J=inf is
+    an artifact of the horizon, not a verdict on the policy — raise
+    ``n_events`` to resolve it; the runner also warns once per process
+    (mirroring the cluster scheduler's loud device fallback).
     """
 
     J: jnp.ndarray
     T: jnp.ndarray
     finished: jnp.ndarray
     n_events: jnp.ndarray
+    exhausted: jnp.ndarray
     policy_names: tuple
 
     def __len__(self) -> int:
@@ -128,6 +138,30 @@ class EnsembleResult:
 def n_events_for(M: int) -> int:
     """Fixed event budget of the device engine: 4M + 16."""
     return 4 * int(M) + 16
+
+
+# Loud-once flag for event-budget exhaustion (module-level so the warning
+# fires once per process across every ensemble/sharded runner, mirroring
+# sched/cluster.py's _warned_device_fallback).
+_warned_event_budget = False
+
+
+def _warn_event_budget(exhausted, n_events: int, where: str) -> None:
+    """Warn (once per process) when rows returned J=inf only because the
+    fixed device event horizon saturated mid-run.  Before this existed
+    the artifact was indistinguishable from a genuinely stalling policy."""
+    global _warned_event_budget
+    if _warned_event_budget:
+        return
+    n_bad = int(np.sum(np.asarray(exhausted)))
+    if n_bad:
+        _warned_event_budget = True
+        _log.warning(
+            "%s: %d row(s) hit the fixed device event budget "
+            "(n_events=%d) before finishing — their J=inf is a horizon "
+            "artifact, not a policy verdict; raise n_events (see "
+            "EnsembleResult.exhausted; further occurrences are silent)",
+            where, n_bad, n_events)
 
 
 # ---------------------------------------------------------------------------
@@ -581,8 +615,13 @@ def _ensemble_jit(sp, policies, X, W, ARR, rtol, n_events, faults=None):
                 J = jnp.where(finished, jnp.sum(wk * T), jnp.inf)
                 return T, J, finished, jnp.sum(valid)
 
+            # axes derived from the fault pytree itself: every prepared
+            # fault leaf is (K, S+1)-batched, and a structure-matched
+            # spec can never silently desynchronize when FaultTrace
+            # grows a field (a literal 4-tuple would)
+            fault_axes = jax.tree_util.tree_map(lambda _: 0, faults)
             T, J, finished, ne = jax.vmap(
-                one, in_axes=(sp_axes, pol_axes, 0, 0, 0, (0, 0, 0, 0)))(
+                one, in_axes=(sp_axes, pol_axes, 0, 0, 0, fault_axes))(
                     sp, pol, X, W, ARR, faults)
         Ts.append(T)
         Js.append(J)
@@ -649,6 +688,7 @@ def simulate_ensemble(sp, policies, X, W, arrival=None, B=None,
             J=jnp.zeros((P, K), X.dtype), T=jnp.zeros((P, K, 0), X.dtype),
             finished=jnp.ones((P, K), bool),
             n_events=jnp.zeros((P, K), jnp.int32),
+            exhausted=jnp.zeros((P, K), bool),
             policy_names=tuple(getattr(p, "name", type(p).__name__)
                                for p in policies))
     _check_axes_unambiguous(sp, K, M, "sp")
@@ -673,9 +713,13 @@ def simulate_ensemble(sp, policies, X, W, arrival=None, B=None,
     J, T, finished, ne = _ensemble_jit(
         sp, policies, X, W, ARR, jnp.asarray(rtol, X.dtype), n_events,
         faults=ft)
+    # unfinished AND the executed-event count saturated the horizon ⇒ the
+    # run was cut off, not stalled; surface it instead of a bare J=inf
+    exhausted = (~finished) & (ne >= n_events)
+    _warn_event_budget(exhausted, n_events, "simulate_ensemble")
     names = tuple(getattr(p, "name", type(p).__name__) for p in policies)
     return EnsembleResult(J=J, T=T, finished=finished, n_events=ne,
-                          policy_names=names)
+                          exhausted=exhausted, policy_names=names)
 
 
 # ---------------------------------------------------------------------------

@@ -105,6 +105,8 @@ __all__ = [
     "SmartFillSchedule",
     "HeteroSmartFillSchedule",
     "smartfill",
+    "smartfill_warm",
+    "WarmStart",
     "smartfill_hetero",
     "smartfill_reference",
     "smartfill_hetero_reference",
@@ -596,7 +598,8 @@ def _minimize_f_hinted(F_grid, F_chain, F_desc, B, coarse, descent_iters,
          static_argnames=("coarse", "descent_iters", "cap_iters", "fast",
                           "precise", "with_times", "stol_rel"))
 def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast,
-           lam0=None, precise=True, with_times=True, stol_rel=None):
+           lam0=None, precise=True, with_times=True, stol_rel=None,
+           bracket0=None):
     """Fixed-shape SmartFill core: lax.scan over iterations k = 1..M−1.
 
     Args:
@@ -629,11 +632,21 @@ def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast,
         (C ≲ 64) and its differential contract (1e-8 rel J vs a host
         recursion) is linearly sensitive to μ* at clamped-duration
         kinks, so the extra descent iterations are worth buying.
+      bracket0: optional (2,) generic-path λ-bracket (lo, hi) from a
+        previous run's ``bracket`` output, seeding the carried warm
+        bracket across *calls* the way the carry reuses it across
+        iterations.  Every use is guarded by the β-probe validation
+        inside ``solve_cap_generic`` (each end is kept only if its
+        probe confirms it still brackets λ*), so a stale bracket —
+        e.g. after the live budget collapsed between replanning
+        events — degrades to the full-range "no hint" init instead of
+        corrupting the solve.  Ignored on the closed-form path.
 
-    Returns (theta, c, a, durations, T, J, J_linear, lam) as device
-    arrays, where lam[k] is iteration k's CAP dual λ* on the sorted
-    per-job path (0 on the closed-form and bisection paths — diagnostic
-    and warm-start payload only).
+    Returns (theta, c, a, durations, T, J, J_linear, lam, bracket) as
+    device arrays, where lam[k] is iteration k's CAP dual λ* on the
+    sorted per-job path (0 on the closed-form and bisection paths —
+    diagnostic and warm-start payload only) and bracket is the final
+    carried (2,) λ-bracket, reusable as the next call's ``bracket0``.
     """
     M = x.shape[0]
     dtype = x.dtype
@@ -655,6 +668,13 @@ def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast,
     fi = jnp.finfo(dtype)
     warm0 = (jnp.asarray(fi.tiny, dtype) / jnp.asarray(fi.eps, dtype),
              jnp.asarray(fi.max, dtype) / 4.0)
+    if bracket0 is not None:
+        # cross-call warm start: clamp the caller's bracket into the
+        # full range so a degenerate payload can at worst reproduce the
+        # cold init; validity is re-proved per solve by the β-probes
+        b0 = jnp.asarray(bracket0, dtype)
+        warm0 = (jnp.clip(b0[0], warm0[0], warm0[1]),
+                 jnp.clip(b0[1], warm0[0], warm0[1]))
     if sorted_cap:
         # per-job activation-breakpoint store (λ_i, β̃(λ_i)), maintained
         # incrementally: SmartFill only ever *appends* one CDR constant
@@ -751,7 +771,8 @@ def _solve(sp, x, w, B, m, coarse, descent_iters, cap_iters, fast,
         d = T = jnp.zeros((M,), dtype)
         J = zero
     J_lin = jnp.sum(a * x)
-    return theta, c, a, d, T, J, J_lin, lam
+    bracket = jnp.stack([carry[2][0], carry[2][1]])
+    return theta, c, a, d, T, J, J_lin, lam, bracket
 
 
 def completion_times(sp: Speedup, x, theta, active=None):
@@ -835,7 +856,7 @@ def smartfill(
     # them through the shared fast paths bit-for-bit
     sp = collapse_homogeneous(sp)
     fast = _fast_ok(sp) and fast_path is not False
-    theta, c, a, d, T, J, J_lin, _ = _solve(
+    theta, c, a, d, T, J, J_lin, _, _ = _solve(
         sp, x, w, B, M, coarse, descent_iters, cap_iters, fast)
     return SmartFillSchedule(
         theta=theta, c=c, a=a, durations=d, T=T,
@@ -853,6 +874,80 @@ def smartfill_allocations(sp: Speedup, rem, w, B: float | None = None):
     """
     sched = smartfill(sp, rem, w, B=B, validate=False)
     return sched.theta[:, -1]
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmStart:
+    """Cross-call warm-start payload for incremental re-planning.
+
+    Produced by ``smartfill_warm`` and fed back to the next call on a
+    *related* instance (the streaming controller's replanning events:
+    one arrival/completion between solves, so λ* and the completion
+    order barely move).  Both device payloads are validated on use —
+    ``lam`` per iteration against the solver's bracket, ``bracket`` by
+    the β-probes inside ``solve_cap_generic`` — so a stale payload
+    costs a cold-priced solve, never a wrong one.
+
+    lam: (M,) per-iteration CAP duals λ* (sorted per-job path; zeros on
+      the closed-form/bisection paths).  Shape-tied to the producing
+      call's padded M.
+    bracket: (2,) final generic-path λ-bracket (lo, hi).
+    order: optional host-side completion order the payload was produced
+      under (row r of the solved instance held original job
+      ``order[r]``); ``None`` when the caller manages ordering itself.
+    """
+
+    lam: jnp.ndarray
+    bracket: jnp.ndarray
+    order: np.ndarray | None = None
+
+
+def smartfill_warm(
+    sp: Speedup,
+    x,
+    w,
+    B: float | None = None,
+    warm: WarmStart | None = None,
+    coarse: int = 32,
+    descent_iters: int = 40,
+    cap_iters: int = 64,
+    fast_path: bool | None = None,
+    stol_rel: float | None = None,
+) -> tuple[SmartFillSchedule, WarmStart]:
+    """``smartfill`` with cross-call warm starts, for replanning loops.
+
+    Same contract as ``smartfill`` (x non-increasing, w non-decreasing —
+    the caller owns the completion order), but the solve is seeded from
+    ``warm`` (a previous call's payload: per-iteration λ* hints plus the
+    generic-path λ-bracket) and returns a fresh payload alongside the
+    schedule.  Hints only steer where the λ searches *start*; every use
+    is bracket-validated, so the warm result matches the cold one to
+    solver tolerance and a stale payload (budget jump, churned order)
+    silently degrades to cold pricing.  The padded width M must match
+    between the producing and consuming calls.
+    """
+    x = jnp.asarray(x, dtype=jnp.result_type(float))
+    w = jnp.asarray(w, dtype=x.dtype)
+    M = int(x.shape[0])
+    B = float(sp.B if B is None else B)
+    sp = collapse_homogeneous(sp)
+    fast = _fast_ok(sp) and fast_path is not False
+    lam0 = bracket0 = None
+    if warm is not None:
+        lam0 = jnp.asarray(warm.lam, x.dtype)
+        bracket0 = jnp.asarray(warm.bracket, x.dtype)
+        if lam0.shape != (M,):
+            raise ValueError(
+                f"warm.lam has shape {lam0.shape}, instance is padded "
+                f"to M={M}")
+    theta, c, a, d, T, J, J_lin, lam, bracket = _solve(
+        sp, x, w, B, M, coarse, descent_iters, cap_iters, fast,
+        lam0=lam0, stol_rel=stol_rel, bracket0=bracket0)
+    sched = SmartFillSchedule(
+        theta=theta, c=c, a=a, durations=d, T=T,
+        J=float(J), J_linear=float(J_lin),
+    )
+    return sched, WarmStart(lam=lam, bracket=bracket)
 
 
 # ---------------------------------------------------------------------------
@@ -1183,7 +1278,7 @@ def smartfill_hetero(
         order, best, _ = _exchange_descent(
             run, init, exchange_passes, exchange_window)
 
-    theta, c, a, d, T, J, J_lin, _ = best
+    theta, c, a, d, T, J, J_lin, *_ = best
     return HeteroSmartFillSchedule(
         theta=theta, c=c, a=a, durations=d, T=T,
         J=float(J), J_linear=float(J_lin), order=np.asarray(order),

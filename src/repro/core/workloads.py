@@ -35,8 +35,9 @@ import numpy as np
 
 from .speedup import RegularSpeedup, StackedSpeedup
 
-__all__ = ["WorkloadBatch", "ClassWorkloadBatch", "sample_workloads",
-           "sample_class_workloads", "sample_fault_traces", "FAMILIES"]
+__all__ = ["WorkloadBatch", "ClassWorkloadBatch", "ArrivalStream",
+           "sample_workloads", "sample_class_workloads",
+           "sample_fault_traces", "sample_arrival_stream", "FAMILIES"]
 
 FAMILIES = ("power", "shifted", "log", "neg_power", "saturating")
 
@@ -285,6 +286,119 @@ def sample_fault_traces(
         jobs[k, :n] = jj
         values[k, :n] = vv
     return FaultTrace(times=times, kinds=kinds, jobs=jobs, values=values)
+
+
+# ---------------------------------------------------------------------------
+# Open-arrival streams (serve/stream.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalStream:
+    """An open-arrival trace for the streaming control plane.
+
+    Unlike ``WorkloadBatch`` (K closed instances, fixed event horizon)
+    this is one *unbounded-style* trace: N timed arrivals over
+    ``[0, horizon)``, each a (size, weight, deadline) job, plus an
+    optional sequence of absolute server-budget steps (the B(t) the
+    controller replans against).  Consumed by
+    ``serve.stream.StreamController.run``.
+    """
+
+    t: np.ndarray             # (N,) arrival times, sorted non-decreasing
+    x: np.ndarray             # (N,) job sizes
+    w: np.ndarray             # (N,) weights
+    deadline: np.ndarray      # (N,) absolute deadlines (+inf = none)
+    horizon: float
+    budget_times: np.ndarray  # (S,) budget-step times, sorted
+    budget_values: np.ndarray  # (S,) absolute budget after each step
+
+    def __len__(self) -> int:
+        return int(self.t.size)
+
+
+def sample_arrival_stream(
+    seed: int,
+    *,
+    horizon: float = 86_400.0,
+    rate: float = 0.01,
+    diurnal: float = 0.75,
+    period: float = 86_400.0,
+    size_range: tuple = (0.5, 20.0),
+    weights: str = "slowdown",
+    deadline_slack: float | None = None,
+    solo_rate: float = 1.0,
+    B: float = 10.0,
+    n_budget_events: int = 0,
+    budget_frac: tuple = (0.35, 1.0),
+) -> ArrivalStream:
+    """Draw a day-long open-arrival trace from one seed.
+
+    Arrivals follow a nonhomogeneous Poisson process with the diurnal
+    intensity λ(t) = rate·(1 + diurnal·sin(2πt/period − π/2)) — a
+    load trough at t = 0 rising to the (1+diurnal)·rate peak mid-period
+    — sampled by thinning against the constant dominating rate.
+
+    Args:
+      horizon, rate, diurnal, period: trace length, mean arrival rate,
+        relative peak-to-mean swing (0 → homogeneous Poisson), and the
+        diurnal cycle length (defaults: one day of seconds).
+      size_range: uniform job-size support.
+      weights: 'slowdown' → w = 1/x (the heSRPT-slowdown objective's
+        weighting), 'random' → independent U(0.1, 5), 'uniform' → 1
+        (weighted J becomes total flow time).
+      deadline_slack: None → no deadlines (+inf); a factor f → each job
+        must finish by ``t + f·x/solo_rate`` (f× its hypothetical solo
+        service time at rate ``solo_rate`` — pass the server's s(B)).
+      B, n_budget_events, budget_frac: when ``n_budget_events`` > 0 the
+        trace carries that many absolute budget steps at uniform times,
+        each to B·U(*budget_frac*) followed by the paired recovery back
+        to B — the streaming analog of ``sample_fault_traces``'
+        preemptions, and the replanning events that invalidate carried
+        λ-brackets.
+
+    Returns an ArrivalStream (numpy; host-side setup, not the hot loop).
+    """
+    if horizon <= 0:
+        raise ValueError("horizon must be > 0")
+    if not 0.0 <= diurnal <= 1.0:
+        raise ValueError("diurnal swing must be in [0, 1]")
+    rng = np.random.default_rng(seed)
+    lam_max = rate * (1.0 + diurnal)
+    # homogeneous candidates at the dominating rate, thinned to λ(t)
+    n_cand = rng.poisson(lam_max * horizon)
+    cand = np.sort(rng.uniform(0.0, horizon, n_cand))
+    lam = rate * (1.0 + diurnal * np.sin(
+        2.0 * np.pi * cand / period - 0.5 * np.pi))
+    keep = rng.uniform(0.0, lam_max, n_cand) < lam
+    t = cand[keep]
+    n = t.size
+    x = rng.uniform(*size_range, n)
+    if weights == "slowdown":
+        w = 1.0 / x
+    elif weights == "random":
+        w = rng.uniform(0.1, 5.0, n)
+    elif weights == "uniform":
+        w = np.ones(n)
+    else:
+        raise ValueError("weights must be 'slowdown', 'random' or 'uniform'")
+    if deadline_slack is None:
+        deadline = np.full(n, np.inf)
+    else:
+        deadline = t + deadline_slack * x / float(solo_rate)
+    bt = np.zeros(0)
+    bv = np.zeros(0)
+    if n_budget_events > 0:
+        dips = np.sort(rng.uniform(0.0, horizon, n_budget_events))
+        recov = dips + rng.exponential(0.02 * horizon, n_budget_events)
+        bt = np.concatenate([dips, recov])
+        bv = np.concatenate([B * rng.uniform(*budget_frac, n_budget_events),
+                             np.full(n_budget_events, B)])
+        order = np.argsort(bt, kind="stable")
+        inside = bt[order] < horizon
+        bt, bv = bt[order][inside], bv[order][inside]
+    return ArrivalStream(t=t, x=x, w=w, deadline=deadline,
+                         horizon=float(horizon), budget_times=bt,
+                         budget_values=bv)
 
 
 # ---------------------------------------------------------------------------

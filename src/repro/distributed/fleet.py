@@ -58,7 +58,8 @@ from repro.core.batch import (BatchedSmartFillSchedule, _prepare,
 from repro.core.simulator import (EnsembleResult, _check_policy_budget,
                                   _fault_B0, _fault_n_events, _prepared_faults,
                                   _sim_core, _validate_budget,
-                                  _validate_workload, n_events_for)
+                                  _validate_workload, _warn_event_budget,
+                                  n_events_for)
 from repro.core.smartfill import _fast_ok, _solve
 from repro.core.speedup import collapse_homogeneous
 
@@ -377,7 +378,7 @@ def plan_sharded(
     )
     fn = _plan_fn(split.key, coarse, descent_iters, cap_iters, fast,
                   stol_rel)
-    theta, c, a, d, T, J, J_lin, _ = _run_sharded(
+    theta, c, a, d, T, J, J_lin, _, _ = _run_sharded(
         mesh, fn, batched, split.shared, N, chunk_size)
     return BatchedSmartFillSchedule(
         theta=theta, c=c, a=a, durations=d, T=T,
@@ -484,7 +485,8 @@ def simulate_ensemble_sharded(
         return EnsembleResult(
             J=jnp.zeros((Pn, K), X.dtype), T=jnp.zeros((Pn, K, 0), X.dtype),
             finished=jnp.ones((Pn, K), bool),
-            n_events=jnp.zeros((Pn, K), jnp.int32), policy_names=names)
+            n_events=jnp.zeros((Pn, K), jnp.int32),
+            exhausted=jnp.zeros((Pn, K), bool), policy_names=names)
     check_axes_unambiguous(sp, K, M, "sp")
     for p in policies:
         if not getattr(p, "device_ready", False):
@@ -533,6 +535,10 @@ def simulate_ensemble_sharded(
         Js.append(J)
         fins.append(finished)
         nev.append(ne)
+    finished_all = jnp.stack(fins)
+    nev_all = jnp.stack(nev)
+    exhausted = (~finished_all) & (nev_all >= n_events)
+    _warn_event_budget(exhausted, n_events, "simulate_ensemble_sharded")
     return EnsembleResult(J=jnp.stack(Js), T=jnp.stack(Ts),
-                          finished=jnp.stack(fins), n_events=jnp.stack(nev),
-                          policy_names=names)
+                          finished=finished_all, n_events=nev_all,
+                          exhausted=exhausted, policy_names=names)

@@ -27,7 +27,8 @@ from repro.core.simulator import (  # noqa: F401
 from repro.core.workloads import sample_fault_traces  # noqa: F401
 
 from .certificates import PlanCertificate, allocation_ok, certify_plan  # noqa: F401
-from .degrade import DegradingPolicy, SaboteurPolicy, degradation_report  # noqa: F401
+from .degrade import (DegradingPolicy, SaboteurPolicy,  # noqa: F401
+                      degradation_report, ladder_plan_table)
 from .watchdog import Watchdog, WatchdogGiveUp  # noqa: F401
 
 __all__ = [
@@ -43,6 +44,7 @@ __all__ = [
     "DegradingPolicy",
     "SaboteurPolicy",
     "degradation_report",
+    "ladder_plan_table",
     "Watchdog",
     "WatchdogGiveUp",
 ]

@@ -44,7 +44,8 @@ from repro.sched.policies import (EquiPolicy, GWFStaticPolicy, Policy,
 
 from .certificates import allocation_ok
 
-__all__ = ["DegradingPolicy", "SaboteurPolicy", "degradation_report"]
+__all__ = ["DegradingPolicy", "SaboteurPolicy", "degradation_report",
+           "ladder_plan_table"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -175,6 +176,32 @@ class SaboteurPolicy(Policy):
             bad = jnp.where(active, -th - 1.0, 0.0)
         hit = jnp.sum(active) > self.min_active
         return jnp.where(hit, bad, th)
+
+
+def ladder_plan_table(policy: Policy, rem, w, B=None) -> jnp.ndarray:
+    """(M, M) allocation table from a per-event policy, for plan-table
+    executors.
+
+    Column m−1 holds ``policy``'s allocation for the m-row prefix of the
+    (row-coordinate) state ``rem``/``w`` — the same column-by-active-
+    count layout as a SmartFill Θ table, built from one vmapped call
+    over the M prefixes.  The streaming controller swaps this in as the
+    emergency plan when a replanning solve fails *un*certified: built
+    from a ``DegradingPolicy`` ladder, every column is certificate-gated
+    (worst case all-zero, which merely idles the window), so the window
+    executor never runs an infeasible table.  Any branchless per-event
+    policy works; ``DegradingPolicy`` is the intended one.
+    """
+    rem = jnp.asarray(rem, jnp.result_type(float))
+    w = jnp.asarray(w, rem.dtype)
+    M = rem.shape[0]
+    idx = jnp.arange(M)
+
+    def col(mm):
+        act = idx < mm
+        return jnp.where(act, policy(rem, w, act, B), 0.0)
+
+    return jax.vmap(col)(jnp.arange(1, M + 1)).T
 
 
 def degradation_report(sp, x, w, policy: DegradingPolicy, B=None,

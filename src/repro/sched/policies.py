@@ -64,14 +64,17 @@ import numpy as np
 
 from repro.core.gwf import (solve_cap, solve_cap_hetero,
                             solve_cap_hetero_sorted)
-from repro.core.smartfill import _is_pure_power, _solve, _uses_sorted_cap
-from repro.core.speedup import Speedup
+from repro.core.smartfill import (WarmStart, _fast_ok, _is_pure_power,
+                                  _solve, _uses_sorted_cap)
+from repro.core.speedup import Speedup, collapse_homogeneous, is_per_job
 
 __all__ = [
     "Policy",
     "SmartFillPolicy",
     "HeteroSmartFillPolicy",
     "ClassSmartFillPolicy",
+    "StreamingSmartFillPolicy",
+    "StreamPlan",
     "HeSRPTPolicy",
     "EquiPolicy",
     "SRPT1Policy",
@@ -488,6 +491,258 @@ class ClassSmartFillPolicy(HeteroSmartFillPolicy):
                     th[:kl, :kl] = np.asarray(plan.sched.theta)
                 theta = jnp.asarray(th)
         return cls(sp=sp_agg, B=B, rank=rank, theta=theta, **kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """One replanning event's output (host-materialized).
+
+    order: (m,) controller-slot indices — schedule row r executes the
+      job in slot ``order[r]`` (row coords: remaining size
+      non-increasing, so row m−1 completes first).
+    table: (M, M) allocation table in row coords (column j = the phase
+      with rows 0..j active), executed by active-count lookup exactly
+      like ``HeteroSmartFillPolicy.pinned(cache_plan=True)``.
+    J / J_linear: the solve's executed objective and value-function
+      claim Σ a_i x_i; ``certified`` is the J == J_linear realized-order
+      certificate (Prop. 9 / §7).
+    warm: True when the plan came from the warm-start path (carried
+      completion order + validated λ hints) rather than a cold solve.
+    """
+
+    order: np.ndarray
+    table: jnp.ndarray
+    J: float
+    J_linear: float
+    m: int
+    B: float
+    warm: bool
+    certified: bool
+
+    def slot_allocations(self) -> np.ndarray:
+        """(M,) current-phase allocations scattered back to slot coords."""
+        M = int(self.table.shape[0])
+        out = np.zeros(M)
+        if self.m:
+            col = np.asarray(self.table)[:, min(self.m - 1, M - 1)]
+            out[self.order] = col[:self.m]
+        return out
+
+
+class StreamingSmartFillPolicy(Policy):
+    """Host-side incremental re-planner for the streaming control plane.
+
+    Carries warm-start state *across* replanning events (the open-arrival
+    loop of ``serve/stream.py``): the previous plan's completion order
+    and its λ payload (per-iteration CAP duals + the generic-path
+    λ-bracket, ``core.smartfill.WarmStart``).  Between consecutive
+    events the live set changes by one arrival or completion, so
+
+      * the **order** is maintained incrementally — completed slots drop
+        out, arrivals binary-insert by normalized remaining size
+        rem_i / s_i(B).  This is sound between events because CAP
+        allocations are non-decreasing along schedule rows (θ_1 ≤ … ≤
+        θ_m), so remaining sizes never cross during execution; and
+
+      * the **λ payload** seeds the next solve's searches.  Both halves
+        are validated on use (β-probes, ``core.gwf.cap_bracket_probe``
+        semantics), so a stale payload costs cold pricing, never a wrong
+        answer.
+
+    Every warm plan is accepted only under the ``J == J_linear``
+    realized-order certificate; a failed certificate (or non-finite
+    solve) falls back to a **cold** plan — a from-scratch re-rank, plus
+    the full §7 exchange-order search for per-job speedups (what
+    planning without carried state actually costs, and the baseline the
+    warm path is benchmarked against).  A cold plan that *still* fails
+    certification is returned uncertified; the streaming controller then
+    falls down the robust degradation ladder instead of executing it.
+
+    Not an engine pytree (``device_ready=False``): replanning is a
+    host-side control-plane step between execution windows, with mutable
+    warm state.  ``plan`` is the real interface; ``__call__`` adapts it
+    to the host-policy signature for differential tests.
+    """
+
+    device_ready = False
+    name = "streamingSF"
+
+    def __init__(self, sp: Speedup, B: float | None = None, *,
+                 certificate_rtol: float = 1e-8, coarse: int = 32,
+                 descent_iters: int = 40, cap_iters: int = 64,
+                 exchange_passes: int = 2, exchange_window: int = 1,
+                 stol_rel: float | None = None):
+        self.sp = collapse_homogeneous(sp)
+        self.B = float(sp.B if B is None else B)
+        self.certificate_rtol = float(certificate_rtol)
+        self.coarse = int(coarse)
+        self.descent_iters = int(descent_iters)
+        self.cap_iters = int(cap_iters)
+        self.exchange_passes = int(exchange_passes)
+        self.exchange_window = int(exchange_window)
+        self.stol_rel = stol_rel
+        self._per_job = is_per_job(self.sp)
+        self._fast = _fast_ok(self.sp)
+        self.reset()
+
+    def reset(self) -> None:
+        """Drop all carried warm state (and the replan counters)."""
+        self.warm: WarmStart | None = None
+        self._order = np.zeros(0, np.int64)
+        self.warm_replans = 0
+        self.cold_replans = 0
+        self.order_searches = 0
+
+    # -- internals --------------------------------------------------------
+
+    def _solo_key(self, rem: np.ndarray) -> np.ndarray:
+        """Normalized remaining size rem_i / s_i(B) per slot (the §7
+        SJF ranking key; shared speedups broadcast)."""
+        M = rem.shape[0]
+        rate = np.asarray(jnp.broadcast_to(
+            self.sp.s(jnp.full((M,), self.B)), (M,)), float)
+        return rem / np.maximum(rate, _TINY)
+
+    def release(self, slots) -> None:
+        """Forget carried state for recycled slots.
+
+        The controller calls this when a job leaves its slot (completion
+        or eviction).  Without it a new occupant of the same slot would
+        inherit the old job's position in the carried order — the merged
+        order silently stops being the SJF order and warm plans drift
+        from cold ones (the slot-recycling latent bug this PR fixes).
+        """
+        slots = np.atleast_1d(np.asarray(slots, np.int64))
+        if self._order.size:
+            self._order = self._order[~np.isin(self._order, slots)]
+
+    def _merge_order(self, rem, w, act) -> np.ndarray:
+        """Warm order: drop completed slots from the carried order and
+        binary-insert arrivals by normalized size (no re-sort of the
+        survivors — that is the whole point)."""
+        keep = self._order[act[self._order]]
+        new = np.setdiff1d(np.where(act)[0], keep)
+        if new.size:
+            key = self._solo_key(rem)
+            new = new[np.argsort(-key[new], kind="stable")]
+            # survivor keys are non-increasing along the carried order
+            # (allocations non-decreasing along rows ⇒ sizes never
+            # cross); searchsorted wants ascending, hence the negation
+            pos = np.searchsorted(-key[keep], -key[new], side="right")
+            keep = np.insert(keep, pos, new)
+        return keep
+
+    def _fresh_order(self, rem, w, act) -> np.ndarray:
+        slots = np.where(act)[0]
+        key = self._solo_key(rem)
+        return slots[np.lexsort((w[slots], -key[slots]))]
+
+    def _run(self, order, rem, w, Bv, m, lam0=None, bracket0=None):
+        """Padded ``_solve`` on the given slot order (row coords)."""
+        M = rem.shape[0]
+        rest = np.setdiff1d(np.arange(M), order)
+        full = np.concatenate([order, rest]).astype(np.int64)
+        live = np.arange(M) < m
+        xs = jnp.asarray(np.where(live, rem[full], 0.0))
+        ws = jnp.asarray(np.where(live, w[full], 0.0))
+        sp_o = jax.tree_util.tree_map(
+            lambda l: l[full] if getattr(l, "ndim", 0) >= 1 else l, self.sp)
+        lam0 = None if lam0 is None else jnp.asarray(lam0, xs.dtype)
+        bracket0 = (None if bracket0 is None
+                    else jnp.asarray(bracket0, xs.dtype))
+        return _solve(sp_o, xs, ws, jnp.asarray(Bv, xs.dtype), m,
+                      self.coarse, self.descent_iters, self.cap_iters,
+                      self._fast, lam0=lam0, stol_rel=self.stol_rel,
+                      bracket0=bracket0)
+
+    def _certified(self, J, J_lin) -> bool:
+        # floor the tolerance at the solve dtype's precision: the 1e-8
+        # default is meaningful under x64 but unreachable in float32
+        eps = float(jnp.finfo(jnp.asarray(J).dtype).eps)
+        rtol = max(self.certificate_rtol, 64.0 * eps)
+        J = float(J)
+        J_lin = float(J_lin)
+        if not (np.isfinite(J) and np.isfinite(J_lin)):
+            return False
+        return abs(J - J_lin) <= rtol * max(1.0, abs(J_lin))
+
+    def _search_order(self, rem, w, act, Bv) -> np.ndarray:
+        """Full §7 exchange-order search on the dense active set."""
+        from repro.core.smartfill import smartfill_hetero
+
+        slots = np.where(act)[0]
+        sp_sub = jax.tree_util.tree_map(
+            lambda l: l[slots] if getattr(l, "ndim", 0) >= 1 else l, self.sp)
+        plan = smartfill_hetero(
+            sp_sub, rem[slots], w[slots], B=Bv,
+            coarse=self.coarse, descent_iters=self.descent_iters,
+            cap_iters=self.cap_iters,
+            exchange_passes=self.exchange_passes,
+            exchange_window=self.exchange_window, stol_rel=self.stol_rel)
+        self.order_searches += 1
+        return slots[np.asarray(plan.order)]
+
+    # -- interface --------------------------------------------------------
+
+    def plan(self, rem, w, active=None, B=None,
+             warm: bool = True) -> StreamPlan:
+        """Replan the live set; warm-start when possible.
+
+        rem/w are (M,) slot-coordinate state (M = the controller's slot
+        capacity); ``active`` masks the live slots (zero-remaining slots
+        are dropped regardless).  ``B`` is the live budget.
+        ``warm=False`` forces the cold from-scratch path (the benchmark
+        baseline).  Updates the carried warm state either way.
+        """
+        rem = np.asarray(rem, float)
+        w = np.asarray(w, float)
+        M = rem.shape[0]
+        act = (np.ones(M, bool) if active is None
+               else np.asarray(active, bool)) & (rem > 0)
+        Bv = float(self.B if B is None else B)
+        m = int(act.sum())
+        if m == 0:
+            return StreamPlan(order=np.zeros(0, np.int64),
+                              table=jnp.zeros((M, M)), J=0.0, J_linear=0.0,
+                              m=0, B=Bv, warm=False, certified=True)
+
+        picked = None
+        if warm and self.warm is not None and self._order.size:
+            order = self._merge_order(rem, w, act)
+            out = self._run(order, rem, w, Bv, m,
+                            lam0=self.warm.lam, bracket0=self.warm.bracket)
+            if self._certified(out[5], out[6]):
+                self.warm_replans += 1
+                picked = (order, out, True)
+        if picked is None:
+            # cold: from scratch, no carried state — a fresh normalized-
+            # size ranking, escalating to the §7 exchange-order search
+            # when jobs carry their own speedups or the certificate
+            # rejects the ranking (non-agreeable weights: the order is
+            # a decision, and a cold replan must re-make it)
+            if self._per_job and m > 1:
+                order = self._search_order(rem, w, act, Bv)
+                out = self._run(order, rem, w, Bv, m)
+            else:
+                order = self._fresh_order(rem, w, act)
+                out = self._run(order, rem, w, Bv, m)
+                if m > 1 and not self._certified(out[5], out[6]):
+                    order = self._search_order(rem, w, act, Bv)
+                    out = self._run(order, rem, w, Bv, m)
+            self.cold_replans += 1
+            picked = (order, out, False)
+
+        order, out, was_warm = picked
+        self.warm = WarmStart(lam=out[7], bracket=out[8])
+        self._order = np.asarray(order, np.int64)
+        return StreamPlan(order=self._order, table=out[0],
+                          J=float(out[5]), J_linear=float(out[6]), m=m,
+                          B=Bv, warm=was_warm,
+                          certified=self._certified(out[5], out[6]))
+
+    def __call__(self, rem, w, active, B=None):
+        """Host-policy adapter: the current-phase allocation column."""
+        return jnp.asarray(self.plan(rem, w, active, B=B).slot_allocations())
 
 
 @jax.tree_util.register_pytree_node_class

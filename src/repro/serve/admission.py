@@ -89,19 +89,33 @@ class AdmissionController:
         validated all-finite); if the watchdog gives up the controller
         returns a deny-all ``AdmissionDecision`` with
         ``status="degraded: …"`` instead of crashing the serving loop.
+      agreeable: ``"require"`` (default) rejects non-agreeable
+        shared-function mixes with ValueError — SmartFill's J is only
+        the optimum on agreeable instances, so ΔJ would mis-rank
+        candidates.  ``"rank"`` accepts them and scores the SJF-by-size
+        ranking's J instead: the live-state mode the streaming
+        controller needs, where admission scores candidates against
+        *partially served* running jobs (shrunk sizes under their
+        admission-time weights are naturally non-agreeable) and the
+        executed schedule is exactly that SJF ranking — the score then
+        prices what the stream will actually run, rather than an
+        unattainable offline optimum.
     """
 
     def __init__(self, sp: Speedup, B: float | None = None,
                  cost_threshold: float = np.inf, estimator: str = "plan",
-                 mesh=None, watchdog=None):
+                 mesh=None, watchdog=None, agreeable: str = "require"):
         if estimator not in ("plan", "simulate"):
             raise ValueError("estimator must be 'plan' or 'simulate'")
+        if agreeable not in ("require", "rank"):
+            raise ValueError("agreeable must be 'require' or 'rank'")
         self.sp = sp
         self.B = float(sp.B if B is None else B)
         self.cost_threshold = float(cost_threshold)
         self.estimator = estimator
         self.mesh = mesh
         self.watchdog = watchdog
+        self.agreeable = agreeable
 
     def evaluate(self, running_sizes, running_weights,
                  cand_sizes, cand_weights,
@@ -167,12 +181,19 @@ class AdmissionController:
             # weights must be non-decreasing — e.g. slowdown weights
             # w = 1/x).  A silent solve on a non-agreeable mix would
             # rank candidates by a J that is not the optimal weighted
-            # completion time.
-            self._validate_agreeable(X, W, act)
+            # completion time.  'rank' mode (live streaming state)
+            # knowingly scores the SJF ranking's J instead — see the
+            # constructor docstring.
+            if self.agreeable == "require":
+                self._validate_agreeable(X, W, act)
 
         def score():
             if self.estimator == "simulate":
                 return self._simulated_J(X, W, sp)
+            # no validate= here: shared-function mixes were already
+            # checked above (when required), and mixed-model rows are
+            # ordered by *normalized* size — raw-size monotonicity
+            # legitimately does not hold for them.
             sched = smartfill_batched(sp, X, W, B=self.B, active=act)
             return np.asarray(sched.J)
 
@@ -307,7 +328,8 @@ class AdmissionController:
             return 0.0
         xs, ws = _sorted_instance(rs, rw)
         sched = smartfill_batched(self.sp, xs[None, :], ws[None, :],
-                                  B=self.B, validate=True)
+                                  B=self.B,
+                                  validate=self.agreeable == "require")
         return float(np.asarray(sched.J)[0])
 
     def admit_best(self, running_sizes, running_weights,

@@ -58,7 +58,11 @@ class ServeEngine:
         key = jax.random.PRNGKey(self.seed)
         B = batch["tokens"].shape[0]
         out = []
-        tok = self._sample(logits, key).astype(jnp.int32).reshape(B, 1)
+        # split before the first sample: a key must never be consumed
+        # twice, and sampling with the root key would correlate the
+        # first token with the entire split stream derived from it
+        key, sub = jax.random.split(key)
+        tok = self._sample(logits, sub).astype(jnp.int32).reshape(B, 1)
         out.append(tok)
         for i in range(n_tokens - 1):
             key, sub = jax.random.split(key)

@@ -188,3 +188,37 @@ def test_rejects_host_policies_and_bad_shapes():
         simulate_ensemble(sp, (EquiPolicy(B),), np.ones(3), np.ones(3), B=B)
     with pytest.raises(ValueError, match="at least one"):
         simulate_ensemble(sp, (), X, X, B=B)
+
+
+# ---------------------------------------------------------------------------
+# Event-budget exhaustion is loud: the ``exhausted`` mask + warn-once
+# ---------------------------------------------------------------------------
+def test_exhausted_mask_flags_truncated_rows(caplog):
+    import logging
+
+    import repro.core.simulator as simulator
+
+    sp = power(1.0, 0.5, B)
+    wl = sample_workloads(1, K=4, M=6, B=B, m_range=(6, 6))
+    # healthy run: nothing exhausted, mask shaped (P, K)
+    res = simulate_ensemble(sp, (EquiPolicy(B),), wl.X, wl.W, B=B)
+    assert res.exhausted.shape == res.J.shape
+    assert not bool(np.any(np.asarray(res.exhausted)))
+    # starve the event budget: unfinished rows must be flagged, and the
+    # module must warn (once) instead of silently reporting partial J
+    simulator._warned_event_budget = False
+    with caplog.at_level(logging.WARNING, logger="repro.core.simulator"):
+        starved = simulate_ensemble(sp, (EquiPolicy(B),), wl.X, wl.W,
+                                    B=B, n_events=2)
+    ex = np.asarray(starved.exhausted)
+    fin = np.asarray(starved.finished)
+    assert bool(np.any(ex))
+    np.testing.assert_array_equal(ex, ~fin)
+    assert any("event budget" in r.message for r in caplog.records)
+    # warn-once: a second starved call stays silent
+    caplog.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.core.simulator"):
+        simulate_ensemble(sp, (EquiPolicy(B),), wl.X, wl.W, B=B,
+                          n_events=2)
+    assert not any("event budget" in r.message for r in caplog.records)
+    simulator._warned_event_budget = False

@@ -44,6 +44,32 @@ def test_prefill_decode_consistency(arch):
     assert int(state["pos"]) == off + S + 1
 
 
+def test_engine_never_reuses_a_sampling_key():
+    # regression: the first decode token used to be sampled with the
+    # root PRNGKey that the rest of the stream was then split from —
+    # consuming a key twice correlates the first token with the whole
+    # sequence.  Record every key _sample sees and demand distinctness
+    # (root key included).
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg=cfg, params=params, max_len=64, temperature=1.0)
+    seen = []
+    orig = eng._sample
+
+    def recording(logits, key):
+        seen.append(tuple(np.asarray(jax.random.key_data(key)).ravel()))
+        return orig(logits, key)
+
+    eng._sample = recording
+    n = 5
+    eng.generate({"tokens": np.ones((2, 8), np.int32)}, n)
+    root = tuple(np.asarray(
+        jax.random.key_data(jax.random.PRNGKey(eng.seed))).ravel())
+    assert len(seen) == n
+    assert root not in seen
+    assert len(set(seen)) == n
+
+
 def test_engine_generates_deterministically():
     cfg = get_config("llama3.2-1b", smoke=True)
     params = init_params(jax.random.PRNGKey(0), cfg)

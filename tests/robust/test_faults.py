@@ -324,3 +324,38 @@ def test_reference_rejects_batched_trace():
         simulate_policy_reference(sp, np.array([2.0, 1.0]),
                                   np.array([0.5, 1.0]),
                                   _jitted(EquiPolicy(B)), B=B, faults=tr)
+
+
+def test_fault_vmap_axes_derived_from_pytree():
+    # regression: the faulted ensemble path used to hardcode in_axes
+    # (0, 0, 0, 0) for the prepared fault pytree — any change to the
+    # FaultTrace leaf structure would silently desync the vmap.  The
+    # axes spec must be derived from the actual pytree, and the faulted
+    # ensemble must agree with the per-row reference.
+    import jax
+
+    sp = power(1.0, 0.5, B)
+    wb = sample_workloads(9, K=3, M=4, B=B, m_range=(4, 4))
+    traces = sample_fault_traces(9, 3, 4, B=B, horizon=4.0,
+                                 preempt_rate=0.5, straggle_rate=0.5)
+    pols = (EquiPolicy(B),)
+    res = simulate_ensemble(sp, pols, wb.X, wb.W, faults=traces)
+    # the derived spec maps every prepared leaf to axis 0 whatever the
+    # structure (the prepared pytree batches (K, ...) along axis 0)
+    from repro.core.simulator import _prepared_faults
+    prepared = _prepared_faults(traces, 4, wb.X.dtype, K=3)
+    axes = jax.tree_util.tree_map(lambda _: 0, prepared)
+    assert (jax.tree_util.tree_structure(axes)
+            == jax.tree_util.tree_structure(prepared))
+    for leaf in jax.tree_util.tree_leaves(prepared):
+        assert leaf.shape[0] == 3
+    import dataclasses
+    for k in range(3):
+        tr_k = dataclasses.replace(
+            traces, **{f.name: getattr(traces, f.name)[k:k + 1]
+                       for f in dataclasses.fields(traces)
+                       if getattr(getattr(traces, f.name), "ndim", 0) >= 1})
+        ref = simulate_ensemble(sp, pols, wb.X[k:k + 1], wb.W[k:k + 1],
+                                faults=tr_k)
+        np.testing.assert_allclose(np.asarray(res.J)[0, k],
+                                   np.asarray(ref.J)[0, 0], rtol=1e-9)
