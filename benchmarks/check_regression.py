@@ -40,7 +40,10 @@ import sys
 
 _SECTIONS = ("calibration", "gwf", "smartfill_single", "smartfill_batched",
              "simulator", "hetero", "classes", "robust", "fleet", "serve")
-_DEVICE_ROW = re.compile(r"^fleet_.*_D(\d+)$")
+# rows whose metric scales with forced host devices / sharded tenants:
+# fleet weak-scaling (…_D8) and multi-tenant serve (…_T8) alike are
+# bounded by the runner's physical cores past its core count
+_DEVICE_ROW = re.compile(r"^(?:fleet_.*_D|serve_multitenant_.*_T)(\d+)$")
 _DEFAULT_BASELINE = pathlib.Path(__file__).parent / "BENCH_baseline.json"
 
 
@@ -125,15 +128,20 @@ def main(argv=None) -> int:
                          "(sub-quarter-millisecond timings jitter far "
                          "beyond 30%% on shared runners); 0 gates "
                          "everything")
-    ap.add_argument("--min-devices", type=int, default=None,
-                    help="skip (but report) fleet weak-scaling rows above "
-                         "this forced-device count: past ~2 forced host "
-                         "devices the curve is bounded by the runner's "
-                         "physical cores, so those rows gate the machine, "
-                         "not the code; CI passes 2")
+    ap.add_argument("--min-devices", default=None,
+                    help="skip (but report) fleet weak-scaling and "
+                         "multi-tenant serve rows above this forced-device/"
+                         "tenant count: past the runner's physical cores "
+                         "the curve is bounded by the machine, so those "
+                         "rows gate the runner, not the code; 'auto' "
+                         "resolves to this machine's os.cpu_count(); CI "
+                         "passes 2")
     ap.add_argument("--update-baseline", action="store_true",
                     help="copy --current over --baseline and exit")
     args = ap.parse_args(argv)
+    if args.min_devices is not None:
+        args.min_devices = (os.cpu_count() or 1) \
+            if args.min_devices == "auto" else int(args.min_devices)
 
     if args.update_baseline:
         shutil.copyfile(args.current, args.baseline)

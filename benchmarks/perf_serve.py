@@ -1,14 +1,27 @@
 """Streaming control-plane benchmarks: the online service loop.
 
-Three questions, one JSON:
+Five questions, one JSON:
 
   * **Sustained service throughput** — ``serve_stream_day`` runs the
-    full ``StreamController`` over a day-long diurnal arrival trace
-    (arrivals + budget dips + recoveries) and reports control-plane
-    events/sec sustained end to end, plus the SLO tail the run produced
-    (p50/p99 latency, mean slowdown, deadline misses).  This is the
-    number a capacity planner quotes: how much open-arrival load one
-    controller loop absorbs.
+    device-resident event scan (``StreamController.run_device``: the
+    whole day is one compiled ``lax.scan`` over control-plane events)
+    over a day-long diurnal arrival trace (arrivals + budget dips +
+    recoveries) and reports control-plane events/sec sustained end to
+    end, plus the SLO tail and its bit-parity against the host oracle
+    (``run`` with the same ``StreamCascadePolicy``), which is timed as
+    ``serve_stream_day_host``.  This is the number a capacity planner
+    quotes: how much open-arrival load one controller absorbs.
+
+  * **Multi-tenant sharding** — ``serve_multitenant_*_T{1,2,4,8}``
+    runs T independent tenant streams through
+    ``serve_streams_sharded`` on T forced host devices (each count in
+    its own subprocess, like perf_core's fleet rows) with fixed
+    per-tenant load — ideal weak scaling is T× the T=1 events/sec.
+
+  * **Trace replay** — ``serve_trace_replay`` replays the recorded
+    arrival log under ``benchmarks/traces/`` through the controller
+    via ``load_arrival_log`` (the production-trace path, vs the
+    synthetic sampler every other row uses).
 
   * **Warm vs cold replanning** — ``serve_warm_replan_M*`` times one
     incremental replan (carried completion order + λ-bracket hints)
@@ -29,6 +42,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import pathlib
+import subprocess
+import sys
 import time
 
 import jax
@@ -39,8 +56,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import power, sample_arrival_stream, sample_workloads
+from repro.core.workloads import load_arrival_log
 from repro.sched.policies import StreamingSmartFillPolicy
-from repro.serve import StreamController
+from repro.serve import StreamCascadePolicy, StreamController
 from repro.serve.admission import AdmissionController
 
 B = 10.0
@@ -68,34 +86,10 @@ def bench_calibration():
     return [{"name": "calibration_fixed_work", "us_per_call": _time(f, x)}]
 
 
-def bench_stream(quick: bool = False):
-    """The day-long open-arrival run: sustained events/s + SLO tail.
-
-    Load is ~0.6 of service capacity at the diurnal peak, so the live
-    set breathes between empty and full — the regime where warm starts,
-    slot recycling, and budget-dip replans all fire.  quick mode runs
-    two hours of trace instead of 24 (same mechanics, tier-1 friendly).
-    """
-    horizon = 7_200.0 if quick else 86_400.0
-    stream = sample_arrival_stream(
-        17, horizon=horizon, rate=0.12, diurnal=0.75, period=horizon,
-        B=B, n_budget_events=2 if quick else 12,
-        budget_frac=(0.3, 0.8), deadline_slack=50.0)
-    ctl = StreamController(SP, B, max_live=8 if quick else 16)
-
-    def run():
-        return ctl.run(stream)
-
-    res = run()                                   # compile + warm
-    reps = 2 if quick else 3
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        res = run()
-        best = min(best, time.perf_counter() - t0)
+def _stream_row(name, res, best, horizon):
     m = res.metrics
-    return [{
-        "name": f"serve_stream_day{'_quick' if quick else ''}",
+    return {
+        "name": name,
         "us_per_call": best * 1e6,
         "horizon_s": horizon,
         "arrivals": m.n_arrivals,
@@ -112,7 +106,165 @@ def bench_stream(quick: bool = False):
         "p50_latency_s": m.p50_latency,
         "p99_latency_s": m.p99_latency,
         "deadline_misses": m.deadline_misses,
+    }
+
+
+def bench_stream(quick: bool = False):
+    """The day-long open-arrival run: sustained events/s + SLO tail.
+
+    Load is ~0.6 of service capacity at the diurnal peak, so the live
+    set breathes between empty and full — the regime where warm starts,
+    slot recycling, and budget-dip replans all fire.  quick mode runs
+    two hours of trace instead of 24 (same mechanics, tier-1 friendly).
+
+    ``serve_stream_day`` is the device-resident scan; the host loop
+    with the same ``StreamCascadePolicy`` is its differential oracle
+    and is timed alongside as ``serve_stream_day_host`` — the row pair
+    is the hot-path speedup, and the device row carries the measured
+    completion-array parity against the oracle (must be ~0).
+    """
+    horizon = 7_200.0 if quick else 86_400.0
+    M = 8 if quick else 16
+    stream = sample_arrival_stream(
+        17, horizon=horizon, rate=0.12, diurnal=0.75, period=horizon,
+        B=B, n_budget_events=2 if quick else 12,
+        budget_frac=(0.3, 0.8), deadline_slack=50.0)
+    ctl = StreamController(SP, B, max_live=M,
+                           policy=StreamCascadePolicy(SP, B))
+
+    def run_host():
+        return ctl.run(stream)
+
+    def run_dev():
+        return ctl.run_device(stream)
+
+    host = run_host()                             # warm the exec jit
+    reps = 2 if quick else 1
+    best_h = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        host = run_host()
+        best_h = min(best_h, time.perf_counter() - t0)
+    dev = run_dev()                               # compile + warm
+    best_d = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        dev = run_dev()
+        best_d = min(best_d, time.perf_counter() - t0)
+    parity = float(np.max(np.abs(
+        np.where(np.isfinite(host.completion), host.completion, 0.0)
+        - np.where(np.isfinite(dev.completion), dev.completion, 0.0))))
+    q = "_quick" if quick else ""
+    day = _stream_row(f"serve_stream_day{q}", dev, best_d, horizon)
+    day["parity_max_completion_diff"] = parity
+    day["parity_dJ"] = abs(host.metrics.weighted_J
+                           - dev.metrics.weighted_J)
+    host_row = _stream_row(f"serve_stream_day_host{q}", host, best_h,
+                           horizon)
+    return [day, host_row]
+
+
+MULTITENANT_COUNTS = (1, 2, 4, 8)
+
+
+def bench_multitenant_worker(tenants: int, quick: bool) -> list:
+    """Measure the sharded multi-tenant serve on THIS process's devices.
+
+    Runs inside a subprocess whose XLA_FLAGS forced ``tenants`` host
+    devices (one tenant per device).  Weak scaling: per-tenant load is
+    fixed, so ideal total events/sec grows linearly with T — on runners
+    with fewer physical cores than T the curve flattens at the core
+    count, which is why the regression gate scopes these rows with
+    ``--min-devices`` (see check_regression.py).
+    """
+    from repro.distributed import fleet_mesh, serve_streams_sharded
+
+    if len(jax.devices()) != tenants:
+        raise RuntimeError(
+            f"multitenant worker expected {tenants} devices, found "
+            f"{len(jax.devices())} — XLA_FLAGS not applied?")
+    horizon = 1_800.0 if quick else 7_200.0
+    streams = [sample_arrival_stream(
+        17 + i, horizon=horizon, rate=0.12, diurnal=0.75, period=horizon,
+        B=B, n_budget_events=2, budget_frac=(0.3, 0.8),
+        deadline_slack=50.0) for i in range(tenants)]
+    mesh = fleet_mesh()
+
+    def run():
+        return serve_streams_sharded(SP, streams, max_live=8, mesh=mesh)
+
+    fleet = run()                                 # compile + warm
+    best = float("inf")
+    for _ in range(3 if quick else 2):
+        t0 = time.perf_counter()
+        fleet = run()
+        best = min(best, time.perf_counter() - t0)
+    events = sum(r.n_events for r in fleet.results)
+    q = "_quick" if quick else "_day"
+    return [{
+        "name": f"serve_multitenant{q}_T{tenants}",
+        "tenants": tenants,
+        "us_per_call": best * 1e6,
+        "horizon_s": horizon,
+        "events": events,
+        "events_per_sec": events / best,
+        "arrivals": sum(r.metrics.n_arrivals for r in fleet.results),
+        "completed": sum(r.metrics.n_completed for r in fleet.results),
+        "mean_slowdown": float(np.mean(fleet.mean_slowdown)),
+        "suggested_budget_share": fleet.suggested_budget_share.tolist(),
     }]
+
+
+def bench_multitenant(quick: bool = False):
+    """Weak-scaling rows: sharded tenants at 1/2/4/8 forced host devices.
+
+    Each tenant count runs in its own subprocess because
+    ``--xla_force_host_platform_device_count`` only takes effect before
+    jax initializes (same pattern as perf_core.bench_fleet)."""
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    rows = []
+    for T in MULTITENANT_COUNTS:
+        env = dict(os.environ)
+        flags = env.get("XLA_FLAGS", "")
+        env["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={T}").strip()
+        env["JAX_PLATFORMS"] = "cpu"
+        env["PYTHONPATH"] = (str(repo / "src") + os.pathsep
+                             + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+        cmd = [sys.executable, "-m", "benchmarks.perf_serve",
+               "--multitenant-worker", str(T)]
+        if quick:
+            cmd.append("--quick")
+        out = subprocess.run(cmd, env=env, cwd=repo, capture_output=True,
+                             text=True)
+        if out.returncode != 0:
+            raise RuntimeError(
+                f"multitenant worker T={T} failed:\n{out.stderr[-2000:]}")
+        rows.extend(json.loads(out.stdout.strip().splitlines()[-1]))
+    return rows
+
+
+def bench_replay(quick: bool = False):
+    """Replay the recorded trace under benchmarks/traces/ — the
+    production-log ingestion path (``load_arrival_log`` →
+    ``arrival_stream_from_log`` → controller), host loop."""
+    path = pathlib.Path(__file__).parent / "traces" / "arrivals_sample.csv"
+    stream = load_arrival_log(path)
+    ctl = StreamController(SP, B, max_live=8,
+                           policy=StreamCascadePolicy(SP, B))
+
+    def run():
+        return ctl.run(stream)
+
+    res = run()                                   # warm
+    best = float("inf")
+    for _ in range(2 if quick else 3):
+        t0 = time.perf_counter()
+        res = run()
+        best = min(best, time.perf_counter() - t0)
+    row = _stream_row("serve_trace_replay", res, best, stream.horizon)
+    row["trace"] = path.name
+    return [row]
 
 
 def bench_replan(quick: bool = False):
@@ -196,18 +348,30 @@ def bench_admission(quick: bool = False):
 
 def collect(quick: bool = False):
     stream = bench_stream(quick=quick)
+    multitenant = bench_multitenant(quick=quick)
+    replay = bench_replay(quick=quick)
     replan = bench_replan(quick=quick)
     admission = bench_admission(quick=quick)
-    serve = stream + replan + admission
+    serve = stream + multitenant + replay + replan + admission
 
     by_name = {r["name"]: r for r in serve}
     summary = {}
-    day = stream[0]
+    day, host = stream[0], stream[1]
     summary["serve_stream_events_per_sec"] = day["events_per_sec"]
     summary["serve_stream_p99_latency_s"] = day["p99_latency_s"]
     summary["serve_stream_mean_slowdown"] = day["mean_slowdown"]
     summary["serve_stream_warm_fraction"] = (
         day["warm_replans"] / max(1, day["replans"]))
+    summary["serve_stream_device_vs_host_x"] = (
+        host["us_per_call"] / day["us_per_call"])
+    summary["serve_stream_parity_max_diff"] = (
+        day["parity_max_completion_diff"])
+    mt = {r["tenants"]: r for r in multitenant}
+    if 1 in mt and 8 in mt:
+        summary["serve_multitenant_T8_vs_T1_x"] = (
+            mt[8]["events_per_sec"] / mt[1]["events_per_sec"])
+    summary["serve_trace_replay_events_per_sec"] = (
+        replay[0]["events_per_sec"])
     for M in (8, 16):
         wr = by_name.get(f"serve_warm_replan_M{M}")
         cr = by_name.get(f"serve_cold_replan_M{M}")
@@ -237,16 +401,24 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--multitenant-worker", type=int, default=None,
+                    help="internal: emit serve_multitenant rows for this "
+                         "process's forced device count as JSON on stdout")
     args = ap.parse_args()
+    if args.multitenant_worker is not None:
+        print(json.dumps(bench_multitenant_worker(args.multitenant_worker,
+                                                  args.quick)))
+        return
     report = collect(quick=args.quick)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     for r in report["serve"]:
         extra = ""
         if "events_per_sec" in r:
-            extra = (f"  {r['events_per_sec']:.0f} events/s"
-                     f"  p99 {r['p99_latency_s']:.2f}s"
-                     f"  warm {r['warm_replans']}/{r['replans']}")
+            extra = f"  {r['events_per_sec']:.0f} events/s"
+        if "p99_latency_s" in r:
+            extra += (f"  p99 {r['p99_latency_s']:.2f}s"
+                      f"  warm {r['warm_replans']}/{r['replans']}")
         print(f"{r['name']:40s} {r['us_per_call']:12.1f} µs/call{extra}")
     for k, v in report["summary"].items():
         print(f"  {k:42s} {v:.3f}")

@@ -902,6 +902,17 @@ class WarmStart:
     order: np.ndarray | None = None
 
 
+# WarmStart is a pytree so the streaming device path can carry it across
+# events inside a lax.scan (the λ payload rides in the scan carry; the
+# optional host-side order is a child too — ``None`` flattens to an
+# empty subtree, and the device carry never populates it).
+jax.tree_util.register_pytree_node(
+    WarmStart,
+    lambda ws: ((ws.lam, ws.bracket, ws.order), None),
+    lambda _, ch: WarmStart(lam=ch[0], bracket=ch[1], order=ch[2]),
+)
+
+
 def smartfill_warm(
     sp: Speedup,
     x,

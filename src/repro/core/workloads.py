@@ -37,7 +37,8 @@ from .speedup import RegularSpeedup, StackedSpeedup
 
 __all__ = ["WorkloadBatch", "ClassWorkloadBatch", "ArrivalStream",
            "sample_workloads", "sample_class_workloads",
-           "sample_fault_traces", "sample_arrival_stream", "FAMILIES"]
+           "sample_fault_traces", "sample_arrival_stream",
+           "arrival_stream_from_log", "load_arrival_log", "FAMILIES"]
 
 FAMILIES = ("power", "shifted", "log", "neg_power", "saturating")
 
@@ -399,6 +400,125 @@ def sample_arrival_stream(
     return ArrivalStream(t=t, x=x, w=w, deadline=deadline,
                          horizon=float(horizon), budget_times=bt,
                          budget_values=bv)
+
+
+def arrival_stream_from_log(
+    times,
+    sizes,
+    weights=None,
+    *,
+    deadlines=None,
+    horizon: float | None = None,
+    budget_times=(),
+    budget_values=(),
+) -> ArrivalStream:
+    """Build an ArrivalStream from recorded arrival data (trace replay).
+
+    The synthetic sampler covers parameter sweeps; production traces
+    arrive as logs.  This constructor takes the raw columns — arrival
+    times, job sizes, optional weights/deadlines — sorts them stably by
+    time, validates them, and returns the same ``ArrivalStream`` the
+    ``StreamController`` consumes, so a recorded log replays through
+    the identical control plane as a sampled trace.
+
+    Args:
+      times, sizes: (N,) arrival times and job sizes.  Any order; the
+        result is stably time-sorted.  Sizes must be positive.
+      weights: (N,) or None → the slowdown weighting w = 1/x.
+      deadlines: (N,) absolute deadlines or None → no deadlines.
+      horizon: trace end; None → just past the last logged event so
+        the final arrival is still admitted.
+      budget_times, budget_values: optional recorded B(t) step series.
+    """
+    t = np.asarray(times, dtype=float).ravel()
+    x = np.asarray(sizes, dtype=float).ravel()
+    if t.shape != x.shape:
+        raise ValueError("times and sizes must have the same length")
+    if t.size and not np.all(np.isfinite(t)):
+        raise ValueError("arrival times must be finite")
+    if np.any(x <= 0):
+        raise ValueError("job sizes must be positive")
+    w = (1.0 / x if weights is None
+         else np.asarray(weights, dtype=float).ravel())
+    d = (np.full(t.size, np.inf) if deadlines is None
+         else np.asarray(deadlines, dtype=float).ravel())
+    if w.shape != t.shape or d.shape != t.shape:
+        raise ValueError("weights/deadlines must match times in length")
+    if np.any(w <= 0):
+        raise ValueError("weights must be positive")
+    order = np.argsort(t, kind="stable")
+    t, x, w, d = t[order], x[order], w[order], d[order]
+    bt = np.asarray(budget_times, dtype=float).ravel()
+    bv = np.asarray(budget_values, dtype=float).ravel()
+    if bt.shape != bv.shape:
+        raise ValueError("budget_times and budget_values must match")
+    border = np.argsort(bt, kind="stable")
+    bt, bv = bt[border], bv[border]
+    if horizon is None:
+        last = max(t[-1] if t.size else 0.0, bt[-1] if bt.size else 0.0)
+        horizon = float(np.nextafter(last, np.inf)) if last > 0 else 1.0
+    horizon = float(horizon)
+    if t.size and t[-1] >= horizon:
+        raise ValueError("all arrivals must land strictly before horizon")
+    inside = bt < horizon
+    return ArrivalStream(t=t, x=x, w=w, deadline=d, horizon=horizon,
+                         budget_times=bt[inside], budget_values=bv[inside])
+
+
+def load_arrival_log(path) -> ArrivalStream:
+    """Read a recorded arrival log (CSV or JSON) into an ArrivalStream.
+
+    CSV: a header row naming columns among ``t, x, w, deadline`` (the
+    first two required), one arrival per line.  Budget steps ride as
+    comment lines ``# budget <time> <value>`` so the one file carries
+    the whole trace.  JSON: an object with the same keys as arrays,
+    plus optional ``budget_times``/``budget_values``/``horizon``.
+    """
+    path = str(path)
+    if path.endswith(".json"):
+        import json
+        with open(path) as fh:
+            obj = json.load(fh)
+        return arrival_stream_from_log(
+            obj["t"], obj["x"], obj.get("w"),
+            deadlines=obj.get("deadline"),
+            horizon=obj.get("horizon"),
+            budget_times=obj.get("budget_times", ()),
+            budget_values=obj.get("budget_values", ()))
+    import csv
+    bt, bv, rows = [], [], []
+    with open(path, newline="") as fh:
+        header = None
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            if line.startswith("#"):
+                parts = line[1:].split()
+                if parts and parts[0] == "budget":
+                    bt.append(float(parts[1]))
+                    bv.append(float(parts[2]))
+                continue
+            if header is None:
+                header = next(csv.reader([line]))
+                if "t" not in header or "x" not in header:
+                    raise ValueError("CSV header must name 't' and 'x'")
+                continue
+            rows.append(next(csv.reader([line])))
+    if header is None:
+        raise ValueError(f"no header row in {path}")
+    col = {name: i for i, name in enumerate(header)}
+    get = lambda name: [float(r[col[name]]) for r in rows]  # noqa: E731
+    return arrival_stream_from_log(
+        get("t"), get("x"),
+        get("w") if "w" in col else None,
+        deadlines=get("deadline") if "deadline" in col else None,
+        budget_times=bt, budget_values=bv)
+
+
+# replay entry point advertised on the sampler: recorded logs go
+# through sample_arrival_stream.from_log, sweeps through the sampler
+sample_arrival_stream.from_log = arrival_stream_from_log
 
 
 # ---------------------------------------------------------------------------

@@ -14,8 +14,9 @@ from .compression import (  # noqa: F401
 # consumers (launch/*, sched/elastic.py) must not pay for — and eager
 # importing would make any future repro.core → repro.distributed
 # import a cycle.
-_FLEET_EXPORTS = ("active_fleet_mesh", "fleet_mesh", "plan_classes_sharded",
-                  "plan_sharded", "simulate_ensemble_sharded")
+_FLEET_EXPORTS = ("FleetStreamResult", "active_fleet_mesh", "fleet_mesh",
+                  "plan_classes_sharded", "plan_sharded",
+                  "serve_streams_sharded", "simulate_ensemble_sharded")
 
 
 def __getattr__(name):

@@ -41,6 +41,7 @@ then a fresh 1-D mesh over all local devices (``fleet_mesh()``).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 
@@ -66,10 +67,12 @@ from repro.core.speedup import collapse_homogeneous
 from .sharding import active_mesh
 
 __all__ = [
+    "FleetStreamResult",
     "active_fleet_mesh",
     "fleet_mesh",
     "plan_classes_sharded",
     "plan_sharded",
+    "serve_streams_sharded",
     "simulate_ensemble_sharded",
 ]
 
@@ -542,3 +545,230 @@ def simulate_ensemble_sharded(
     return EnsembleResult(J=jnp.stack(Js), T=jnp.stack(Ts),
                           finished=finished_all, n_events=nev_all,
                           exhausted=exhausted, policy_names=names)
+
+
+# ---------------------------------------------------------------------------
+# Sharded multi-tenant streaming service
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FleetStreamResult:
+    """T tenant streams serviced on the mesh, plus the cross-tenant view.
+
+    ``results[i]`` is tenant i's full ``StreamResult`` (identical in
+    meaning to a solo ``StreamController.run_device``).  The remaining
+    fields are the fleet-level admission view — the summary a host
+    admission/budget controller reads *across* tenants at the horizon:
+
+      backlog: (T,) jobs still unfinished (live slots + FIFO queue).
+      unfinished_work: (T,) remaining size mass (partial progress of
+        live jobs counted, queued jobs at full size).
+      mean_slowdown / p99_latency / deadline_misses: (T,) per-tenant
+        SLO columns lifted out of the per-tenant metrics.
+      suggested_budget_share: (T,) sums to 1 — unfinished work,
+        normalized; the proportional-fair advisory split of the next
+        planning round's global budget (uniform when the fleet drained).
+    """
+
+    results: tuple
+    backlog: np.ndarray
+    unfinished_work: np.ndarray
+    mean_slowdown: np.ndarray
+    p99_latency: np.ndarray
+    deadline_misses: np.ndarray
+    suggested_budget_share: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+
+@functools.lru_cache(maxsize=256)
+def _serve_fn(lad_key, fast: bool, coarse: int, descent_iters: int,
+              cap_iters: int, stol_rel, search_steps: int):
+    """Cached tenant-map for stream service (cf. ``_plan_fn``).
+
+    The per-device body runs its local tenants through ``lax.map`` —
+    *sequentially*, one full event scan each — rather than ``vmap``:
+    under vmap every ``lax.cond`` in the event step lowers to a select
+    that executes both branches, so each tenant would pay the full
+    cascade solve + exchange search on every event including the inert
+    ones.  Sequential tenants keep the real branching; with T a
+    multiple of the device count each device carries T/D scans.
+    """
+    from repro.serve.stream import _stream_event
+
+    knobs = dict(fast=fast, coarse=coarse, descent_iters=descent_iters,
+                 cap_iters=cap_iters, stol_rel=stol_rel,
+                 search_steps=search_steps)
+
+    def fn(sl, shared):
+        state, events, x, w, Bk, lad_b = sl
+        sp, lad_sh, plan_latency, rtol, cert_rtol = shared
+
+        def one(args):
+            st, ev, x1, w1, B1, lb1 = args
+            ladder = _merge_leaves(lad_key, lb1, lad_sh)
+
+            def step(s, e):
+                return _stream_event(
+                    s, e, sp, ladder, x1, w1, B1, plan_latency, rtol,
+                    cert_rtol, knobs), None
+
+            st, _ = lax.scan(step, st, ev)
+            return st
+
+        return lax.map(one, (state, events, x, w, Bk, lad_b))
+
+    return fn
+
+
+def serve_streams_sharded(
+    sp,
+    streams,
+    *,
+    budgets=None,
+    max_live: int = 16,
+    mesh: Mesh | None = None,
+    chunk_size: int | None = None,
+    plan_latency: float = 0.0,
+    rtol: float = 1e-12,
+    certificate_rtol: float = 1e-8,
+    coarse: int = 32,
+    descent_iters: int = 40,
+    cap_iters: int = 64,
+    stol_rel: float | None = None,
+    search_steps: int | None = None,
+) -> FleetStreamResult:
+    """T independent tenant streams serviced on device, tenant axis
+    sharded over the mesh.
+
+    Each tenant is one ``ArrivalStream`` driven through the same traced
+    event scan as ``StreamController.run_device`` — cascade replanning,
+    double-buffered plans, FIFO queue, cut-at-first-completion backfill
+    — under its own nominal budget (trace budget events still override
+    live).  Tenants are independent streams, so the shard_map body is
+    collective-free and tenant i's result is bit-identical to a solo
+    ``run_device`` of the same stream (the parity
+    tests/distributed/test_fleet.py pins).
+
+    Padding reuses the fleet contract end to end: tenant rows pad to
+    the mesh multiple with zeros, and the device event encoding makes
+    an all-zero row *inert* (kind 0 = pad event, no-op on any carry),
+    so padded tenants cost one skipped scan each; event/job axes pad to
+    the fleet maxima the same way.  Speedup is shared fleet-wide (a
+    per-tenant ``sp`` would recompile per tenant — run separate fleets
+    instead); ``budgets`` is the per-tenant nominal budget vector
+    (default: ``sp.B`` for every tenant), which also seeds each
+    tenant's ladder fallback.
+
+    Returns a ``FleetStreamResult``: per-tenant ``StreamResult``s plus
+    the cross-tenant admission view (backlog, unfinished work, SLO
+    columns, and the advisory ``suggested_budget_share``).
+    """
+    from repro.robust.degrade import DegradingPolicy
+    from repro.serve.stream import (StreamController, _event_arrays,
+                                    _stream_state0)
+
+    streams = tuple(streams)
+    T = len(streams)
+    if T < 1:
+        raise ValueError("need at least one tenant stream")
+    sp = collapse_homogeneous(sp)
+    if any(getattr(l, "ndim", 0) >= 1
+           for l in jax.tree_util.tree_leaves(sp)):
+        raise ValueError(
+            "serve_streams_sharded needs one shared scalar-leaf speedup; "
+            "per-tenant speedups belong in separate fleets")
+    M = int(max_live)
+    if M < 1:
+        raise ValueError("max_live must be >= 1")
+    dtype = jnp.result_type(float)
+    if budgets is None:
+        budgets = [float(sp.B)] * T
+    budgets = [float(b) for b in budgets]
+    if len(budgets) != T:
+        raise ValueError("budgets must give one nominal budget per tenant")
+
+    Ns = [len(s) for s in streams]
+    Nmax = max(1, max(Ns))
+    evs = [_event_arrays(s) for s in streams]
+    Emax = max(e[0].size for e in evs)
+    t_e = np.zeros((T, Emax))
+    kind = np.zeros((T, Emax), np.int32)
+    pi = np.zeros((T, Emax), np.int32)
+    pf = np.zeros((T, Emax))
+    for i, (te, kd, pj, pv) in enumerate(evs):
+        t_e[i, :te.size] = te
+        kind[i, :te.size] = kd
+        pi[i, :te.size] = pj
+        pf[i, :te.size] = pv
+    X = np.zeros((T, Nmax))
+    W = np.zeros((T, Nmax))
+    for i, strm in enumerate(streams):
+        X[i, :Ns[i]] = np.asarray(strm.x, float)
+        W[i, :Ns[i]] = np.asarray(strm.w, float)
+
+    state = jax.tree_util.tree_map(
+        lambda *ls: jnp.stack(ls),
+        *[_stream_state0(M, Nmax, budgets[i], dtype) for i in range(T)])
+    lad_st = jax.tree_util.tree_map(
+        lambda *ls: jnp.stack([jnp.asarray(l) for l in ls]),
+        *[DegradingPolicy.ladder(sp, B=b) for b in budgets])
+    lad_split = _SplitLeaves(lad_st, T)
+
+    mesh = _resolve_mesh(mesh)
+    D = mesh.devices.size
+    total, _, _ = _chunk_layout(T, D, chunk_size)
+    batched = (
+        jax.tree_util.tree_map(
+            lambda l: _pad_rows(l, total, edge=False), state),
+        tuple(_pad_rows(jnp.asarray(a), total, edge=False)
+              for a in (t_e, kind, pi, pf)),
+        _pad_rows(jnp.asarray(X, dtype), total, edge=False),
+        _pad_rows(jnp.asarray(W, dtype), total, edge=False),
+        _pad_rows(jnp.asarray(budgets, dtype), total, edge=True),
+        tuple(_pad_rows(l, total, edge=True) for l in lad_split.batched),
+    )
+    shared = (sp, lad_split.shared, jnp.asarray(plan_latency, dtype),
+              jnp.asarray(rtol, dtype), jnp.asarray(certificate_rtol, dtype))
+    fn = _serve_fn(lad_split.key, _fast_ok(sp), int(coarse),
+                   int(descent_iters), int(cap_iters), stol_rel,
+                   4 * M if search_steps is None else int(search_steps))
+    out = _run_sharded(mesh, fn, batched, shared, T, chunk_size)
+
+    comp_all = np.asarray(out["completion"], float)
+    rem = np.asarray(out["rem"], float)
+    act = np.asarray(out["active"], bool)
+    qb = np.asarray(out["qbuf"])
+    qh = np.asarray(out["qhead"])
+    qt = np.asarray(out["qtail"])
+    results = []
+    backlog = np.zeros(T, int)
+    work = np.zeros(T)
+    for i, strm in enumerate(streams):
+        ctl = StreamController(sp, budgets[i], max_live=M,
+                               plan_latency=plan_latency, rtol=rtol)
+        results.append(ctl._finalize(
+            strm, comp_all[i, :Ns[i]], np.ones(Ns[i], bool),
+            replans=int(out["replans"][i]),
+            warm_replans=int(out["warm_ct"][i]),
+            cold_replans=int(out["cold_ct"][i]),
+            degraded=int(out["degraded"][i]),
+            n_windows=int(out["n_windows"][i])))
+        qidx = qb[i, qh[i]:qt[i]]
+        backlog[i] = int(act[i].sum()) + qidx.size
+        work[i] = float(np.sum(rem[i] * act[i]))
+        if qidx.size:
+            work[i] += float(np.sum(np.asarray(strm.x, float)[qidx]))
+    share = (work / work.sum() if work.sum() > 0
+             else np.full(T, 1.0 / T))
+    return FleetStreamResult(
+        results=tuple(results),
+        backlog=backlog,
+        unfinished_work=work,
+        mean_slowdown=np.array([r.metrics.mean_slowdown for r in results]),
+        p99_latency=np.array([r.metrics.p99_latency for r in results]),
+        deadline_misses=np.array([r.metrics.deadline_misses
+                                  for r in results]),
+        suggested_budget_share=share,
+    )

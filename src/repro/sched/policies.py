@@ -74,7 +74,9 @@ __all__ = [
     "HeteroSmartFillPolicy",
     "ClassSmartFillPolicy",
     "StreamingSmartFillPolicy",
+    "StreamCascadePolicy",
     "StreamPlan",
+    "stream_replan_core",
     "HeSRPTPolicy",
     "EquiPolicy",
     "SRPT1Policy",
@@ -739,6 +741,254 @@ class StreamingSmartFillPolicy(Policy):
                           J=float(out[5]), J_linear=float(out[6]), m=m,
                           B=Bv, warm=was_warm,
                           certified=self._certified(out[5], out[6]))
+
+    def __call__(self, rem, w, active, B=None):
+        """Host-policy adapter: the current-phase allocation column."""
+        return jnp.asarray(self.plan(rem, w, active, B=B).slot_allocations())
+
+
+# ---------------------------------------------------------------------------
+# Traced replanning cascade (shared speedups) — the device hot path's
+# per-event planner, and the host oracle's via StreamCascadePolicy
+# ---------------------------------------------------------------------------
+
+def _stream_certified(J, J_lin, certificate_rtol, dtype):
+    """Traced J == J_linear realized-order certificate (Prop. 9),
+    floored at the dtype's precision like the host ``_certified``."""
+    rt = jnp.maximum(jnp.asarray(certificate_rtol, dtype),
+                     64.0 * jnp.finfo(dtype).eps)
+    return (jnp.isfinite(J) & jnp.isfinite(J_lin)
+            & (jnp.abs(J - J_lin) <= rt * jnp.maximum(1.0, jnp.abs(J_lin))))
+
+
+def _exchange_search_shared(run_order, order0, out0, m, max_steps):
+    """Traced steepest-descent adjacent-exchange order search.
+
+    Starts from a failed fresh order, scores all M−1 adjacent swaps
+    with one vmapped solve per step, and takes the best strictly-
+    improving swap until none improves (or ``max_steps``).  The
+    shared-speedup analogue of the §7 host search the streaming policy
+    escalates to — on the day trace the fresh SJF ranking certifies
+    ~98% of replans and this search rescues nearly all of the rest
+    (non-agreeable live weights: rem shrinks while w stays 1/x₀, so
+    the order is a decision the certificate audits).
+    """
+    M = order0.shape[0]
+    ci = jnp.arange(M - 1)
+    J0 = out0[5]
+    bestJ0 = jnp.where(jnp.isfinite(J0), J0, jnp.inf)
+
+    def swap1(order, i):
+        a, b = order[i], order[i + 1]
+        return order.at[i].set(b).at[i + 1].set(a)
+
+    def sweep(state):
+        order, out, bestJ, k, _ = state
+        orders = jax.vmap(lambda i: swap1(order, i))(ci)
+        outs = jax.vmap(run_order)(orders)
+        # swaps reaching past the live prefix are no-ops, not candidates
+        Js = jnp.where(((ci + 1) < m) & jnp.isfinite(outs[5]),
+                       outs[5], jnp.inf)
+        i = jnp.argmin(Js)
+        better = Js[i] < bestJ - 1e-12 * jnp.maximum(1.0, jnp.abs(bestJ))
+        pick = jax.tree_util.tree_map(lambda l: l[i], outs)
+        out2 = jax.tree_util.tree_map(
+            lambda nw, od: jnp.where(better, nw, od), pick, out)
+        return (jnp.where(better, orders[i], order), out2,
+                jnp.where(better, Js[i], bestJ), k + 1, better)
+
+    def keep_going(state):
+        return state[4] & (state[3] < max_steps)
+
+    st = jax.lax.while_loop(
+        keep_going, sweep,
+        (order0, out0, bestJ0, jnp.zeros((), jnp.int32),
+         jnp.ones((), bool)))
+    return st[0], st[1]
+
+
+def stream_replan_core(sp, ladder, rem, w, active, B_live, B_key, warm,
+                       certificate_rtol, *, fast, coarse=32,
+                       descent_iters=40, cap_iters=64, stol_rel=None,
+                       search_steps=64):
+    """One replanning event as a pure traced function (shared speedups).
+
+    The decision cascade, every stage a real ``lax.cond`` branch so the
+    common path pays one solve:
+
+      1. **fresh solve** — rank the live set by normalized remaining
+         size (SJF key under the *nominal* budget ``B_key``, weights
+         break ties) and solve under the live budget, seeded with the
+         carried ``WarmStart`` λ/bracket payload (validated on use, so
+         a stale payload costs cold pricing, never a wrong answer);
+      2. **exchange search** — if the J == J_linear certificate rejects
+         the ranking (and m > 1), ``_exchange_search_shared``;
+      3. **ladder** — still uncertified ⇒ the certificate-gated
+         ``ladder_plan_table`` on the SJF ranking (the PR-8 contract:
+         solver failures are absorbed, never executed).
+
+    Returns ``(order, table, m, certified, searched, J, J_linear,
+    warm2)`` with ``order`` a full (M,) slot permutation (live prefix
+    first), ``table`` the (M, M) plan to execute, and ``warm2`` the
+    carry for the next event.  ``StreamCascadePolicy`` (host) and
+    ``serve.stream.StreamController.run_device`` call this *same*
+    function, which is what makes the host loop a bit-comparable
+    differential oracle for the device scan.
+    """
+    rem = jnp.asarray(rem)
+    dtype = rem.dtype
+    M = rem.shape[0]
+    idx = jnp.arange(M)
+    w = jnp.asarray(w, dtype)
+    act = jnp.asarray(active, bool) & (rem > 0)
+    m = jnp.sum(act)
+    B_live = jnp.asarray(B_live, dtype)
+    rate = sp.s(jnp.asarray(B_key, dtype))
+    key = jnp.where(act, -(rem / jnp.maximum(rate, _TINY)), jnp.inf)
+    order0 = jnp.lexsort((jnp.where(act, w, 0.0), key)).astype(jnp.int32)
+
+    def run_order(order):
+        xs = jnp.where(idx < m, rem[order], 0.0)
+        ws = jnp.where(idx < m, w[order], 0.0)
+        return _solve(sp, xs, ws, B_live, m, coarse, descent_iters,
+                      cap_iters, fast, lam0=warm.lam, stol_rel=stol_rel,
+                      bracket0=warm.bracket)
+
+    out0 = run_order(order0)
+    cert0 = _stream_certified(out0[5], out0[6], certificate_rtol, dtype)
+    need_search = (~cert0) & (m > 1)
+
+    def escalate(_):
+        return _exchange_search_shared(run_order, order0, out0, m,
+                                       search_steps)
+
+    order1, out1 = jax.lax.cond(need_search, escalate,
+                                lambda _: (order0, out0), None)
+    certified = _stream_certified(out1[5], out1[6], certificate_rtol,
+                                  dtype)
+
+    def ladder_plan(_):
+        from repro.robust.degrade import ladder_plan_table
+        order_l = jnp.argsort(jnp.where(act, -rem, jnp.inf),
+                              stable=True).astype(jnp.int32)
+        rem_l = jnp.where(idx < m, rem[order_l], 0.0)
+        w_l = jnp.where(idx < m, w[order_l], 0.0)
+        return order_l, ladder_plan_table(ladder, rem_l, w_l, B=B_live)
+
+    order_f, table_f = jax.lax.cond(
+        certified, lambda _: (order1, out1[0]), ladder_plan, None)
+    warm2 = WarmStart(lam=out1[7], bracket=out1[8])
+    return (order_f, table_f, m.astype(jnp.int32), certified,
+            need_search, out1[5], out1[6], warm2)
+
+
+def stream_warm0(M: int, dtype=None) -> WarmStart:
+    """The "no hint yet" WarmStart the cascade starts from: zero λ
+    hints and the full-range cold bracket — ``_solve`` treats both
+    exactly like absent hints, so the first replan prices cold."""
+    dtype = jnp.result_type(float) if dtype is None else dtype
+    fi = jnp.finfo(dtype)
+    return WarmStart(
+        lam=jnp.zeros((M,), dtype),
+        bracket=jnp.stack([jnp.asarray(fi.tiny, dtype)
+                           / jnp.asarray(fi.eps, dtype),
+                           jnp.asarray(fi.max, dtype) / 4.0]))
+
+
+_cascade_call = jax.jit(
+    stream_replan_core,
+    static_argnames=("fast", "coarse", "descent_iters", "cap_iters",
+                     "stol_rel", "search_steps"))
+
+
+class StreamCascadePolicy:
+    """Host-side mirror of the device replanning cascade.
+
+    Same ``plan``/``release``/``reset`` surface as
+    ``StreamingSmartFillPolicy`` so it drops into ``StreamController``
+    unchanged, but every decision — ranking, certificate, exchange
+    search, warm-payload update — is made by the *same* jitted
+    ``stream_replan_core`` the device scan inlines.  Running the host
+    event loop with this policy is therefore the differential oracle
+    for ``StreamController.run_device``: the two implementations share
+    only the per-event planner and the window executor; event ordering,
+    buffer promotion, queueing, backfill and metrics are independent
+    code paths that must agree to float tolerance.
+
+    Counter semantics (device-mirrored, coarser than the streaming
+    policy's): ``warm_replans`` counts replans certified on the fresh
+    hinted solve, ``cold_replans`` counts escalations (search or
+    ladder), ``order_searches`` counts search entries.
+    """
+
+    device_ready = False
+    name = "cascadeSF"
+
+    def __init__(self, sp: Speedup, B: float | None = None, *,
+                 certificate_rtol: float = 1e-8, coarse: int = 32,
+                 descent_iters: int = 40, cap_iters: int = 64,
+                 stol_rel: float | None = None,
+                 search_steps: int | None = None, ladder=None):
+        self.sp = collapse_homogeneous(sp)
+        if is_per_job(self.sp):
+            raise ValueError(
+                "StreamCascadePolicy is the shared-speedup cascade; "
+                "per-job streams replan through "
+                "StreamingSmartFillPolicy")
+        self.B = float(sp.B if B is None else B)
+        self.certificate_rtol = float(certificate_rtol)
+        self.coarse = int(coarse)
+        self.descent_iters = int(descent_iters)
+        self.cap_iters = int(cap_iters)
+        self.stol_rel = stol_rel
+        self.search_steps = search_steps
+        self._fast = _fast_ok(self.sp)
+        if ladder is None:
+            from repro.robust.degrade import DegradingPolicy
+            ladder = DegradingPolicy.ladder(self.sp, B=self.B)
+        self.ladder = ladder
+        self.reset()
+
+    def reset(self) -> None:
+        self.warm: WarmStart | None = None
+        self.warm_replans = 0
+        self.cold_replans = 0
+        self.order_searches = 0
+
+    def release(self, slots) -> None:
+        """No carried order — nothing to forget on slot recycling."""
+
+    def plan(self, rem, w, active=None, B=None) -> StreamPlan:
+        rem = np.asarray(rem, float)
+        w = np.asarray(w, float)
+        M = rem.shape[0]
+        act = (np.ones(M, bool) if active is None
+               else np.asarray(active, bool))
+        Bv = float(self.B if B is None else B)
+        dtype = jnp.result_type(float)
+        if self.warm is None or self.warm.lam.shape != (M,):
+            self.warm = stream_warm0(M, dtype)
+        steps = (4 * M if self.search_steps is None
+                 else int(self.search_steps))
+        order, table, m_, certified, searched, J, J_lin, warm2 = (
+            _cascade_call(self.sp, self.ladder, jnp.asarray(rem, dtype),
+                          jnp.asarray(w, dtype), jnp.asarray(act),
+                          Bv, self.B, self.warm, self.certificate_rtol,
+                          fast=self._fast, coarse=self.coarse,
+                          descent_iters=self.descent_iters,
+                          cap_iters=self.cap_iters,
+                          stol_rel=self.stol_rel, search_steps=steps))
+        self.warm = WarmStart(lam=warm2.lam, bracket=warm2.bracket)
+        m = int(m_)
+        cert = bool(certified)
+        sd = bool(searched)
+        self.warm_replans += int(cert and not sd)
+        self.cold_replans += int(sd or not cert)
+        self.order_searches += int(sd)
+        return StreamPlan(order=np.asarray(order, np.int64)[:m],
+                          table=table, J=float(J), J_linear=float(J_lin),
+                          m=m, B=Bv, warm=cert and not sd,
+                          certified=cert)
 
     def __call__(self, rem, w, active, B=None):
         """Host-policy adapter: the current-phase allocation column."""

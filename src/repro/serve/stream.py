@@ -60,18 +60,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.smartfill import _fast_ok
 from repro.core.speedup import Speedup, collapse_homogeneous, is_per_job
 from repro.core.workloads import ArrivalStream
 from repro.robust.degrade import DegradingPolicy, ladder_plan_table
-from repro.sched.policies import StreamingSmartFillPolicy, StreamPlan
+from repro.sched.policies import (StreamCascadePolicy,
+                                  StreamingSmartFillPolicy, StreamPlan,
+                                  stream_replan_core, stream_warm0)
 
 __all__ = ["StreamMetrics", "StreamResult", "PlanBuffer",
-           "StreamController"]
+           "StreamController", "StreamCascadePolicy"]
 
 
 # ---------------------------------------------------------------------------
 # Window executor: one jitted scan per arrival window
 # ---------------------------------------------------------------------------
+
+def _rate_floor(dtype):
+    """Smallest admissible completion-rate denominator for ``dtype``.
+
+    The old literal floor ``1e-300`` is fine under f64 but *flushes to
+    zero* when cast to f32 (``np.float32(1e-300) == 0.0``), leaving the
+    division unprotected exactly where it matters: a live row whose
+    rate lands in the f32 denormal range (or is flushed to 0 on
+    flush-to-zero accelerator hardware) divides by a denormal/zero and
+    the step width goes inf.  Same shape as the PR-3 ``_mu_floor`` fix:
+    tiny/eps is the smallest *normal*-scaled floor (≈9.9e-32 f32,
+    ≈1e-292 f64), far below any physical rate, so dt stays finite
+    without perturbing healthy windows.
+    """
+    fi = jnp.finfo(dtype)
+    return jnp.asarray(fi.tiny, dtype) / jnp.asarray(fi.eps, dtype)
+
 
 @jax.jit
 def _exec_window(sp, table, rem0, live0, span, rtol):
@@ -108,8 +128,8 @@ def _exec_window(sp, table, rem0, live0, span, rtol):
         rank = jnp.clip(jnp.cumsum(live) - 1, 0, M - 1)
         th = jnp.where(live, jnp.take(colm, rank), 0.0)
         rate = jnp.where(live, sp.s(th), 0.0)
-        dt = jnp.where(live & (rate > 0), rem / jnp.maximum(rate, 1e-300),
-                       inf)
+        dt = jnp.where(live & (rate > 0),
+                       rem / jnp.maximum(rate, _rate_floor(dtype)), inf)
         h = jnp.minimum(jnp.min(dt), left)
         h = jnp.maximum(h, 0.0)
         rem2 = jnp.where(live, jnp.maximum(rem - rate * h, 0.0), rem)
@@ -445,7 +465,22 @@ class StreamController:
                 replans += r
             t_prev = t_ev
 
-        # -- metrics ------------------------------------------------------
+        return self._finalize(stream, completion, admitted,
+                              replans=replans,
+                              warm_replans=self.policy.warm_replans,
+                              cold_replans=self.policy.cold_replans,
+                              degraded=degraded, n_windows=n_windows)
+
+    def _finalize(self, stream, completion, admitted, *, replans,
+                  warm_replans, cold_replans, degraded,
+                  n_windows) -> StreamResult:
+        """SLO metrics from a completion array — shared verbatim by the
+        host loop and the device scan so the two paths are compared on
+        identical formulas."""
+        N = len(stream)
+        x_all = np.asarray(stream.x, float)
+        w_all = np.asarray(stream.w, float)
+        t_all = np.asarray(stream.t, float)
         lat = completion - t_all
         solo = x_all / max(float(self.sp.s(jnp.asarray(self.B))), 1e-300)
         slow = lat / np.maximum(solo, 1e-300)
@@ -470,6 +505,330 @@ class StreamController:
         return StreamResult(
             metrics=metrics, completion=completion, latency=lat,
             slowdown=slow, admitted=admitted, replans=replans,
-            warm_replans=self.policy.warm_replans,
-            cold_replans=self.policy.cold_replans,
+            warm_replans=warm_replans, cold_replans=cold_replans,
             degraded_windows=degraded, n_events=n_windows)
+
+    def run_device(self, stream: ArrivalStream, *,
+                   chunk_events: int | None = None) -> StreamResult:
+        """Service the whole trace on device: one ``lax.scan`` over
+        control-plane events instead of one host round-trip per window.
+
+        Same contract as ``run`` modulo the replanning policy: the
+        device path replans through the traced ``stream_replan_core``
+        cascade (fresh hinted solve → certificate → exchange search →
+        ladder, all real ``lax.cond`` branches), with the ``WarmStart``
+        λ/bracket payload, the ``PlanBuffer`` front/back pair, the FIFO
+        queue and the slot state all living in the scan carry — the
+        host syncs once per ``chunk_events`` chunk (default: once for
+        the whole trace).  ``StreamController.run`` with a
+        ``StreamCascadePolicy`` makes the *same* decisions through the
+        host loop and is this path's differential oracle.
+
+        Admission must be None (device arrivals are all admitted) —
+        scoring arrivals against the live set is host control-plane
+        logic that has no traced form here.  Cascade knobs (certificate
+        rtol, solver sizes, search budget) are read off ``self.policy``
+        when present so an oracle/device pair is configured once.
+        """
+        if self.admission is not None:
+            raise ValueError(
+                "run_device supports admission=None only; scored "
+                "admission stays on the host loop")
+        N = len(stream)
+        M = self.M
+        dtype = jnp.result_type(float)
+        p = self.policy
+        knobs = dict(
+            cert_rtol=float(getattr(p, "certificate_rtol", 1e-8)),
+            coarse=int(getattr(p, "coarse", 32)),
+            descent_iters=int(getattr(p, "descent_iters", 40)),
+            cap_iters=int(getattr(p, "cap_iters", 64)),
+            stol_rel=getattr(p, "stol_rel", None),
+            search_steps=(4 * M
+                          if getattr(p, "search_steps", None) is None
+                          else int(p.search_steps)),
+            fast=_fast_ok(self.sp),
+        )
+        t_e, kind, pi, pf = _event_arrays(stream)
+        E = t_e.size
+        W = E if chunk_events is None else max(int(chunk_events), 1)
+        n_chunks = -(-E // W)
+        pad = n_chunks * W - E
+        if pad:
+            t_e = np.concatenate([t_e, np.zeros(pad)])
+            kind = np.concatenate([kind, np.zeros(pad, np.int32)])
+            pi = np.concatenate([pi, np.zeros(pad, np.int32)])
+            pf = np.concatenate([pf, np.zeros(pad)])
+        x_all = jnp.asarray(np.asarray(stream.x, float), dtype)
+        w_all = jnp.asarray(np.asarray(stream.w, float), dtype)
+        state = _stream_state0(M, N, self.B, dtype)
+        for c in range(n_chunks):
+            ev = tuple(jnp.asarray(a[c * W:(c + 1) * W])
+                       for a in (t_e, kind, pi, pf))
+            state = _stream_chunk(
+                self.sp, self.ladder, state, ev, x_all, w_all,
+                jnp.asarray(self.B, dtype),
+                jnp.asarray(self.plan_latency, dtype),
+                jnp.asarray(self.rtol, dtype),
+                jnp.asarray(knobs["cert_rtol"], dtype),
+                fast=knobs["fast"], coarse=knobs["coarse"],
+                descent_iters=knobs["descent_iters"],
+                cap_iters=knobs["cap_iters"],
+                stol_rel=knobs["stol_rel"],
+                search_steps=knobs["search_steps"])
+        completion = np.asarray(state["completion"][:N], float)
+        admitted = np.ones(N, bool)
+        return self._finalize(
+            stream, completion, admitted,
+            replans=int(state["replans"]),
+            warm_replans=int(state["warm_ct"]),
+            cold_replans=int(state["cold_ct"]),
+            degraded=int(state["degraded"]),
+            n_windows=int(state["n_windows"]))
+
+
+# ---------------------------------------------------------------------------
+# Device-resident event scan
+# ---------------------------------------------------------------------------
+#
+# The host loop above is the differential oracle; everything below is
+# the same control plane as pure traced code.  Event kinds are encoded
+# so an all-zero row is *inert* — the fleet driver's padding contract
+# (distributed/fleet.py) then works unchanged for padded tenants:
+#
+#   0 = pad (no-op), 1 = arrival (pi = job index), 2 = budget step
+#   (pf = new budget), 3 = end of trace.
+#
+# One scan step = one control-plane event: execute up to the event on
+# the front plan (splitting windows where a back-buffered plan comes
+# ready and at completions while jobs are queued — the
+# cut_at_first_completion backfill, lowered into the scan as a
+# lax.cond around a re-run of the same `_exec_window` scan the host
+# calls), then apply the event and replan through the traced cascade.
+
+def _event_arrays(stream: ArrivalStream):
+    """Merged device event arrays, ordered exactly like the host loop
+    (time-stable, arrivals before budget steps at ties, end last)."""
+    N = len(stream)
+    t_all = np.asarray(stream.t, float)
+    ev = [(float(t_all[j]), 0, j, 0.0) for j in range(N)]
+    ev += [(float(bt), 1, 0, float(bv)) for bt, bv in
+           zip(stream.budget_times, stream.budget_values)]
+    ev.sort(key=lambda e: (e[0], e[1]))
+    t_e = np.array([e[0] for e in ev] + [float(stream.horizon)], float)
+    kind = np.array([1 if e[1] == 0 else 2 for e in ev] + [3], np.int32)
+    pi = np.array([e[2] for e in ev] + [0], np.int32)
+    pf = np.array([e[3] for e in ev] + [0.0], float)
+    return t_e, kind, pi, pf
+
+
+def _stream_state0(M: int, N: int, B: float, dtype) -> dict:
+    """Initial scan carry: empty slots, no plans, cold warm payload."""
+    n = max(N, 1)
+    i32 = jnp.int32
+    return {
+        "t": jnp.zeros((), dtype),
+        "rem": jnp.zeros((M,), dtype),
+        "wslot": jnp.zeros((M,), dtype),
+        "active": jnp.zeros((M,), bool),
+        "jos": jnp.full((M,), -1, i32),
+        "B_live": jnp.asarray(B, dtype),
+        "order": jnp.arange(M, dtype=i32),
+        "table": jnp.zeros((M, M), dtype),
+        "m_front": jnp.zeros((), i32),
+        "has_front": jnp.zeros((), bool),
+        "border": jnp.arange(M, dtype=i32),
+        "btable": jnp.zeros((M, M), dtype),
+        "m_back": jnp.zeros((), i32),
+        "bready": jnp.asarray(-jnp.inf, dtype),
+        "has_back": jnp.zeros((), bool),
+        "qbuf": jnp.zeros((n,), i32),
+        "qhead": jnp.zeros((), i32),
+        "qtail": jnp.zeros((), i32),
+        "completion": jnp.full((n,), jnp.inf, dtype),
+        "warm": stream_warm0(M, dtype),
+        "n_windows": jnp.zeros((), i32),
+        "replans": jnp.zeros((), i32),
+        "degraded": jnp.zeros((), i32),
+        "warm_ct": jnp.zeros((), i32),
+        "cold_ct": jnp.zeros((), i32),
+        "searches": jnp.zeros((), i32),
+    }
+
+
+def _promote(s: dict, now) -> dict:
+    """PlanBuffer.poll as traced state: back → front once ready."""
+    s = dict(s)
+    go = s["has_back"] & (now >= s["bready"])
+    s["order"] = jnp.where(go, s["border"], s["order"])
+    s["table"] = jnp.where(go, s["btable"], s["table"])
+    s["m_front"] = jnp.where(go, s["m_back"], s["m_front"])
+    s["has_front"] = s["has_front"] | go
+    s["has_back"] = s["has_back"] & ~go
+    return s
+
+
+def _fill_slots(s: dict, x_all, w_all) -> dict:
+    """Queued jobs into free slots, FIFO, lowest slot first — the
+    host loop's fill_free_slots as a while_loop."""
+    def pending(st):
+        return (st["qtail"] > st["qhead"]) & ~jnp.all(st["active"])
+
+    def land(st):
+        st = dict(st)
+        j = st["qbuf"][st["qhead"]]
+        slot = jnp.argmin(st["active"])        # first free slot
+        st["rem"] = st["rem"].at[slot].set(x_all[j])
+        st["wslot"] = st["wslot"].at[slot].set(w_all[j])
+        st["active"] = st["active"].at[slot].set(True)
+        st["jos"] = st["jos"].at[slot].set(j)
+        st["qhead"] = st["qhead"] + 1
+        return st
+
+    return jax.lax.while_loop(pending, land, s)
+
+
+def _replan_dev(s: dict, t_now, sp, ladder, B_key, plan_latency,
+                cert_rtol, knobs) -> dict:
+    """Traced _replan: cascade solve, publish to the back buffer
+    (certified plans behind the solve latency, the ladder instantly)."""
+    s = dict(s)
+    order, table, m, certified, searched, _, _, warm2 = (
+        stream_replan_core(sp, ladder, s["rem"], s["wslot"], s["active"],
+                           s["B_live"], B_key, s["warm"], cert_rtol,
+                           **knobs))
+    s["border"] = order
+    s["btable"] = table
+    s["m_back"] = m
+    s["bready"] = jnp.where(certified, t_now + plan_latency,
+                            -jnp.inf).astype(s["bready"].dtype)
+    s["has_back"] = jnp.ones((), bool)
+    s["warm"] = warm2
+    one = jnp.ones((), s["replans"].dtype)
+    zero = jnp.zeros((), s["replans"].dtype)
+    s["replans"] = s["replans"] + one
+    s["degraded"] = s["degraded"] + jnp.where(certified, zero, one)
+    s["warm_ct"] = s["warm_ct"] + jnp.where(certified & ~searched,
+                                            one, zero)
+    s["cold_ct"] = s["cold_ct"] + jnp.where(searched | ~certified,
+                                            one, zero)
+    s["searches"] = s["searches"] + jnp.where(searched, one, zero)
+    return s
+
+
+def _exec_until(s: dict, t_ev, sp, ladder, x_all, w_all, B_key,
+                plan_latency, rtol, cert_rtol, knobs) -> dict:
+    """Execute up to ``t_ev`` on the front plan — the host loop's inner
+    ``while t_cur < t_ev`` with its two window splits: (a) where a
+    back-buffered plan comes ready, (b) at the first completion while
+    jobs are queued (backfill + replan at the completion time)."""
+    M = s["rem"].shape[0]
+    N = s["completion"].shape[0]
+    idx = jnp.arange(M)
+
+    def behind(st):
+        return st["t"] < t_ev
+
+    def window(st):
+        st = _promote(st, st["t"])
+        t0 = st["t"]
+        t_stop = jnp.where(st["has_back"] & (st["bready"] < t_ev),
+                           st["bready"], t_ev)
+        run = st["has_front"] & jnp.any(st["active"])
+        rows = st["order"]
+        cov = idx < st["m_front"]
+        rem_rows = jnp.where(cov, st["rem"][rows], 0.0)
+        live0 = cov & st["active"][rows] & (rem_rows > 0) & run
+        queued = st["qtail"] > st["qhead"]
+        rem_e, live_e, comp = _exec_window(
+            sp, st["table"], rem_rows, live0, t_stop - t0, rtol)
+        # cut_at_first_completion, exactly the host algorithm: if jobs
+        # are queued and the first completion lands strictly inside the
+        # window, re-run the same scan on the shorter span (bitwise the
+        # host's second _exec_window call, inlined instead of
+        # re-dispatched)
+        c0 = jnp.min(jnp.where(jnp.isfinite(comp), comp, jnp.inf))
+        do_cut = queued & jnp.isfinite(c0) & (t0 + c0 < t_stop)
+        rem_e, live_e, comp = jax.lax.cond(
+            do_cut,
+            lambda _: _exec_window(sp, st["table"], rem_rows, live0,
+                                   c0, rtol),
+            lambda _: (rem_e, live_e, comp), None)
+        t_end = jnp.where(do_cut, t0 + c0, t_stop)
+        # scatter the window result back to slot coords and retire
+        newly = live0 & ~live_e
+        jobs_r = st["jos"][rows]
+        st = dict(st)
+        st["rem"] = st["rem"].at[rows].set(
+            jnp.where(live0, rem_e, st["rem"][rows]))
+        cjob = jnp.where(newly, jobs_r, N)     # sentinel → dropped
+        st["completion"] = st["completion"].at[cjob].set(
+            t0 + comp, mode="drop")
+        st["active"] = st["active"].at[rows].set(
+            jnp.where(newly, False, st["active"][rows]))
+        st["jos"] = st["jos"].at[rows].set(
+            jnp.where(newly, -1, jobs_r))
+        st["n_windows"] = st["n_windows"] + run.astype(
+            st["n_windows"].dtype)
+        st["t"] = t_end
+        # backfill freed slots and replan at the cut time (the host's
+        # "if t_end < t_stop and fill_free_slots()" branch)
+        refill = do_cut & jnp.any(newly) & queued
+        st = jax.lax.cond(
+            refill,
+            lambda u: _replan_dev(_fill_slots(u, x_all, w_all), t_end,
+                                  sp, ladder, B_key, plan_latency,
+                                  cert_rtol, knobs),
+            lambda u: u, st)
+        return st
+
+    return jax.lax.while_loop(behind, window, s)
+
+
+def _stream_event(s: dict, ev, sp, ladder, x_all, w_all, B_key,
+                  plan_latency, rtol, cert_rtol, knobs) -> dict:
+    """One control-plane event: execute-up-to, apply, replan."""
+    t_ev, kind, pi, pf = ev
+    live_ev = kind > 0
+    s = _exec_until(s, jnp.where(live_ev, t_ev, s["t"]), sp, ladder,
+                    x_all, w_all, B_key, plan_latency, rtol, cert_rtol,
+                    knobs)
+    s = jax.lax.cond(live_ev, lambda u: _promote(u, t_ev),
+                     lambda u: dict(u), s)
+    s = jax.lax.cond(live_ev, lambda u: _fill_slots(u, x_all, w_all),
+                     lambda u: u, s)
+
+    def arrive(u):
+        u = dict(u)
+        u["qbuf"] = u["qbuf"].at[u["qtail"]].set(pi)
+        u["qtail"] = u["qtail"] + 1
+        return _fill_slots(u, x_all, w_all)
+
+    s = jax.lax.cond(kind == 1, arrive, lambda u: u, s)
+    s = dict(s)
+    s["B_live"] = jnp.where(kind == 2, pf, s["B_live"])
+    s = jax.lax.cond(
+        (kind == 1) | (kind == 2),
+        lambda u: _replan_dev(u, t_ev, sp, ladder, B_key, plan_latency,
+                              cert_rtol, knobs),
+        lambda u: u, s)
+    return s
+
+
+@partial(jax.jit, static_argnames=("fast", "coarse", "descent_iters",
+                                   "cap_iters", "stol_rel",
+                                   "search_steps"))
+def _stream_chunk(sp, ladder, state, events, x_all, w_all, B_key,
+                  plan_latency, rtol, cert_rtol, *, fast, coarse,
+                  descent_iters, cap_iters, stol_rel, search_steps):
+    """One compiled dispatch servicing a chunk of events via lax.scan."""
+    knobs = dict(fast=fast, coarse=coarse, descent_iters=descent_iters,
+                 cap_iters=cap_iters, stol_rel=stol_rel,
+                 search_steps=search_steps)
+
+    def step(s, ev):
+        return _stream_event(s, ev, sp, ladder, x_all, w_all, B_key,
+                             plan_latency, rtol, cert_rtol, knobs), None
+
+    state, _ = jax.lax.scan(step, state, events)
+    return state

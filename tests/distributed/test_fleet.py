@@ -309,3 +309,87 @@ def test_ensemble_parity_faulted():
     sh1 = simulate_ensemble_sharded(sp, pols, X, W, faults=bt,
                                     mesh=fleet_mesh())
     np.testing.assert_array_equal(np.asarray(sh1.J), np.asarray(ref1.J))
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant streaming service
+# ---------------------------------------------------------------------------
+
+def _tenant_streams(seeds, horizon=900.0, rate=0.2, **kw):
+    from repro.core import sample_arrival_stream
+
+    return [sample_arrival_stream(s, horizon=horizon, rate=rate,
+                                  diurnal=0.75, period=horizon, B=B,
+                                  n_budget_events=2,
+                                  budget_frac=(0.3, 0.8), **kw)
+            for s in seeds]
+
+
+def test_serve_streams_sharded_matches_solo_run_device():
+    """Tenant i through the sharded fleet == tenant i solo through
+    ``run_device`` — bitwise, including replan counters, under
+    per-tenant budgets and a nonzero plan latency.  T=3 deliberately
+    does not divide the 8-way CI mesh, so padded inert tenants ride
+    along (the kind-0 event encoding makes an all-zero row a no-op)."""
+    from repro.core import power
+    from repro.distributed import serve_streams_sharded
+    from repro.serve import StreamCascadePolicy, StreamController
+
+    sp = power(1.0, 0.5, B)
+    streams = _tenant_streams((3, 7, 11), weights="random")
+    budgets = [10.0, 8.0, 12.0]
+    fleet = serve_streams_sharded(sp, streams, budgets=budgets,
+                                  max_live=5, plan_latency=1.0,
+                                  mesh=fleet_mesh())
+    assert len(fleet) == 3
+    for i, strm in enumerate(streams):
+        ctl = StreamController(sp, budgets[i], max_live=5,
+                               policy=StreamCascadePolicy(sp, budgets[i]),
+                               plan_latency=1.0)
+        solo = ctl.run_device(strm)
+        got = fleet.results[i]
+        np.testing.assert_array_equal(got.completion, solo.completion)
+        assert got.replans == solo.replans
+        assert got.warm_replans == solo.warm_replans
+        assert got.cold_replans == solo.cold_replans
+        assert got.degraded_windows == solo.degraded_windows
+        assert got.metrics == solo.metrics
+
+
+def test_serve_streams_sharded_admission_view():
+    """The cross-tenant view: an overloaded starved tenant carries the
+    backlog and is advised the larger share of the next budget round."""
+    from repro.core import power
+    from repro.distributed import serve_streams_sharded
+
+    sp = power(1.0, 0.5, B)
+    light, heavy = _tenant_streams((5, 6), horizon=600.0, rate=0.05), \
+        _tenant_streams((8,), horizon=600.0, rate=1.5)
+    fleet = serve_streams_sharded(sp, light + heavy,
+                                  budgets=[B, B, 0.5], max_live=4,
+                                  mesh=fleet_mesh())
+    share = fleet.suggested_budget_share
+    np.testing.assert_allclose(share.sum(), 1.0)
+    assert fleet.backlog[2] > 0                 # starved tenant backed up
+    assert share[2] == share.max()
+    assert fleet.unfinished_work[2] > fleet.unfinished_work[:2].max()
+    assert fleet.mean_slowdown.shape == (3,)
+    assert fleet.deadline_misses.shape == (3,)
+
+
+def test_serve_streams_sharded_validates():
+    from repro.core import power, sample_workloads
+    from repro.distributed import serve_streams_sharded
+
+    sp = power(1.0, 0.5, B)
+    streams = _tenant_streams((1,))
+    with pytest.raises(ValueError, match="tenant"):
+        serve_streams_sharded(sp, [], mesh=fleet_mesh())
+    with pytest.raises(ValueError, match="budget"):
+        serve_streams_sharded(sp, streams, budgets=[B, B],
+                              mesh=fleet_mesh())
+    wl = sample_workloads(0, K=2, M=4, B=B, per_job=True,
+                          family=("power", "log"))
+    sp_pj = jax.tree_util.tree_map(lambda l: jnp.asarray(l)[0], wl.sp)
+    with pytest.raises(ValueError, match="shared scalar-leaf"):
+        serve_streams_sharded(sp_pj, streams, mesh=fleet_mesh())

@@ -1,0 +1,316 @@
+"""Device-resident streaming hot path: device scan == host oracle.
+
+The contract of ``StreamController.run_device`` is *bit-parity* with
+the host loop running the same ``StreamCascadePolicy`` — the host loop
+is kept precisely to be this differential oracle.  Every stage of the
+traced replan cascade (fresh hinted solve → certificate → adjacent-
+exchange search → ladder) and every window mechanic (double-buffer
+promotion mid-window, cut-at-first-completion backfill, FIFO queueing,
+budget events) must make the same decision and produce the same floats
+through ``lax.scan`` as through the Python loop.
+
+Also here: the dtype-aware ``_rate_floor`` regression (the f32 hazard
+of the old ``1e-300`` literal), ``PlanBuffer.poll`` at exactly
+``ready_at``, ``StreamingSmartFillPolicy.release`` with slots absent
+from the carried order, and the arrival-log replay constructors.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import power, sample_arrival_stream
+from repro.core.workloads import (ArrivalStream, arrival_stream_from_log,
+                                  load_arrival_log)
+from repro.sched.policies import StreamingSmartFillPolicy
+from repro.serve import PlanBuffer, StreamCascadePolicy, StreamController
+from repro.serve.stream import _exec_window, _rate_floor
+
+B = 10.0
+SP = power(1.0, 0.5, B)
+
+
+def _pair(seed, horizon, M, *, rate=0.1, weights="slowdown",
+          plan_latency=0.0, n_budget_events=2, B_t=B):
+    stream = sample_arrival_stream(
+        seed, horizon=horizon, rate=rate, diurnal=0.75, period=horizon,
+        weights=weights, B=B_t, n_budget_events=n_budget_events,
+        budget_frac=(0.3, 0.8))
+    ctl = StreamController(SP, B_t, max_live=M,
+                           policy=StreamCascadePolicy(SP, B_t),
+                           plan_latency=plan_latency)
+    return stream, ctl
+
+
+def _assert_parity(host, dev):
+    np.testing.assert_array_equal(np.isfinite(host.completion),
+                                  np.isfinite(dev.completion))
+    fin = np.isfinite(host.completion)
+    # bitwise: the device scan runs the same jitted kernels on the same
+    # floats in the same sequence — any drift means a decision diverged
+    np.testing.assert_array_equal(host.completion[fin],
+                                  dev.completion[fin])
+    assert host.replans == dev.replans
+    assert host.warm_replans == dev.warm_replans
+    assert host.cold_replans == dev.cold_replans
+    assert host.degraded_windows == dev.degraded_windows
+    assert host.n_events == dev.n_events
+    assert host.metrics == dev.metrics
+
+
+@pytest.mark.parametrize("seed,M,latency,weights,rate", [
+    (3, 6, 0.0, "slowdown", 0.15),     # warm cascade only
+    (11, 5, 2.0, "slowdown", 0.12),    # double-buffered mid-window splits
+    (5, 6, 0.0, "random", 0.25),       # non-agreeable: search branch fires
+])
+def test_device_matches_host_oracle(seed, M, latency, weights, rate):
+    stream, ctl = _pair(seed, 1200.0, M, rate=rate, weights=weights,
+                        plan_latency=latency)
+    host = ctl.run(stream)
+    dev = ctl.run_device(stream)
+    _assert_parity(host, dev)
+
+
+def test_device_search_branch_exercised_and_identical():
+    # random weights break the agreeable structure, so the fresh SJF
+    # order fails the certificate and the traced exchange search must
+    # rescue it — on both paths, identically
+    stream, ctl = _pair(9, 2400.0, 8, rate=0.35, weights="random")
+    host = ctl.run(stream)
+    dev = ctl.run_device(stream)
+    assert host.cold_replans > 0          # the branch actually fired
+    assert ctl.policy.order_searches > 0
+    _assert_parity(host, dev)
+
+
+def test_device_chunked_equals_single_dispatch():
+    # chunk_events splits the trace into several compiled dispatches
+    # with the carry handed across — the seam must be invisible
+    stream, ctl = _pair(7, 1500.0, 4, rate=0.2)
+    whole = ctl.run_device(stream)
+    chunked = ctl.run_device(stream, chunk_events=17)
+    np.testing.assert_array_equal(whole.completion, chunked.completion)
+    assert whole.replans == chunked.replans
+    assert whole.n_events == chunked.n_events
+
+
+def test_device_rejects_scored_admission():
+    from repro.serve.admission import AdmissionController
+    stream, _ = _pair(3, 600.0, 4)
+    ctl = StreamController(SP, B, max_live=4,
+                           admission=AdmissionController(
+                               SP, B=B, agreeable="rank"))
+    with pytest.raises(ValueError, match="admission"):
+        ctl.run_device(stream)
+
+
+@pytest.mark.slow
+def test_device_day_trace_parity():
+    # the acceptance trace: a full diurnal day with budget dips — all
+    # four cascade stages fire (warm, search-rescued, ladder) and the
+    # device scan must still be bit-identical to the oracle
+    stream, ctl = _pair(17, 86_400.0, 16, rate=0.12,
+                        n_budget_events=12)
+    host = ctl.run(stream)
+    dev = ctl.run_device(stream)
+    assert host.cold_replans > 0 and host.degraded_windows > 0
+    _assert_parity(host, dev)
+
+
+# ---------------------------------------------------------------------------
+# dtype-aware rate floor (the f32 1e-300 flush-to-zero regression)
+# ---------------------------------------------------------------------------
+
+def test_rate_floor_is_normal_in_both_dtypes():
+    # the old literal floor is *zero* in f32 — exactly the unprotected
+    # division the floor exists to prevent
+    assert np.float32(1e-300) == 0.0
+    for dt in (jnp.float32, jnp.float64):
+        floor = float(_rate_floor(dt))
+        assert floor > 0.0
+        assert floor >= float(jnp.finfo(dt).tiny)   # normal, not denormal
+    assert float(_rate_floor(jnp.float64)) < 1e-290
+
+
+def test_f32_denormal_rate_division_is_protected():
+    # the division guard itself: a denormal f32 rate (> 0, so the
+    # rate-is-zero mask does not catch it) divides UNprotected under
+    # the old literal floor — 1e-300 flushes to 0.0 in f32 and
+    # maximum(rate, 0) is a no-op — and rem/rate overflows to inf;
+    # the dtype-aware floor keeps the step width finite
+    one = jnp.asarray(1.0, jnp.float32)
+    rate = jnp.asarray(1e-40, jnp.float32)            # denormal, > 0
+    assert float(rate) > 0.0
+    old_floor = jnp.asarray(1e-300, jnp.float32)      # == 0.0: no guard
+    assert float(old_floor) == 0.0
+    assert not np.isfinite(float(one / jnp.maximum(rate, old_floor)))
+    guarded = one / jnp.maximum(rate, _rate_floor(jnp.float32))
+    assert np.isfinite(float(guarded))
+
+
+def test_exec_window_f32_stays_in_dtype_and_completes():
+    # end-to-end f32 window: the floored division must not promote the
+    # carry to f64 (a dtype mismatch aborts the scan) and a healthy
+    # window completes with finite f32 outputs
+    import jax
+    dt = jnp.float32
+    sp32 = jax.tree_util.tree_map(lambda l: jnp.asarray(l, dt), SP)
+    table = jnp.asarray([[4.0, 4.0],
+                         [0.0, 4.0]], dt)
+    rem0 = jnp.asarray([1.0, 2.0], dt)
+    live0 = jnp.asarray([True, True])
+    rem, live, comp = _exec_window(sp32, table, rem0, live0,
+                                   jnp.asarray(100.0, dt),
+                                   jnp.asarray(1e-6, dt))
+    assert rem.dtype == dt and comp.dtype == dt
+    assert np.all(np.isfinite(np.asarray(rem)))
+    assert np.isfinite(float(comp[0])) and np.isfinite(float(comp[1]))
+    assert not np.any(np.asarray(live))
+
+
+# ---------------------------------------------------------------------------
+# PlanBuffer.poll at exactly ready_at
+# ---------------------------------------------------------------------------
+
+def _plan(tag):
+    from repro.sched.policies import StreamPlan
+    return StreamPlan(order=np.arange(2), table=np.full((2, 2), float(tag)),
+                      J=float(tag), J_linear=float(tag), m=2, B=B,
+                      warm=False, certified=True)
+
+
+def test_plan_buffer_promotes_at_exact_ready_time():
+    # now == ready_at must promote (the device scan's `now >= bready`
+    # and the host's `now >= back[0]` agree on the closed boundary);
+    # the instant-publish ladder case (-inf) promotes at any clock
+    buf = PlanBuffer()
+    p = _plan(1)
+    buf.publish(p, ready_at=5.0)
+    assert buf.poll(np.nextafter(5.0, -np.inf)) is None
+    assert buf.poll(5.0) is p                    # closed boundary
+    assert buf.swaps == 1
+    q = _plan(2)
+    buf.publish(q)                               # default -inf: instant
+    assert buf.poll(-1e30) is q
+    # re-publish before promotion: latest wins, the stale back plan is
+    # never promoted
+    r, s = _plan(3), _plan(4)
+    buf.publish(r, ready_at=8.0)
+    buf.publish(s, ready_at=9.0)
+    assert buf.poll(8.5) is q                    # r was overwritten
+    assert buf.poll(9.0) is s
+
+
+# ---------------------------------------------------------------------------
+# StreamingSmartFillPolicy.release with slots absent from the order
+# ---------------------------------------------------------------------------
+
+def test_release_with_absent_slots_is_harmless():
+    pol = StreamingSmartFillPolicy(SP, B)
+    rem = np.array([9.0, 4.0, 2.0])
+    w = 1.0 / rem
+    act = np.ones(3, bool)
+    pol.plan(rem, w, act)
+    carried = pol._order.copy()
+    # slots the carried order has never seen (beyond M, or already
+    # released twice) must be ignored, not corrupt the order
+    pol.release([7, 12])
+    np.testing.assert_array_equal(pol._order, carried)
+    pol.release([1])
+    pol.release([1, 5])                          # double release: no-op
+    np.testing.assert_array_equal(pol._order,
+                                  carried[carried != 1])
+    # and the next plan still certifies warm from the pruned order
+    rem2 = np.array([8.0, 3.0, 1.5])
+    p2 = pol.plan(rem2, w, act)
+    assert p2.warm and p2.certified
+
+
+def test_release_on_empty_order_is_noop():
+    pol = StreamingSmartFillPolicy(SP, B)
+    pol.release([0, 1])                          # before any plan
+    assert pol._order.size == 0
+
+
+# ---------------------------------------------------------------------------
+# Arrival-log replay (from_log + load_arrival_log)
+# ---------------------------------------------------------------------------
+
+def test_from_log_sorts_and_defaults():
+    st = arrival_stream_from_log([3.0, 1.0, 2.0], [2.0, 4.0, 1.0])
+    np.testing.assert_array_equal(st.t, [1.0, 2.0, 3.0])
+    np.testing.assert_array_equal(st.x, [4.0, 1.0, 2.0])
+    np.testing.assert_allclose(st.w, 1.0 / st.x)     # slowdown default
+    assert np.all(np.isinf(st.deadline))
+    assert st.horizon > 3.0                          # last event inside
+    assert len(st) == 3
+    # the sampler advertises the replay entry point
+    assert sample_arrival_stream.from_log is arrival_stream_from_log
+
+
+def test_from_log_validates():
+    with pytest.raises(ValueError, match="positive"):
+        arrival_stream_from_log([0.0], [0.0])
+    with pytest.raises(ValueError, match="length"):
+        arrival_stream_from_log([0.0, 1.0], [1.0])
+    with pytest.raises(ValueError, match="strictly before"):
+        arrival_stream_from_log([5.0], [1.0], horizon=5.0)
+    with pytest.raises(ValueError, match="budget"):
+        arrival_stream_from_log([0.0], [1.0], budget_times=[1.0],
+                                budget_values=[])
+
+
+def test_load_arrival_log_csv_roundtrip(tmp_path):
+    path = tmp_path / "trace.csv"
+    path.write_text("# budget 4.0 6.5\n"
+                    "t,x,w,deadline\n"
+                    "0.5,2.0,0.5,inf\n"
+                    "1.5,1.0,1.0,9.0\n")
+    st = load_arrival_log(path)
+    np.testing.assert_array_equal(st.t, [0.5, 1.5])
+    np.testing.assert_array_equal(st.w, [0.5, 1.0])
+    np.testing.assert_array_equal(st.deadline, [np.inf, 9.0])
+    np.testing.assert_array_equal(st.budget_times, [4.0])
+    np.testing.assert_array_equal(st.budget_values, [6.5])
+
+
+def test_load_arrival_log_json(tmp_path):
+    path = tmp_path / "trace.json"
+    path.write_text(json.dumps({
+        "t": [0.0, 2.0], "x": [3.0, 1.0], "horizon": 100.0,
+        "budget_times": [1.0], "budget_values": [5.0]}))
+    st = load_arrival_log(path)
+    assert st.horizon == 100.0
+    np.testing.assert_array_equal(st.budget_times, [1.0])
+    np.testing.assert_allclose(st.w, [1.0 / 3.0, 1.0])
+
+
+def test_committed_trace_replays_through_both_paths():
+    # the shipped benchmark trace must replay through the controller,
+    # and the device path must agree with the host oracle on it
+    import pathlib
+    trace = (pathlib.Path(__file__).resolve().parents[2]
+             / "benchmarks" / "traces" / "arrivals_sample.csv")
+    stream = load_arrival_log(trace)
+    assert len(stream) > 50 and stream.budget_times.size >= 2
+    ctl = StreamController(SP, B, max_live=8,
+                           policy=StreamCascadePolicy(SP, B))
+    host = ctl.run(stream)
+    dev = ctl.run_device(stream)
+    _assert_parity(host, dev)
+
+
+def test_replayed_stream_equals_original_run():
+    # record a sampled stream to the log format, replay it: the
+    # controller must produce the identical outcome
+    src = sample_arrival_stream(31, horizon=400.0, rate=0.2, B=B,
+                                n_budget_events=2, budget_frac=(0.4, 0.9))
+    replay = arrival_stream_from_log(
+        src.t, src.x, src.w, deadlines=src.deadline, horizon=src.horizon,
+        budget_times=src.budget_times, budget_values=src.budget_values)
+    ctl = StreamController(SP, B, max_live=6)
+    a, b = ctl.run(src), ctl.run(replay)
+    np.testing.assert_array_equal(a.completion, b.completion)
+    assert a.metrics == b.metrics
